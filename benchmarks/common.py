@@ -1,0 +1,58 @@
+"""Shared benchmark infrastructure: result persistence + ASCII rendering."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Any, Dict, List, Optional, Sequence
+
+OUT_DIR = os.environ.get("BENCH_OUT", os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "bench_results"))
+
+
+def save(name: str, payload: Dict[str, Any]) -> str:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, f"{name}.json")
+    payload = dict(payload)
+    payload["_bench"] = name
+    payload["_time"] = time.strftime("%Y-%m-%d %H:%M:%S")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=str)
+    return path
+
+
+def table(headers: Sequence[str], rows: Sequence[Sequence[Any]],
+          title: str = "") -> str:
+    widths = [max(len(str(h)), *(len(str(r[i])) for r in rows)) if rows
+              else len(str(h)) for i, h in enumerate(headers)]
+    fmt = "  ".join(f"{{:>{w}}}" for w in widths)
+    lines = []
+    if title:
+        lines.append(f"--- {title} ---")
+    lines.append(fmt.format(*headers))
+    lines.append("  ".join("-" * w for w in widths))
+    for r in rows:
+        lines.append(fmt.format(*[str(x) for x in r]))
+    return "\n".join(lines)
+
+
+def ascii_curve(xs: Sequence[float], ys: Sequence[float], *, width: int = 60,
+                height: int = 12, label: str = "") -> str:
+    """Minimal scatter/line rendering for terminal reports."""
+    if not xs:
+        return "(no data)"
+    xmin, xmax = min(xs), max(xs)
+    ymin, ymax = min(ys), max(ys)
+    grid = [[" "] * width for _ in range(height)]
+    for x, y in zip(xs, ys):
+        i = int((x - xmin) / (xmax - xmin + 1e-12) * (width - 1))
+        j = int((y - ymin) / (ymax - ymin + 1e-12) * (height - 1))
+        grid[height - 1 - j][i] = "*"
+    out = [f"[{label}] y:[{ymin:.3g}, {ymax:.3g}] x:[{xmin:.3g}, {xmax:.3g}]"]
+    out += ["|" + "".join(row) for row in grid]
+    return "\n".join(out)
+
+
+def fmt_bw(bw: float) -> str:
+    return f"{bw / 1e9:.0f}GB/s"

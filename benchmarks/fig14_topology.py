@@ -1,0 +1,73 @@
+"""Paper Fig 14 + 15: topology comparison at fixed per-XPU bandwidth
+(64 XPUs; Fig 15 = 4K-context scenarios).
+
+Headline: switchless torus/full-mesh beat scale-up on throughput/cost in
+ALL scenario combinations (paper band: +20.6-56.2%); scale-up keeps the
+raw-throughput lead; scale-out misses everywhere."""
+from __future__ import annotations
+
+from benchmarks.common import save, table
+from repro.configs import get_arch
+from repro.core import H100, Scenario, best_of_opts, make_cluster
+from repro.core.tco import cluster_tco
+
+TOPOS = ("scale-up", "scale-out", "torus", "fullmesh")
+SCENARIOS = [Scenario(t, c) for c in (512, 4096) for t in (15.0, 40.0, 100.0)]
+
+
+def run(verbose: bool = True, n: int = 64):
+    cfg = get_arch("deepseek-v3")
+    results = {}
+    rows = []
+    improvements = []
+    for sc in SCENARIOS:
+        per_topo = {}
+        for topo in TOPOS:
+            cl = make_cluster(topo, n, H100)
+            cost = cluster_tco(cl).per_xpu(n)
+            entry = {"cost_per_xpu": cost}
+            for opts in ("noopt", "dbo+sd"):
+                op = best_of_opts(cl, cfg, sc, opts=opts)
+                entry[opts] = {
+                    "thpt_per_xpu": (op.throughput / n) if op else 0.0,
+                    "thpt_per_cost": (op.throughput / n / cost) if op else 0.0,
+                    "batch": op.batch if op else 0}
+            per_topo[topo] = entry
+        results[sc.name] = per_topo
+        su = per_topo["scale-up"]["dbo+sd"]["thpt_per_cost"]
+        best_sw = max(per_topo["torus"]["dbo+sd"]["thpt_per_cost"],
+                      per_topo["fullmesh"]["dbo+sd"]["thpt_per_cost"])
+        imp = (best_sw / su - 1) * 100 if su else float("inf")
+        improvements.append(imp)
+        rows.append([sc.name] + [
+            f"{per_topo[t]['dbo+sd']['thpt_per_xpu']:.0f}/"
+            f"{per_topo[t]['dbo+sd']['thpt_per_cost']:.2f}"
+            for t in TOPOS] + [f"{imp:+.1f}%"])
+    out = table(["scenario"] + [f"{t} thpt/tpc" for t in TOPOS]
+                + ["best-switchless vs scale-up"],
+                rows, title=f"Fig 14/15 — topology comparison ({n} XPUs, "
+                            "DBO+SD)")
+    results["claims"] = {
+        "switchless_wins_everywhere": all(i > 0 for i in improvements),
+        "improvement_range_pct": [min(improvements), max(improvements)],
+        "paper_range_pct": [20.6, 56.2],
+        "scaleup_best_raw_throughput": all(
+            results[sc.name]["scale-up"]["dbo+sd"]["thpt_per_xpu"]
+            >= max(results[sc.name][t]["dbo+sd"]["thpt_per_xpu"]
+                   for t in ("torus", "fullmesh")) * 0.999
+            for sc in SCENARIOS),
+        "scaleout_never_best": all(
+            results[sc.name]["scale-out"]["dbo+sd"]["thpt_per_cost"]
+            <= max(results[sc.name][t]["dbo+sd"]["thpt_per_cost"]
+                   for t in TOPOS if t != "scale-out")
+            for sc in SCENARIOS),
+    }
+    if verbose:
+        print(out)
+        print("\nclaims:", results["claims"])
+    save(f"fig14_topology_{n}", results)
+    return results
+
+
+if __name__ == "__main__":
+    run()

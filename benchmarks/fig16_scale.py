@@ -1,0 +1,63 @@
+"""Paper Fig 16: 64 vs 256 XPUs (EP64 vs EP256).
+
+Trends: throughput/cost DROPS at 256 in the 40-100ms regimes for every
+topology (bigger A2A domain, no compute-efficiency gain); the drop is worst
+for scale-up (two-level fat-tree); some low-TPOT scenarios improve (1
+expert/GPU cuts weight-load time at small batch)."""
+from __future__ import annotations
+
+from benchmarks.common import save, table
+from repro.configs import get_arch
+from repro.core import H100, Scenario, best_of_opts, make_cluster
+from repro.core.tco import cluster_tco
+
+TOPOS = ("scale-up", "torus", "fullmesh")
+
+
+def run(verbose: bool = True):
+    cfg = get_arch("deepseek-v3")
+    scenarios = [Scenario(t, 512) for t in (15.0, 40.0, 100.0)]
+    results = {}
+    rows = []
+    for sc in scenarios:
+        for topo in TOPOS:
+            row = [sc.name, topo]
+            for n in (64, 256):
+                cl = make_cluster(topo, n, H100)
+                cost = cluster_tco(cl).per_xpu(n)
+                op = best_of_opts(cl, cfg, sc, opts="dbo+sd")
+                tpx = (op.throughput / n) if op else 0.0
+                results[f"{sc.name}/{topo}/{n}"] = {
+                    "thpt_per_xpu": tpx, "thpt_per_cost": tpx / cost,
+                    "cost_per_xpu": cost, "batch": op.batch if op else 0}
+                row += [f"{tpx:.0f}", f"{tpx / cost:.2f}"]
+            rows.append(row)
+    out = table(["scenario", "topology", "64: thpt/XPU", "t/c",
+                 "256: thpt/XPU", "t/c"], rows,
+                title="Fig 16 — cluster-size scaling (DBO+SD)")
+
+    def tc(sc, topo, n):
+        return results[f"{sc}/{topo}/{n}"]["thpt_per_cost"]
+
+    drop_4090 = all(tc(f"tpot{t}ms_ctx512", topo, 256)
+                    < tc(f"tpot{t}ms_ctx512", topo, 64)
+                    for t in (40, 100) for topo in TOPOS)
+    su_drop = (tc("tpot40ms_ctx512", "scale-up", 256)
+               / tc("tpot40ms_ctx512", "scale-up", 64))
+    fm_drop = (tc("tpot40ms_ctx512", "fullmesh", 256)
+               / tc("tpot40ms_ctx512", "fullmesh", 64))
+    results["claims"] = {
+        "tpc_drops_at_256_relaxed_slo": bool(drop_4090),
+        "scaleup_drop_worse_than_fullmesh": bool(su_drop < fm_drop),
+        "scaleup_tpc_ratio_256v64": su_drop,
+        "fullmesh_tpc_ratio_256v64": fm_drop,
+    }
+    if verbose:
+        print(out)
+        print("\nclaims:", results["claims"])
+    save("fig16_scale", results)
+    return results
+
+
+if __name__ == "__main__":
+    run()

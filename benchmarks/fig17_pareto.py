@@ -1,0 +1,64 @@
+"""Paper Fig 17: performance-cost Pareto frontier over (topology, link BW,
+cluster size).
+
+Headline: full-mesh forms the Pareto frontier in all serving scenarios;
+torus tracks it at lower throughput; scale-out misses entirely; scale-up
+wins raw throughput/XPU but not throughput/cost."""
+from __future__ import annotations
+
+from benchmarks.common import save, table
+from repro.configs import get_arch
+from repro.core import H100, Scenario
+from repro.core.pareto import pareto_frontier, sweep_networks
+
+SCENARIOS = [Scenario(t, c) for c in (512, 4096) for t in (15.0, 40.0, 100.0)]
+
+
+def run(verbose: bool = True):
+    cfg = get_arch("deepseek-v3")
+    results = {}
+    fm_on_frontier, so_on_frontier = [], []
+    for sc in SCENARIOS:
+        points = sweep_networks(cfg, sc, H100)
+        frontier = pareto_frontier(points)
+        results[sc.name] = {
+            "points": [vars(p) for p in points],
+            "frontier": [vars(p) for p in frontier],
+        }
+        topos_on = {p.topology for p in frontier}
+        fm_on_frontier.append("fullmesh" in topos_on)
+        so_on_frontier.append("scale-out" in topos_on)
+        if verbose:
+            rows = [[p.topology, p.n_xpus, f"{p.link_bw / 1e9:.0f}",
+                     f"{p.cost_per_xpu:.0f}", f"{p.throughput_per_xpu:.0f}",
+                     f"{p.throughput_per_cost:.2f}"] for p in frontier]
+            print(table(["topology", "N", "BW GB/s", "cost/XPU", "thpt/XPU",
+                         "thpt/cost"], rows,
+                        title=f"Fig 17 frontier — {sc.name}"))
+            print()
+
+    # best throughput-per-cost point per scenario
+    best_rows = []
+    fm_best = []
+    for sc in SCENARIOS:
+        pts = results[sc.name]["points"]
+        best = max(pts, key=lambda p: p["throughput_per_cost"])
+        fm_best.append(best["topology"] == "fullmesh")
+        best_rows.append([sc.name, best["topology"], best["n_xpus"],
+                          f"{best['link_bw'] / 1e9:.0f}GB/s",
+                          f"{best['throughput_per_cost']:.2f}"])
+    results["claims"] = {
+        "fullmesh_on_frontier_everywhere": all(fm_on_frontier),
+        "fullmesh_best_tpc_fraction": sum(fm_best) / len(fm_best),
+        "scaleout_never_on_frontier": not any(so_on_frontier),
+    }
+    if verbose:
+        print(table(["scenario", "best topo", "N", "BW", "thpt/cost"],
+                    best_rows, title="Fig 17 — best thpt/cost point"))
+        print("\nclaims:", results["claims"])
+    save("fig17_pareto", results)
+    return results
+
+
+if __name__ == "__main__":
+    run()

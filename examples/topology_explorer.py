@@ -1,0 +1,112 @@
+"""Topology explorer — the paper's methodology as an interactive tool.
+
+Given a model, cluster size, and serving scenario, report every topology's
+max throughput under the SLO, its TCO, and throughput-per-cost; optionally
+sweep link bandwidth to find the provisioning sweet spot (paper section 4.2)
+or render the DBO two-lane schedule (paper Fig 4).
+
+  PYTHONPATH=src python examples/topology_explorer.py \
+      --tpot 40 --context 512 --xpus 64 [--arch deepseek-v3] [--gen H100]
+      [--bw-sweep] [--show-schedule]
+"""
+import argparse
+
+from repro.configs import get_arch
+from repro.core import GENERATIONS, Scenario, best_of_opts, make_cluster
+from repro.core.optimizer import iteration_time
+from repro.core.tco import cluster_tco
+from repro.core.workload import ServingPoint
+
+
+def show_schedule(cfg, cluster, batch):
+    import dataclasses
+    from repro.core.optimizer import _timers
+    from repro.core.overlap import simulate_two_lane, to_timed
+    from repro.core.workload import decode_iteration
+    half = ServingPoint(batch_global=batch // 2, context=512,
+                        ep=cluster.n_xpus, n_devices=cluster.n_xpus)
+    ops = decode_iteration(cfg, half)[:18]        # first ~2 layers
+    t_comp, t_comm = _timers(cluster, half)
+    res = simulate_two_lane(to_timed(ops, t_comp, t_comm, 0),
+                            to_timed(ops, t_comp, t_comm, 1), stagger=3)
+    span = res.makespan
+    width = 70
+    print(f"\nDBO two-lane schedule (first 2 layers, batch {batch}, "
+          f"{cluster.topology}):")
+    for lane in ("compute", "comm"):
+        line = [" "] * width
+        for (name, mb, s, e) in res.timeline:
+            opl = "compute" if not ("a2a" in name or "_ar" in name) else "comm"
+            if opl != lane:
+                continue
+            i0 = int(s / span * (width - 1))
+            i1 = max(int(e / span * (width - 1)), i0 + 1)
+            ch = "A" if mb == 0 else "B"
+            for i in range(i0, min(i1, width)):
+                line[i] = ch
+        print(f"  {lane:8s} |{''.join(line)}|")
+    print(f"  makespan {res.makespan * 1e3:.2f} ms, exposed comm "
+          f"{res.exposed_comm * 1e3:.2f} ms")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="deepseek-v3")
+    ap.add_argument("--tpot", type=float, default=40.0)
+    ap.add_argument("--context", type=int, default=512)
+    ap.add_argument("--xpus", type=int, default=64, choices=(64, 256))
+    ap.add_argument("--gen", default="H100", choices=sorted(GENERATIONS))
+    ap.add_argument("--opts", default="dbo+sd",
+                    choices=("noopt", "dbo", "dbo+sd"))
+    ap.add_argument("--c", type=float, default=1.0,
+                    help="network-cost adjustment factor")
+    ap.add_argument("--bw-sweep", action="store_true")
+    ap.add_argument("--show-schedule", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    xpu = GENERATIONS[args.gen]
+    sc = Scenario(args.tpot, args.context)
+    print(f"model={args.arch}  scenario: TPOT<={args.tpot}ms "
+          f"ctx={args.context}  {args.xpus}x {args.gen}  opts={args.opts}")
+    print(f"{'topology':>10} {'thpt/XPU':>9} {'batch':>7} {'TPOT ms':>8} "
+          f"{'ECT ms':>7} {'cost/XPU':>9} {'thpt/cost':>9}")
+    best = None
+    for topo in ("scale-up", "scale-out", "torus", "fullmesh"):
+        cl = make_cluster(topo, args.xpus, xpu)
+        op = best_of_opts(cl, cfg, sc, opts=args.opts)
+        cost = cluster_tco(cl).per_xpu(args.xpus, args.c)
+        if op is None:
+            print(f"{topo:>10} {'SLO MISS':>9} {'-':>7} {'-':>8} {'-':>7} "
+                  f"{cost:9.1f} {'-':>9}")
+            continue
+        tpc = op.throughput / args.xpus / cost
+        if best is None or tpc > best[1]:
+            best = (topo, tpc, op)
+        print(f"{topo:>10} {op.throughput / args.xpus:9.0f} {op.batch:7d} "
+              f"{op.tpot * 1e3:8.2f} {op.exposed_comm * 1e3:7.2f} "
+              f"{cost:9.1f} {tpc:9.2f}")
+    if best:
+        print(f"\nmost cost-effective: {best[0]} "
+              f"({best[1]:.2f} tok/s per cost unit)")
+
+    if args.bw_sweep:
+        print(f"\nlink-bandwidth sweep (scale-up, fractions of "
+              f"{xpu.scale_up_bw / 1e9:.0f} GB/s):")
+        for f in (1 / 9, 1 / 3, 2 / 3, 1.0, 2.0):
+            cl = make_cluster("scale-up", args.xpus, xpu,
+                              link_bw=xpu.scale_up_bw * f)
+            op = best_of_opts(cl, cfg, sc, opts=args.opts)
+            cost = cluster_tco(cl).per_xpu(args.xpus, args.c)
+            tpc = op.throughput / args.xpus / cost if op else 0.0
+            print(f"  {f:4.2f}x ({cl.link_bw / 1e9:5.0f} GB/s): "
+                  f"thpt/cost {tpc:7.2f}"
+                  + ("  <- sweet spot candidate" if op else "  (SLO miss)"))
+
+    if args.show_schedule and best:
+        show_schedule(cfg, make_cluster(best[0], args.xpus, xpu),
+                      best[2].batch)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,135 @@
+"""Parse collective traffic out of lowered/compiled HLO text.
+
+The roofline's collective term needs bytes moved by all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute; cost_analysis() does not
+report it, so we sum operand sizes of every collective op in the module.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# opcode position: " all-gather(" / " all-to-all-start(" — NOT the SSA value
+# name (%all-to-all = ...), hence the required leading whitespace
+_COLL_OP_RE = re.compile(
+    r"\s(" + "|".join(_COLLECTIVES) + r")(?:-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _nbytes(dtype: str, dims: str) -> int:
+    n = _DTYPE_BYTES.get(dtype, 4)
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+# Any op definition: %name = dtype[dims]{layout} opcode(...operands...)
+_DEF_RE = re.compile(
+    r"%([\w.\-]+)\s*=\s*(?:\()?([a-z0-9]+)\[([0-9,]*)\]")
+_OPCODE_RE = re.compile(
+    r"%[\w.\-]+\s*=\s*(?:\()?[a-z0-9]+\[[0-9,]*\][^\s]*\s+([\w\-]+)\(")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def parse_shapes(hlo_text: str) -> Dict[str, int]:
+    """name -> result nbytes for every op definition in the module."""
+    sizes: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.search(line)
+        if m:
+            name, dtype, dims = m.groups()
+            sizes[name] = _nbytes(dtype, dims)
+    return sizes
+
+
+def op_bytes_profile(hlo_text: str, top: int = 15) -> Dict[str, float]:
+    """Aggregate (result + operand) bytes per opcode — the dry-run
+    'profiler' for the perf loop. Fusions count their result + operands
+    (what crosses HBM), matching HloCostAnalysis' fusion treatment."""
+    sizes = parse_shapes(hlo_text)
+    agg: Dict[str, float] = defaultdict(float)
+    for line in hlo_text.splitlines():
+        mo = _OPCODE_RE.search(line)
+        md = _DEF_RE.search(line)
+        if not mo or not md:
+            continue
+        opcode = mo.group(1)
+        name = md.group(1)
+        total = sizes.get(name, 0)
+        args = line.split("(", 1)[1] if "(" in line else ""
+        for om in _OPERAND_RE.finditer(args.split("metadata=")[0]):
+            total += sizes.get(om.group(1), 0)
+        agg[opcode] += total
+    out = dict(sorted(agg.items(), key=lambda kv: -kv[1])[:top])
+    out["_total"] = sum(agg.values())
+    return out
+
+
+def dus_overcount_bytes(hlo_text: str) -> float:
+    """XLA's HloCostAnalysis charges a dynamic-update-slice for reading AND
+    writing the FULL target buffer; the compiled program updates in place
+    (only the slice moves). Returns the bytes to subtract from
+    `bytes accessed` to get in-place-accurate traffic:
+
+        sum over DUS of 2*(target_size - update_size)
+
+    Without this, a decode step that writes one token into a multi-GB KV
+    cache is charged the whole cache per layer — a >20x distortion of the
+    memory roofline term.
+    """
+    sizes = parse_shapes(hlo_text)
+    over = 0.0
+    for line in hlo_text.splitlines():
+        if "dynamic-update-slice(" not in line:
+            continue
+        md = _DEF_RE.search(line)
+        if not md:
+            continue
+        target = _nbytes(md.group(2), md.group(3))
+        args = line.split("dynamic-update-slice(", 1)[1]
+        operands = _OPERAND_RE.findall(args.split("metadata=")[0])
+        if len(operands) < 2:
+            continue
+        update = sizes.get(operands[1], 0)
+        over += 2.0 * max(target - update, 0)
+    return over
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum result-shape bytes per collective kind (per device, since post-
+    partitioning HLO shapes are per-device local shapes). Tuple results
+    (e.g. a 16-way all-to-all returns 16 shards) sum every element.
+    *-done ops are skipped so async pairs aren't double counted."""
+    out: Dict[str, float] = defaultdict(float)
+    counts: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        if "-done(" in line or "=" not in line:
+            continue
+        m = _COLL_OP_RE.search(line)
+        if not m or m.start() < line.find("="):
+            continue
+        kind = m.group(1)
+        # every dtype[dims] between the '=' and the opcode is a result
+        # (tuple) element; operands live after the opcode's '(' and are
+        # excluded by slicing the line at the opcode.
+        lhs = line[line.find("=") + 1: m.start()]
+        nb = sum(_nbytes(d, dims) for d, dims in _SHAPE_RE.findall(lhs))
+        if nb == 0:
+            continue
+        out[kind] += nb
+        counts[kind] += 1
+    res = {f"{k}_bytes": v for k, v in out.items()}
+    res.update({f"{k}_count": counts[k] for k in counts})
+    res["total_bytes"] = sum(out.values())
+    return dict(res)

@@ -1,0 +1,81 @@
+"""Architecture registry: ``--arch <id>`` resolves through ARCHS."""
+from repro.configs.base import (
+    LayerSpec,
+    MambaConfig,
+    ModelConfig,
+    MoEConfig,
+    RwkvConfig,
+    ShapeCell,
+    SHAPES,
+    cell_applicable,
+)
+
+from repro.configs import (  # noqa: E402
+    jamba_v0_1_52b,
+    internvl2_76b,
+    starcoder2_3b,
+    minitron_8b,
+    gemma3_1b,
+    deepseek_67b,
+    granite_moe_3b_a800m,
+    olmoe_1b_7b,
+    rwkv6_1_6b,
+    seamless_m4t_medium,
+    deepseek_v3,
+)
+
+ARCHS = {
+    m.CONFIG.name: m.CONFIG
+    for m in (
+        jamba_v0_1_52b,
+        internvl2_76b,
+        starcoder2_3b,
+        minitron_8b,
+        gemma3_1b,
+        deepseek_67b,
+        granite_moe_3b_a800m,
+        olmoe_1b_7b,
+        rwkv6_1_6b,
+        seamless_m4t_medium,
+        deepseek_v3,
+    )
+}
+
+ASSIGNED_ARCHS = [n for n in ARCHS if n != "deepseek-v3"]
+
+
+def get_arch(name: str) -> ModelConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+def reduced_config(cfg: ModelConfig, **overrides) -> ModelConfig:
+    """Family-preserving smoke-test reduction: few layers, thin width, few
+    experts, tiny vocab. Keeps the layer-pattern structure (>= one period)."""
+    import dataclasses
+
+    period = cfg.period
+    n_layers = max(len(period), 2)
+    moe = cfg.moe
+    if moe is not None:
+        moe = dataclasses.replace(
+            moe, num_experts=min(moe.num_experts, 8), d_expert=64,
+            d_shared_expert=64 if moe.num_shared_experts else 0)
+    kw = dict(
+        num_layers=n_layers,
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=min(cfg.num_kv_heads, 2) if cfg.num_kv_heads < cfg.num_heads else 4,
+        d_head=16,
+        d_ff=128,
+        vocab_size=512,
+        moe=moe,
+        encoder_layers=2 if cfg.encoder_layers else 0,
+        n_frontend_tokens=8 if cfg.frontend else 0,
+        sliding_window=8 if cfg.sliding_window else 0,
+    )
+    if cfg.attn_kind == "mla":
+        kw.update(mla_kv_lora_rank=32, mla_q_lora_rank=32, mla_rope_head_dim=8)
+    kw.update(overrides)
+    return cfg.replace(**kw)

@@ -1,0 +1,18 @@
+"""minitron-8b [dense] — pruned Nemotron.  [arXiv:2407.14679; hf]
+
+32L d_model=4096 32H (GQA kv=8) d_ff=16384 vocab=256000
+"""
+from repro.configs.base import LayerSpec, ModelConfig
+
+CONFIG = ModelConfig(
+    name="minitron-8b",
+    family="dense",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=16384,
+    vocab_size=256000,
+    period=(LayerSpec(mixer="attn", ffn="dense"),),
+    rope_theta=500_000.0,
+)

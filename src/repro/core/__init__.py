@@ -1,0 +1,24 @@
+"""The paper's primary contribution: a cross-layer cost-effectiveness
+methodology for MoE LLM serving networks.
+
+  alphabeta    extended Hockney communication model (paper Table 1)
+  collectives  AR/A2A algorithm cost formulas per topology (Tables 2-3)
+  topology     scale-up / scale-out / 3D torus / 3D full-mesh clusters
+  hardware     XPU generations (H100, Blackwell, Rubin, TPU v5e; Table 5)
+  compute_model roofline-with-efficiency per-layer compute times
+  workload     MoE decode iteration -> ordered op list (per-device shapes)
+  overlap      DBO greedy two-lane scheduler -> exposed communication time
+  specdec      speculative decoding TPOT model
+  tco          CapEx/OpEx cluster cost model (+ adjustment factor c)
+  optimizer    max-throughput-under-SLO sweep
+  pareto       performance-vs-cost sweep + Pareto frontier (Fig 17)
+  future       Blackwell/Rubin saturating-bandwidth projection (Fig 18/19)
+"""
+from repro.core.alphabeta import AlphaBeta, INTRA_NODE, INTER_NODE, CLUSTER
+from repro.core.hardware import (H100, BLACKWELL, RUBIN, TPU_V5E, GENERATIONS,
+                                 XPUSpec)
+from repro.core.optimizer import Scenario, SCENARIOS, best_of_opts, max_throughput
+from repro.core.specdec import SpecDecConfig
+from repro.core.topology import Cluster, make_cluster, TOPOLOGIES
+from repro.core.tco import cluster_tco, throughput_per_cost
+from repro.core.workload import ServingPoint

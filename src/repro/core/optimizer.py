@@ -1,0 +1,195 @@
+"""Max-throughput-under-SLO sweep (paper sections 3.2.1, 4.1).
+
+For a (cluster, model, scenario) triple, sweep batch size (and the software
+optimizations DBO / SD) under the memory-capacity constraint, model TPOT as
+compute + communication (with DBO's two-lane overlap when enabled), and
+return the configuration with the highest throughput whose TPOT meets the
+SLO. "Cluster builders provision for peak load": max capacity per cost is
+the paper's cost-effectiveness metric.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, replace
+from typing import List, Optional, Sequence
+
+from repro.configs.base import ModelConfig
+from repro.core import compute_model as cm
+from repro.core import overlap, workload
+from repro.core.compute_model import Op
+from repro.core.specdec import SpecDecConfig
+from repro.core.topology import Cluster
+from repro.core.workload import ServingPoint
+
+
+@dataclass(frozen=True)
+class Scenario:
+    """TPOT SLO x average context length (paper section 3.1)."""
+    tpot_ms: float
+    context: int
+
+    @property
+    def name(self) -> str:
+        return f"tpot{int(self.tpot_ms)}ms_ctx{self.context}"
+
+
+# the paper's evaluation grid
+SCENARIOS = [Scenario(t, c) for c in (512, 4096) for t in (15.0, 40.0, 100.0)]
+
+
+@dataclass(frozen=True)
+class OperatingPoint:
+    batch: int
+    tpot: float                    # seconds
+    throughput: float              # tokens / s (cluster-wide)
+    used_dbo: bool
+    used_sd: bool
+    exposed_comm: float            # seconds (under the schedule actually used)
+    t_compute: float
+    t_comm: float
+
+    @property
+    def throughput_per_xpu(self):  # filled by caller via cluster.n_xpus
+        raise AttributeError("use result.throughput / cluster.n_xpus")
+
+
+# ---------------------------------------------------------------------------
+# single-iteration time
+# ---------------------------------------------------------------------------
+
+def _timers(cluster: Cluster, p: ServingPoint):
+    fp8 = p.dtype == "fp8"
+    rows = p.batch_per_device * p.q_len
+
+    def t_comp(op: Op) -> float:
+        return cm.compute_time(op, cluster.xpu, rows=rows, fp8=fp8)
+
+    def t_comm(op: Op) -> float:
+        if op.kind == "a2a":
+            return cluster.a2a_time(op.m_bytes)
+        return cluster.ar_time(op.m_bytes, group=op.group or None)
+
+    return t_comp, t_comm
+
+
+def iteration_time(cfg: ModelConfig, p: ServingPoint, cluster: Cluster,
+                   *, dbo: bool) -> tuple[float, float, float, float]:
+    """One decode iteration -> (t_iter, exposed_comm, t_compute, t_comm).
+
+    dbo=True: the batch splits into two microbatches of B/2; TPOT is the
+    two-lane greedy schedule's makespan (paper section 3.3).
+    """
+    if not dbo:
+        ops = workload.decode_iteration(cfg, p)
+        t_comp, t_comm = _timers(cluster, p)
+        tc = sum(t_comp(o) for o in ops if o.kind == "compute")
+        tm = sum(t_comm(o) for o in ops if o.kind != "compute")
+        return tc + tm, tm, tc, tm
+
+    half = replace(p, batch_global=max(p.batch_global // 2, 1))
+    ops_half = workload.decode_iteration(cfg, half)
+    t_comp, t_comm = _timers(cluster, half)
+    makespan, exposed = overlap.dbo_tpot(ops_half, t_comp, t_comm)
+    tc = 2 * sum(t_comp(o) for o in ops_half if o.kind == "compute")
+    tm = 2 * sum(t_comm(o) for o in ops_half if o.kind != "compute")
+    return makespan, exposed, tc, tm
+
+
+def tpot_at(cfg: ModelConfig, p: ServingPoint, cluster: Cluster, *,
+            dbo: bool, sd: Optional[SpecDecConfig]) -> tuple[float, float, float, float]:
+    """(TPOT, exposed_comm, t_compute, t_comm) for one operating point.
+
+    DBO on means "best of DBO and no-overlap" (paper Fig. 11a). SD wraps
+    draft + verify iterations.
+    """
+    def best_iter(q_len: int):
+        pq = replace(p, q_len=q_len)
+        res = iteration_time(cfg, pq, cluster, dbo=False)
+        if dbo and p.batch_global >= 2:
+            res_dbo = iteration_time(cfg, pq, cluster, dbo=True)
+            if res_dbo[0] < res[0]:
+                return res_dbo
+        return res
+
+    if sd is None:
+        return best_iter(1)
+
+    t_draft, e1, c1, m1 = best_iter(1)
+    t_verify, e2, c2, m2 = best_iter(sd.spec_m)
+    denom = sd.tokens_per_iteration
+    return ((t_draft + t_verify) / denom, (e1 + e2) / denom,
+            (c1 + c2) / denom, (m1 + m2) / denom)
+
+
+# ---------------------------------------------------------------------------
+# the sweep
+# ---------------------------------------------------------------------------
+
+def _batch_grid(b_max: int, ep: int) -> List[int]:
+    """Geometric grid from ep to b_max (finer near the top end)."""
+    if b_max < 1:
+        return []
+    grid = set()
+    b = max(ep, 1)
+    while b <= b_max:
+        grid.add(b)
+        b *= 2
+    # refine: 3/4 points between octaves near the top two octaves
+    for base in sorted(grid)[-3:]:
+        for frac in (1.25, 1.5, 1.75):
+            v = int(base * frac)
+            if v <= b_max:
+                grid.add(v)
+    grid.add(b_max)
+    return sorted(grid)
+
+
+def max_throughput(cluster: Cluster, cfg: ModelConfig, scenario: Scenario,
+                   *, dbo: bool = False, sd: Optional[SpecDecConfig] = None,
+                   tp: int = 1, ep: Optional[int] = None,
+                   dtype: str = "fp8") -> Optional[OperatingPoint]:
+    """Best operating point under the TPOT SLO, or None if the SLO is
+    unreachable at every feasible batch size."""
+    n = cluster.n_xpus
+    if cfg.moe is not None:
+        ep = ep or n
+    else:
+        ep = 1
+    tpot_budget = scenario.tpot_ms * 1e-3
+
+    p0 = ServingPoint(batch_global=1, context=scenario.context, tp=tp, ep=ep,
+                      n_devices=n, dtype=dtype)
+    b_max = workload.max_batch_by_memory(cfg, p0, cluster.xpu.hbm_cap)
+    best: Optional[OperatingPoint] = None
+    for b in _batch_grid(b_max, max(n // tp, 1)):
+        p = replace(p0, batch_global=b)
+        tpot, ect, tc, tm = tpot_at(cfg, p, cluster, dbo=dbo, sd=sd)
+        if tpot > tpot_budget:
+            continue
+        thr = b / tpot
+        if best is None or thr > best.throughput:
+            best = OperatingPoint(batch=b, tpot=tpot, throughput=thr,
+                                  used_dbo=dbo, used_sd=sd is not None,
+                                  exposed_comm=ect, t_compute=tc, t_comm=tm)
+    return best
+
+
+def best_of_opts(cluster: Cluster, cfg: ModelConfig, scenario: Scenario,
+                 opts: str = "dbo+sd", **kw) -> Optional[OperatingPoint]:
+    """opts: 'noopt' | 'dbo' | 'dbo+sd'. DBO/SD results fall back to the
+    unoptimized point when that is faster (paper's 'best of' curves)."""
+    candidates = [max_throughput(cluster, cfg, scenario, dbo=False, sd=None,
+                                 **kw)]
+    if opts in ("dbo", "dbo+sd"):
+        candidates.append(
+            max_throughput(cluster, cfg, scenario, dbo=True, sd=None, **kw))
+    if opts == "dbo+sd":
+        sd = SpecDecConfig()
+        candidates.append(
+            max_throughput(cluster, cfg, scenario, dbo=True, sd=sd, **kw))
+        candidates.append(
+            max_throughput(cluster, cfg, scenario, dbo=False, sd=sd, **kw))
+    candidates = [c for c in candidates if c is not None]
+    if not candidates:
+        return None
+    return max(candidates, key=lambda c: c.throughput)

@@ -1,0 +1,75 @@
+"""Performance-vs-cost sweep + Pareto frontier (paper section 4.4, Fig 17).
+
+Each point = (monthly cost per XPU, throughput per XPU) for one
+(topology, link bandwidth, cluster size) under a scenario with all software
+optimizations. The slope origin->point is throughput per cost; the Pareto
+frontier is the upper-left hull.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Sequence
+
+from repro.configs.base import ModelConfig
+from repro.core import optimizer, tco
+from repro.core.hardware import XPUSpec
+from repro.core.optimizer import Scenario
+from repro.core.topology import Cluster, make_cluster
+
+# the paper's bandwidth sweep grid, as fractions of the 1x provision
+BW_FRACTIONS = (1 / 9, 1 / 3, 2 / 3, 1.0, 2.0)
+
+
+@dataclass(frozen=True)
+class ParetoPoint:
+    topology: str
+    n_xpus: int
+    link_bw: float
+    cost_per_xpu: float            # monthly, normalized units
+    throughput_per_xpu: float      # tokens/s
+    throughput_per_cost: float
+    batch: int
+    tpot_ms: float
+
+    def dominates(self, other: "ParetoPoint") -> bool:
+        return (self.cost_per_xpu <= other.cost_per_xpu
+                and self.throughput_per_xpu >= other.throughput_per_xpu
+                and (self.cost_per_xpu < other.cost_per_xpu
+                     or self.throughput_per_xpu > other.throughput_per_xpu))
+
+
+def sweep_networks(cfg: ModelConfig, scenario: Scenario, xpu: XPUSpec,
+                   *, sizes: Sequence[int] = (64, 256),
+                   topologies: Sequence[str] = ("scale-up", "scale-out",
+                                                "torus", "fullmesh"),
+                   bw_fracs: Sequence[float] = BW_FRACTIONS,
+                   opts: str = "dbo+sd", c: float = 1.0) -> List[ParetoPoint]:
+    points: List[ParetoPoint] = []
+    for topo in topologies:
+        for n in sizes:
+            for f in bw_fracs:
+                # each topology sweeps fractions of its own provision
+                # (scale-out: NIC-class fabric on top of the intra-node
+                # scale-up domain it always carries — see core.topology)
+                base_bw = (xpu.scale_out_bw if topo == "scale-out"
+                           else xpu.scale_up_bw)
+                cl = make_cluster(topo, n, xpu, link_bw=base_bw * f)
+                op = optimizer.best_of_opts(cl, cfg, scenario, opts=opts)
+                if op is None:
+                    continue
+                cost = tco.cluster_tco(cl).per_xpu(n, c)
+                points.append(ParetoPoint(
+                    topology=topo, n_xpus=n, link_bw=cl.link_bw,
+                    cost_per_xpu=cost,
+                    throughput_per_xpu=op.throughput / n,
+                    throughput_per_cost=op.throughput / n / cost,
+                    batch=op.batch, tpot_ms=op.tpot * 1e3))
+    return points
+
+
+def pareto_frontier(points: Sequence[ParetoPoint]) -> List[ParetoPoint]:
+    """Upper-left hull: no other point has both lower cost and higher
+    throughput."""
+    frontier = [p for p in points
+                if not any(q.dominates(p) for q in points)]
+    return sorted(frontier, key=lambda p: p.cost_per_xpu)

@@ -1,0 +1,137 @@
+"""Cluster topologies: bandwidth provisioning, switch/link inventory (for
+TCO), and best-algorithm collective times (paper sections 2.2, 3.2.2, 3.4).
+
+Four families (paper Fig. 2): scale-up / scale-out (non-blocking fat-tree),
+3D torus, 3D full-mesh. Torus/full-mesh dims: 4x4x4 (64) and 8x8x4 (256).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+from repro.core.alphabeta import AlphaBeta, CLUSTER, INTRA_NODE
+from repro.core import collectives as coll
+from repro.core.hardware import XPUSpec
+
+TOPOLOGIES = ("scale-up", "scale-out", "torus", "fullmesh")
+
+DIMS_BY_SIZE = {8: (2, 2, 2), 64: (4, 4, 4), 256: (8, 8, 4), 512: (8, 8, 8)}
+
+SWITCH_RADIX = 64
+SCALE_UP_PORTS = 16          # per XPU
+SCALE_OUT_PORTS = 1
+XPUS_PER_RACK = 64
+
+
+@dataclass(frozen=True)
+class LinkInventory:
+    copper_gbps_total: float = 0.0     # aggregate copper bandwidth (GB/s)
+    aoc_gbps_total: float = 0.0        # aggregate AOC bandwidth (GB/s)
+
+
+@dataclass(frozen=True)
+class Cluster:
+    topology: str
+    n_xpus: int
+    xpu: XPUSpec
+    link_bw: float                      # per-XPU aggregate network BW (B/s)
+    dims: Optional[Tuple[int, ...]] = None
+
+    def __post_init__(self):
+        if self.topology in ("torus", "fullmesh") and self.dims is None:
+            object.__setattr__(self, "dims", DIMS_BY_SIZE[self.n_xpus])
+
+    # ------------- collectives -------------
+    def _ab(self) -> AlphaBeta:
+        return CLUSTER if self.n_xpus > 8 else INTRA_NODE
+
+    def a2a_time(self, m_bytes: float) -> float:
+        """Best all-to-all algorithm for this topology; m = per-XPU payload."""
+        menu = coll.a2a_menu(self.topology, self.n_xpus, self.dims)
+        ab = self._ab()
+        return min(ab.time(rounds=c.rounds, dests=c.dests, m_coeff=c.m_coeff,
+                           m_bytes=m_bytes, bandwidth=self.link_bw)
+                   for c in menu.values())
+
+    def ar_time(self, m_bytes: float, group: Optional[int] = None) -> float:
+        n = group or self.n_xpus
+        menu = coll.ar_menu(self.topology, n, self.dims)
+        ab = self._ab()
+        return min(ab.time(rounds=c.rounds, dests=c.dests, m_coeff=c.m_coeff,
+                           m_bytes=m_bytes, bandwidth=self.link_bw)
+                   for c in menu.values())
+
+    # ------------- inventory (for TCO) -------------
+    def switch_capacity_total(self) -> float:
+        """Total switch capacity in B/s (radix x port bandwidth x count),
+        non-blocking fat-tree sized for per-XPU `link_bw`.
+
+        Scale-out additionally carries its INTRA-NODE scale-up domain
+        (8-XPU NVLink-class switching at the XPU's scale-up provision) —
+        that is what a DGX-style server actually ships with, and omitting
+        it would make scale-out spuriously cheap (paper section 3.4)."""
+        if self.topology in ("torus", "fullmesh"):
+            return 0.0
+        intra = 0.0
+        if self.topology == "scale-out":
+            intra = self.n_xpus * self.xpu.scale_up_bw
+        ports_per_xpu = SCALE_UP_PORTS if self.topology == "scale-up" else SCALE_OUT_PORTS
+        port_bw = self.link_bw / ports_per_xpu
+        endpoints = self.n_xpus * ports_per_xpu
+        if endpoints <= SWITCH_RADIX * ports_per_xpu and self.n_xpus <= SWITCH_RADIX:
+            # one-level: each XPU port rail goes to its own switch plane
+            n_switches = ports_per_xpu
+            return intra + n_switches * SWITCH_RADIX * port_bw
+        # two-level folded clos: leaf (half down/half up) + spine
+        down = SWITCH_RADIX // 2
+        n_leaf = math.ceil(endpoints / down)
+        n_spine = math.ceil(n_leaf * down / SWITCH_RADIX)
+        return intra + (n_leaf + n_spine) * SWITCH_RADIX * port_bw
+
+    def link_inventory(self) -> LinkInventory:
+        """Aggregate link bandwidth by cable type. Intra-rack copper,
+        inter-rack AOC (64 XPUs/rack, paper section 3.4)."""
+        gb = 1e9
+        n_racks = math.ceil(self.n_xpus / XPUS_PER_RACK)
+        if self.topology in ("scale-up", "scale-out"):
+            # XPU->leaf links: intra-rack copper. Leaf->spine (two-level): AOC.
+            xpu_links_bw = self.n_xpus * self.link_bw
+            intra = (self.n_xpus * self.xpu.scale_up_bw
+                     if self.topology == "scale-out" else 0.0)
+            if self.n_xpus <= SWITCH_RADIX:
+                return LinkInventory(
+                    copper_gbps_total=(xpu_links_bw + intra) / gb)
+            up_bw = xpu_links_bw                     # non-blocking
+            return LinkInventory(
+                copper_gbps_total=(xpu_links_bw + intra) / gb,
+                aoc_gbps_total=up_bw / gb)
+        # switchless: every XPU's aggregate BW spread across its links;
+        # links within a rack are copper, cross-rack AOC.
+        total_bw = self.n_xpus * self.link_bw      # counts each link twice/2
+        if n_racks == 1:
+            return LinkInventory(copper_gbps_total=total_bw / gb)
+        # fraction of links that leave the rack (rough: last dim crosses)
+        if self.topology == "torus":
+            cross_frac = 1.0 / 3.0
+        else:
+            d = self.dims
+            links = sum(x - 1 for x in d)
+            cross_frac = (d[-1] - 1) / links
+        return LinkInventory(
+            copper_gbps_total=total_bw * (1 - cross_frac) / gb,
+            aoc_gbps_total=total_bw * cross_frac / gb)
+
+    def describe(self) -> Dict:
+        return {"topology": self.topology, "n": self.n_xpus,
+                "link_bw_GBs": self.link_bw / 1e9, "dims": self.dims}
+
+
+def make_cluster(topology: str, n_xpus: int, xpu: XPUSpec,
+                 link_bw: Optional[float] = None) -> Cluster:
+    """link_bw defaults to the XPU's provisioned bandwidth: scale-out uses
+    the NIC bandwidth, all others the scale-up provision (paper section 3.2:
+    'fix the total per-XPU network bandwidth')."""
+    if link_bw is None:
+        link_bw = xpu.scale_out_bw if topology == "scale-out" else xpu.scale_up_bw
+    return Cluster(topology=topology, n_xpus=n_xpus, xpu=xpu, link_bw=link_bw)

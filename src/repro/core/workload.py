@@ -1,0 +1,263 @@
+"""MoE decode iteration -> ordered list of compute + communication ops
+(paper sections 2.1, 3.2.3).
+
+One decode iteration of an MoE transformer under TP x EP is a repeating
+per-layer pattern:
+
+  [attn: qkv-proj, attn-core, o-proj, AR(tp)]
+  [moe : router, A2A dispatch, expert FFN, A2A gather, (+shared expert)]
+
+The per-device tensor shapes follow the Vidur observation the paper leans
+on: every device in a parallelism domain executes the same-shaped shard, so
+we derive shapes analytically from (batch, context, config, TP, EP) and feed
+them to the roofline-with-efficiency compute model.
+
+All sizes below are PER DEVICE unless suffixed `_global`.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+from repro.configs.base import ModelConfig
+from repro.core.compute_model import Op
+
+BYTES = {"bf16": 2, "fp8": 1, "fp16": 2, "f32": 4}
+
+
+@dataclass(frozen=True)
+class ServingPoint:
+    """One operating point of the serving cluster.
+
+    Parallelism follows the paper's mapping: attention runs data-parallel
+    over n/tp TP domains; MoE experts are EP over `ep` devices (tp=1 on the
+    MoE path, as in DeepSeek-V3 deployments). `n_devices` defaults to ep*tp.
+    """
+    batch_global: int            # requests in flight per iteration (decode)
+    context: int                 # average context length (KV length)
+    tp: int = 1                  # tensor parallel degree
+    ep: int = 1                  # expert parallel degree
+    n_devices: int = 0           # 0 -> ep * tp
+    dtype: str = "fp8"           # weights/activations wire format
+    kv_dtype: str = "bf16"
+    q_len: int = 1               # >1 during SD verification
+
+    @property
+    def n(self) -> int:
+        return self.n_devices or (self.ep * self.tp)
+
+    @property
+    def batch_per_device(self) -> float:
+        # requests each device is responsible for (DP-attention domains)
+        return self.batch_global * self.tp / self.n
+
+
+def _wb(p: ServingPoint) -> int:
+    return BYTES[p.dtype]
+
+
+# ---------------------------------------------------------------------------
+# per-layer op builders
+# ---------------------------------------------------------------------------
+
+def attention_ops(cfg: ModelConfig, p: ServingPoint) -> List[Op]:
+    """Self-attention sublayer of ONE layer (decode, MLA or GQA)."""
+    d = cfg.d_model
+    b = p.batch_per_device            # rows through the projections
+    q = p.q_len
+    rows = b * q
+    wb = _wb(p)
+    kvb = BYTES[p.kv_dtype]
+    ops: List[Op] = []
+
+    if cfg.attn_kind == "mla":
+        r, qr, rp = cfg.mla_kv_lora_rank, cfg.mla_q_lora_rank, cfg.mla_rope_head_dim
+        nh, hd = cfg.num_heads, cfg.head_dim
+        # down projections + up projections (weights sharded over tp where applicable)
+        w_down = d * (r + rp) + d * qr
+        w_up = (qr * nh * (hd + rp) + r * nh * 2 * hd + nh * hd * d) / p.tp
+        for name, w in (("mla_down", w_down), ("mla_up", w_up)):
+            ops.append(Op(name=name, kind="compute",
+                          flops=2 * rows * w, bytes=w * wb + rows * d * wb,
+                          op_class="gemm"))
+        # attention core against compressed KV cache [b, ctx, r+rp]
+        kv_bytes = b * p.context * (r + rp) * kvb
+        core_flops = 2 * b * q * (nh / p.tp) * p.context * (r + rp) * 2
+        ops.append(Op(name="mla_core", kind="compute", flops=core_flops,
+                      bytes=kv_bytes, op_class="attn"))
+    else:
+        nh, kh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+        w_qkv = d * (nh + 2 * kh) * hd / p.tp
+        w_o = nh * hd * d / p.tp
+        ops.append(Op(name="qkv_proj", kind="compute",
+                      flops=2 * rows * w_qkv,
+                      bytes=w_qkv * wb + rows * d * wb, op_class="gemm"))
+        kv_bytes = b * p.context * 2 * (kh / min(p.tp, kh)) * hd * kvb
+        core_flops = 2 * b * q * (nh / p.tp) * p.context * hd * 2
+        ops.append(Op(name="attn_core", kind="compute", flops=core_flops,
+                      bytes=kv_bytes, op_class="attn"))
+        ops.append(Op(name="o_proj", kind="compute", flops=2 * rows * w_o,
+                      bytes=w_o * wb + rows * d * wb, op_class="gemm"))
+
+    if p.tp > 1:
+        # TP all-reduce of the attention output [rows, d]
+        ops.append(Op(name="attn_ar", kind="ar",
+                      m_bytes=rows * d * wb, group=p.tp))
+    return ops
+
+
+def moe_ops(cfg: ModelConfig, p: ServingPoint) -> List[Op]:
+    """MoE FFN sublayer of ONE layer: router + A2A dispatch + experts + A2A."""
+    assert cfg.moe is not None
+    m = cfg.moe
+    d = cfg.d_model
+    b = p.batch_per_device
+    rows = b * p.q_len
+    wb = _wb(p)
+    ops: List[Op] = []
+
+    # router (tiny)
+    ops.append(Op(name="router", kind="compute",
+                  flops=2 * rows * d * m.num_experts,
+                  bytes=d * m.num_experts * wb + rows * d * wb,
+                  op_class="other"))
+
+    # dispatch A2A: each token is sent to top-k expert owners.
+    # m = per-device payload = rows * topk * d (paper's A2A message convention)
+    a2a_bytes = rows * m.experts_per_token * d * wb
+    if p.ep > 1:
+        ops.append(Op(name="a2a_dispatch", kind="a2a", m_bytes=a2a_bytes,
+                      group=p.ep))
+
+    # expert FFN: each device hosts E/ep experts and receives
+    # rows * topk tokens on average (load-balanced).
+    tokens_in = rows * m.experts_per_token
+    experts_local = max(m.num_experts // p.ep, 1)
+    w_expert = 3 * d * m.d_expert            # SwiGLU gate/up/down
+    ops.append(Op(name="expert_ffn", kind="compute",
+                  flops=2 * tokens_in * w_expert,
+                  bytes=experts_local * w_expert * wb + 2 * tokens_in * d * wb,
+                  op_class="gemm"))
+
+    if m.num_shared_experts:
+        w_sh = m.num_shared_experts * 3 * d * m.d_shared_expert / p.tp
+        ops.append(Op(name="shared_expert", kind="compute",
+                      flops=2 * rows * w_sh, bytes=w_sh * wb + rows * d * wb,
+                      op_class="gemm"))
+
+    if p.ep > 1:
+        ops.append(Op(name="a2a_gather", kind="a2a", m_bytes=a2a_bytes,
+                      group=p.ep))
+    return ops
+
+
+def dense_ffn_ops(cfg: ModelConfig, p: ServingPoint) -> List[Op]:
+    d = cfg.d_model
+    rows = p.batch_per_device * p.q_len
+    wb = _wb(p)
+    w = 3 * d * cfg.d_ff / p.tp
+    ops = [Op(name="dense_ffn", kind="compute", flops=2 * rows * w,
+              bytes=w * wb + 2 * rows * d * wb, op_class="gemm")]
+    if p.tp > 1:
+        ops.append(Op(name="ffn_ar", kind="ar", m_bytes=rows * d * wb,
+                      group=p.tp))
+    return ops
+
+
+# ---------------------------------------------------------------------------
+# whole-iteration builders
+# ---------------------------------------------------------------------------
+
+def decode_iteration(cfg: ModelConfig, p: ServingPoint) -> List[Op]:
+    """Op list for ONE decode iteration (all layers + lm head).
+
+    Layers are emitted in execution order so the DBO scheduler can respect
+    dependencies; `Op.name` carries a layer index prefix.
+    """
+    ops: List[Op] = []
+    for li, spec in enumerate(cfg.layer_specs):
+        prefix = f"L{li}."
+        layer_ops: List[Op] = []
+        if spec.mixer in ("attn", "attn_local"):
+            layer_ops += attention_ops(cfg, p)
+        elif spec.mixer in ("mamba", "rwkv"):
+            # linear-time mixer: projections dominate; model as one gemm
+            d = cfg.d_model
+            rows = p.batch_per_device * p.q_len
+            wb = _wb(p)
+            w = 6 * d * d / p.tp
+            layer_ops.append(Op(name="ssm_mixer", kind="compute",
+                               flops=2 * rows * w,
+                               bytes=w * wb + rows * d * wb, op_class="gemm"))
+            if p.tp > 1:
+                layer_ops.append(Op(name="mixer_ar", kind="ar",
+                                   m_bytes=rows * d * wb, group=p.tp))
+        if spec.ffn == "moe":
+            layer_ops += moe_ops(cfg, p)
+        elif spec.ffn == "dense":
+            layer_ops += dense_ffn_ops(cfg, p)
+        ops += [Op(name=prefix + o.name, kind=o.kind, flops=o.flops,
+                   bytes=o.bytes, op_class=o.op_class, m_bytes=o.m_bytes,
+                   group=o.group) for o in layer_ops]
+
+    # LM head (vocab projection, TP-sharded)
+    d, v = cfg.d_model, cfg.vocab_size
+    rows = p.batch_per_device * p.q_len
+    wb = _wb(p)
+    w = d * v / p.tp
+    ops.append(Op(name="lm_head", kind="compute", flops=2 * rows * w,
+                  bytes=w * wb + rows * d * wb, op_class="gemm"))
+    return ops
+
+
+def kv_cache_bytes_per_request(cfg: ModelConfig, context: int,
+                               kv_dtype: str = "bf16") -> float:
+    """KV-cache footprint of one request at `context` tokens (all layers)."""
+    kvb = BYTES[kv_dtype]
+    total = 0.0
+    for spec in cfg.layer_specs:
+        if spec.mixer in ("attn", "attn_local"):
+            if cfg.attn_kind == "mla":
+                total += context * (cfg.mla_kv_lora_rank
+                                    + cfg.mla_rope_head_dim) * kvb
+            else:
+                w = cfg.sliding_window if (spec.mixer == "attn_local"
+                                           and cfg.sliding_window) else context
+                total += min(w, context) * 2 * cfg.num_kv_heads \
+                    * cfg.head_dim * kvb
+        elif spec.mixer == "mamba":
+            mc = cfg.mamba
+            di = mc.expand * cfg.d_model
+            total += di * (mc.d_state * 4 + mc.d_conv * kvb)
+        elif spec.mixer == "rwkv":
+            hd = cfg.rwkv.head_dim
+            total += (cfg.d_model // hd) * hd * hd * 4
+    return total
+
+
+def model_shard_bytes(cfg: ModelConfig, tp: int, ep: int,
+                      dtype: str = "fp8") -> float:
+    """Per-device weight bytes: dense params / tp, expert params / ep."""
+    wb = BYTES[dtype]
+    total_params = cfg.param_count()
+    if cfg.moe is None:
+        return total_params * wb / tp
+    m = cfg.moe
+    n_moe = sum(1 for s in cfg.layer_specs if s.ffn == "moe")
+    expert_params = n_moe * m.num_experts * 3 * cfg.d_model * m.d_expert
+    dense_params = total_params - expert_params
+    return (dense_params / tp + expert_params / ep) * wb
+
+
+def max_batch_by_memory(cfg: ModelConfig, p: ServingPoint, hbm_cap: float,
+                        reserve_frac: float = 0.10) -> int:
+    """Largest global batch whose KV cache fits beside the model shard
+    (paper Table 4 last row). Batch is spread over the n/tp DP-attention
+    domains."""
+    shard = model_shard_bytes(cfg, p.tp, p.ep, p.dtype)
+    free = hbm_cap * (1 - reserve_frac) - shard
+    if free <= 0:
+        return 0
+    per_req = kv_cache_bytes_per_request(cfg, p.context, p.kv_dtype)
+    per_dev = max(int(free / max(per_req, 1.0)), 0)
+    return per_dev * p.n // p.tp

@@ -1,0 +1,95 @@
+"""Pallas TPU kernel: online-softmax decode attention over a KV chunk.
+
+The decode-attention hot spot: one query token against a long KV cache.
+Memory-bandwidth-bound (every KV byte read once), so the kernel's job is to
+stream K/V HBM->VMEM in S-tiles while the softmax state (m, l, acc) stays in
+VMEM scratch across the sequential S grid axis.
+
+Layout: q [B, KH, g, hd]; k/v [B, KH, S, hd]; grid (B, KH, S/bs).
+`length` (valid KV positions) rides along as a scalar-prefetch operand.
+The cross-device sequence-parallel combine (the LSE merge over the `model`
+mesh axis) happens OUTSIDE the kernel in repro.models.layers.attention.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, out_ref,
+            m_ref, l_ref, acc_ref, *, bs: int, n_s: int):
+    s_idx = pl.program_id(2)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # [g, hd]
+    k = k_ref[0, 0].astype(jnp.float32)            # [bs, hd]
+    v = v_ref[0, 0].astype(jnp.float32)
+    hd = q.shape[-1]
+
+    s = (q @ k.T) * (hd ** -0.5)                   # [g, bs]
+    pos = s_idx * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+    valid = pos < len_ref[0]
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[...]                            # [g, 1]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    p = jnp.where(valid, p, 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + p @ v
+    m_ref[...] = m_new
+
+    @pl.when(s_idx == n_s - 1)
+    def _flush():
+        out_ref[0, 0] = (acc_ref[...] /
+                         jnp.maximum(l_ref[...], 1e-30)).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def flash_decode_pallas(q, k, v, length, *, block_s: int = 512,
+                        interpret: bool = False):
+    """q: [B, H, hd]; k/v: [B, KH, S, hd]; length: [] or [1] int32.
+    Returns [B, H, hd] (normalized — single-device path)."""
+    b, h, hd = q.shape
+    kh, s = k.shape[1], k.shape[2]
+    g = h // kh
+    bs = min(block_s, s)
+    assert s % bs == 0, (s, bs)
+    n_s = s // bs
+    qr = q.reshape(b, kh, g, hd)
+    length = jnp.asarray(length, jnp.int32).reshape(1)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, kh, n_s),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, hd), lambda b_, h_, s_, len_: (b_, h_, 0, 0)),
+            pl.BlockSpec((1, 1, bs, hd), lambda b_, h_, s_, len_: (b_, h_, s_, 0)),
+            pl.BlockSpec((1, 1, bs, hd), lambda b_, h_, s_, len_: (b_, h_, s_, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, hd), lambda b_, h_, s_, len_: (b_, h_, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel, bs=bs, n_s=n_s),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kh, g, hd), q.dtype),
+        interpret=interpret,
+    )(length, qr, k, v)
+    return out.reshape(b, h, hd)

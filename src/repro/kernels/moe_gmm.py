@@ -1,0 +1,75 @@
+"""Pallas TPU kernel: grouped expert SwiGLU matmul (the MoE FFN hot spot).
+
+The paper's expert computation (dense per-expert FFN over the A2A'd token
+buffers) is the dominant MoE compute. TPU adaptation (DESIGN.md section 3):
+instead of a CUTLASS grouped GEMM over ragged token groups, we use the
+static-capacity layout [E, T, D] produced by the dispatch scatter, tiled so
+each (expert, token-tile, f-tile) step keeps its working set in VMEM and
+feeds the MXU with 128-aligned tiles:
+
+  grid (E, T/bt, F/bf) — sequential minor axis f accumulates the down-proj
+  into a VMEM f32 accumulator; both matmuls and the SwiGLU fuse in one pass
+  over the expert's weights, so expert weights stream HBM->VMEM exactly once
+  per token-tile.
+
+VMEM per step (bt=128, bf=256, D=4096, bf16):
+  x 1 MiB + w_gate/w_up/w_down 3*2 MiB + acc f32 2 MiB  ~= 9 MiB  (< 16 MiB)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, wg_ref, wu_ref, wd_ref, out_ref, acc_ref, *, n_f: int):
+    f = pl.program_id(2)
+
+    @pl.when(f == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[0]                       # [bt, D]
+    wg = wg_ref[0]                     # [D, bf]
+    wu = wu_ref[0]
+    wd = wd_ref[0]                     # [bf, D]
+    g = jnp.dot(x, wg, preferred_element_type=jnp.float32)
+    u = jnp.dot(x, wu, preferred_element_type=jnp.float32)
+    h = (jax.nn.silu(g) * u).astype(x.dtype)
+    acc_ref[...] += jnp.dot(h, wd, preferred_element_type=jnp.float32)
+
+    @pl.when(f == n_f - 1)
+    def _flush():
+        out_ref[0] = acc_ref[...].astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "block_f", "interpret"))
+def moe_gmm_pallas(x, w_gate, w_up, w_down, *, block_t: int = 128,
+                   block_f: int = 256, interpret: bool = False):
+    """x: [E, T, D]; w_gate/w_up: [E, D, F]; w_down: [E, F, D] -> [E, T, D]."""
+    e, t, d = x.shape
+    f = w_gate.shape[-1]
+    bt = min(block_t, t)
+    bf = min(block_f, f)
+    assert t % bt == 0 and f % bf == 0, (t, bt, f, bf)
+    n_t, n_f = t // bt, f // bf
+
+    grid = (e, n_t, n_f)
+    return pl.pallas_call(
+        functools.partial(_kernel, n_f=n_f),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bt, d), lambda e_, t_, f_: (e_, t_, 0)),
+            pl.BlockSpec((1, d, bf), lambda e_, t_, f_: (e_, 0, f_)),
+            pl.BlockSpec((1, d, bf), lambda e_, t_, f_: (e_, 0, f_)),
+            pl.BlockSpec((1, bf, d), lambda e_, t_, f_: (e_, f_, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bt, d), lambda e_, t_, f_: (e_, t_, 0)),
+        out_shape=jax.ShapeDtypeStruct((e, t, d), x.dtype),
+        # f32 accumulator persisted across the sequential f grid steps
+        scratch_shapes=[pltpu.VMEM((bt, d), jnp.float32)],
+        interpret=interpret,
+    )(x, w_gate, w_up, w_down)

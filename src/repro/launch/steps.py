@@ -1,0 +1,242 @@
+"""Step builders: wrap the manual-SPMD model functions in shard_map and jit,
+and build the ShapeDtypeStruct input specs for dry-run lowering.
+
+Everything here works off GLOBAL shapes + PartitionSpec trees; actual arrays
+never materialize during a dry run (jax.eval_shape + AOT lower/compile).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.models import model as M
+from repro.models.layers.common import fsdp_spec
+from repro.sharding.dist import Dist, NullDist
+from repro.sharding.plans import ShardingPlan, make_plan
+from repro.training import optim
+
+
+def dist_for(mesh) -> Dist:
+    if mesh is None:
+        return NullDist()
+    return Dist(dict(zip(mesh.axis_names, mesh.devices.shape)))
+
+
+def _is_p(x):
+    return isinstance(x, P)
+
+
+# ---------------------------------------------------------------------------
+# abstract init (global shapes, no allocation)
+# ---------------------------------------------------------------------------
+
+def abstract_model(cfg: ModelConfig, plan: ShardingPlan):
+    """(param ShapeDtypeStructs, PartitionSpec tree) without allocating."""
+    captured = {}
+
+    def f(key):
+        p, s = M.init_model(cfg, plan, key)
+        captured["specs"] = s
+        return p
+
+    shapes = jax.eval_shape(f, jax.random.PRNGKey(0))
+    return shapes, captured["specs"]
+
+
+def abstract_cache(cfg: ModelConfig, plan: ShardingPlan, batch: int,
+                   seq: int, enc_seq: int = 0):
+    captured = {}
+
+    def f():
+        c, s = M.init_cache(cfg, plan, batch, seq, enc_seq)
+        captured["specs"] = s
+        return c
+
+    shapes = jax.eval_shape(f)
+    return shapes, captured["specs"]
+
+
+def apply_fsdp_specs(shapes, specs, plan: ShardingPlan):
+    """Extend param specs with FSDP sharding where dims divide (training)."""
+    if plan.fsdp_axis is None:
+        return specs
+    return jax.tree.map(
+        lambda sh, sp: fsdp_spec(sh.shape, sp, plan), shapes, specs,
+        is_leaf=lambda x: _is_p(x))
+
+
+# ---------------------------------------------------------------------------
+# batch input specs
+# ---------------------------------------------------------------------------
+
+def batch_struct(cfg: ModelConfig, shape: ShapeCell, plan: ShardingPlan):
+    """(ShapeDtypeStruct dict, PartitionSpec dict) for one step's data batch."""
+    B, S = shape.global_batch, shape.seq_len
+    bax = plan.batch_axes
+    structs: Dict[str, Any] = {}
+    specs: Dict[str, Any] = {}
+    if shape.kind in ("train", "prefill"):
+        structs["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        specs["tokens"] = P(bax, plan.seq_axis)
+        if cfg.frontend == "vit_patches":
+            structs["patches"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_frontend_tokens, cfg.d_model), jnp.dtype(cfg.dtype))
+            specs["patches"] = P(bax, None, None)
+        if cfg.frontend == "audio_frames":
+            structs["frames"] = jax.ShapeDtypeStruct(
+                (B, S, cfg.d_model), jnp.dtype(cfg.dtype))
+            specs["frames"] = P(bax, plan.seq_axis, None)
+    else:  # decode
+        structs["tokens"] = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+        specs["tokens"] = P(bax, None)
+    return structs, specs
+
+
+# ---------------------------------------------------------------------------
+# gradient reduction
+# ---------------------------------------------------------------------------
+
+def reduce_grads(grads, specs, plan: ShardingPlan, dist: Dist):
+    """psum each grad over every mesh axis its param is replicated over."""
+    mesh_axes = plan.mesh_axes
+
+    def axes_in(spec):
+        used = set()
+        for e in spec:
+            if e is None:
+                continue
+            for a in (e if isinstance(e, tuple) else (e,)):
+                used.add(a)
+        return used
+
+    def red(g, spec):
+        for ax in mesh_axes:
+            if ax not in axes_in(spec):
+                g = dist.psum(g, ax)
+        return g
+
+    return jax.tree.map(red, grads, specs, is_leaf=lambda x: _is_p(x))
+
+
+# ---------------------------------------------------------------------------
+# step functions
+# ---------------------------------------------------------------------------
+
+def build_train_step(cfg: ModelConfig, shape: ShapeCell, plan: ShardingPlan,
+                     mesh=None, *, remat: bool = True, lr: float = 3e-4,
+                     unroll: bool = False):
+    """Returns (step_fn, in_structs, in_shardings, donate) where
+    step(params, opt_state, batch) -> (params, opt_state, loss)."""
+    dist = dist_for(mesh)
+    pshapes, pspecs = abstract_model(cfg, plan)
+    bstructs, bspecs = batch_struct(cfg, shape, plan)
+    ospecs = optim.state_specs(pspecs)
+
+    def step(params, opt_state, batch):
+        def loss_fn(p):
+            return M.train_loss(p, batch, cfg, plan, dist, remat=remat,
+                                param_specs=pspecs, unroll=unroll)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        grads = reduce_grads(grads, pspecs, plan, dist)
+        params_new, opt_new = optim.update(params, grads, opt_state, lr=lr)
+        return params_new, opt_new, loss
+
+    if mesh is not None:
+        step = jax.shard_map(step, mesh=mesh,
+                             in_specs=(pspecs, ospecs, bspecs),
+                             out_specs=(pspecs, ospecs, P()),
+                             check_vma=False)
+    step = jax.jit(step, donate_argnums=(0, 1))
+
+    oshapes = jax.eval_shape(optim.init_state, pshapes)
+    structs = (pshapes, oshapes, bstructs)
+    shardings = None
+    if mesh is not None:
+        shardings = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                                 (pspecs, ospecs, bspecs),
+                                 is_leaf=_is_p)
+    return step, structs, shardings
+
+
+def build_prefill(cfg: ModelConfig, shape: ShapeCell, plan: ShardingPlan,
+                  mesh=None, *, unroll: bool = False):
+    """step(params, batch) -> (next_token, caches)."""
+    dist = dist_for(mesh)
+    pshapes, pspecs = abstract_model(cfg, plan)
+    bstructs, bspecs = batch_struct(cfg, shape, plan)
+    enc_seq = shape.seq_len if cfg.is_encoder_decoder else 0
+    _, cspecs = abstract_cache(cfg, plan, shape.global_batch, shape.seq_len,
+                               enc_seq)
+
+    def step(params, batch):
+        return M.prefill(params, batch, cfg, plan, dist, unroll=unroll)
+
+    out_specs = (P(plan.batch_axes, None), cspecs)
+    if mesh is not None:
+        step = jax.shard_map(step, mesh=mesh, in_specs=(pspecs, bspecs),
+                             out_specs=out_specs, check_vma=False)
+    step = jax.jit(step)
+    structs = (pshapes, bstructs)
+    shardings = None
+    if mesh is not None:
+        shardings = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                                 (pspecs, bspecs), is_leaf=_is_p)
+    return step, structs, shardings
+
+
+def build_decode_step(cfg: ModelConfig, shape: ShapeCell, plan: ShardingPlan,
+                      mesh=None, *, unroll: bool = False):
+    """step(params, caches, tokens, pos) -> (next_token, caches).
+    Cache capacity = shape.seq_len; the new token lands at pos."""
+    dist = dist_for(mesh)
+    pshapes, pspecs = abstract_model(cfg, plan)
+    enc_seq = shape.seq_len if cfg.is_encoder_decoder else 0
+    cshapes, cspecs = abstract_cache(cfg, plan, shape.global_batch,
+                                     shape.seq_len, enc_seq)
+    enc_len = enc_seq
+
+    def step(params, caches, tokens, pos):
+        return M.decode_step(params, caches, tokens, pos, cfg, plan, dist,
+                             enc_len=enc_len, unroll=unroll)
+
+    tok_spec = P(plan.batch_axes, None)
+    if mesh is not None:
+        step = jax.shard_map(
+            step, mesh=mesh,
+            in_specs=(pspecs, cspecs, tok_spec, P()),
+            out_specs=(tok_spec, cspecs), check_vma=False)
+    step = jax.jit(step, donate_argnums=(1,))
+    structs = (pshapes, cshapes,
+               jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32),
+               jax.ShapeDtypeStruct((), jnp.int32))
+    shardings = None
+    if mesh is not None:
+        shardings = jax.tree.map(
+            lambda s: NamedSharding(mesh, s),
+            (pspecs, cspecs, tok_spec, P()), is_leaf=_is_p)
+    return step, structs, shardings
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeCell, mesh,
+               *, fsdp: bool = True, unroll: bool = False, plan_kw=None):
+    """One dry-run cell: returns (step, structs, shardings, plan)."""
+    axes = mesh.axis_names
+    sizes = mesh.devices.shape
+    plan = make_plan(cfg, shape, tuple(axes), tuple(sizes), fsdp=fsdp,
+                     **(plan_kw or {}))
+    if shape.kind == "train":
+        step, structs, sh = build_train_step(cfg, shape, plan, mesh,
+                                             unroll=unroll)
+    elif shape.kind == "prefill":
+        step, structs, sh = build_prefill(cfg, shape, plan, mesh,
+                                          unroll=unroll)
+    else:
+        step, structs, sh = build_decode_step(cfg, shape, plan, mesh,
+                                              unroll=unroll)
+    return step, structs, sh, plan

@@ -1,0 +1,178 @@
+"""Mamba-1 block (jamba's sequence mixer) with Megatron-SP distribution.
+
+The selective-scan channels are independent, so d_inner is tensor-parallel
+over `model`: AG(x over seq) -> column-sharded in_proj -> depthwise causal
+conv -> chunked selective scan over the FULL sequence locally (no cross-rank
+recurrence) -> row-sharded out_proj -> RS(seq).
+
+Decode keeps per-rank states (conv ring [B, d_conv-1, di_loc], ssm state
+[B, di_loc, ds]) so the prefill cache layout matches decode exactly.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers.common import dtype_of
+from repro.sharding.dist import Dist
+from repro.sharding.plans import ShardingPlan
+
+
+def _dims(cfg):
+    mc = cfg.mamba
+    di = mc.expand * cfg.d_model
+    dtr = mc.dt_rank or -(-cfg.d_model // 16)
+    return di, dtr, mc.d_state, mc.d_conv
+
+
+def init_mamba(cfg, plan: ShardingPlan, key):
+    d = cfg.d_model
+    di, dtr, ds, dc = _dims(cfg)
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 8)
+    sc = d ** -0.5
+    params = {
+        "w_x": jax.random.normal(ks[0], (d, di), dt) * sc,
+        "w_z": jax.random.normal(ks[1], (d, di), dt) * sc,
+        "conv_w": jax.random.normal(ks[2], (dc, di), dt) * 0.2,
+        "conv_b": jnp.zeros((di,), dt),
+        "w_bc": jax.random.normal(ks[3], (di, 2 * ds), dt) * (di ** -0.5),
+        "w_dt_in": jax.random.normal(ks[4], (di, dtr), dt) * (di ** -0.5),
+        "w_dt": jax.random.normal(ks[5], (dtr, di), dt) * (dtr ** -0.5),
+        "dt_bias": jnp.full((di,), -4.6, dt),          # softplus^-1(0.01)
+        "log_a": jnp.log(jnp.tile(jnp.arange(1, ds + 1, dtype=jnp.float32), (di, 1))),
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "w_out": jax.random.normal(ks[6], (di, d), dt) * (di ** -0.5),
+    }
+    tp = plan.tp_axis
+    specs = {
+        "w_x": P(None, tp), "w_z": P(None, tp),
+        "conv_w": P(None, tp), "conv_b": P(tp),
+        "w_bc": P(tp, None),
+        "w_dt_in": P(tp, None), "w_dt": P(None, tp), "dt_bias": P(tp),
+        "log_a": P(tp, None), "d_skip": P(tp),
+        "w_out": P(tp, None),
+    }
+    return params, specs
+
+
+def _ssm_scan(u, dt_, b, c, log_a, d_skip, h0, chunk: int = 128):
+    """Selective scan. u/dt_: [B, S, di]; b/c: [B, S, ds]; h0: [B, di, ds].
+    Returns (y [B, S, di] f32, h_final)."""
+    B, S, di = u.shape
+    ds = b.shape[-1]
+    a = -jnp.exp(log_a)                                        # [di, ds]
+    da = jnp.exp(dt_[..., None] * a)                           # [B,S,di,ds]
+    dbu = (dt_ * u)[..., None] * b[:, :, None, :]              # [B,S,di,ds]
+
+    ck = min(chunk, S)
+    pad = (-S) % ck
+    if pad:
+        da = jnp.pad(da, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=1.0)
+        dbu = jnp.pad(dbu, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+    n = (S + pad) // ck
+    da = da.reshape(B, n, ck, di, ds).transpose(1, 0, 2, 3, 4)
+    dbu = dbu.reshape(B, n, ck, di, ds).transpose(1, 0, 2, 3, 4)
+    cc = c.reshape(B, n, ck, ds).transpose(1, 0, 2, 3)
+
+    def chunk_body(h, inp):
+        da_c, dbu_c, c_c = inp                                 # [B, ck, di, ds]
+
+        def combine(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a1 * a2, b1 * a2 + b2
+
+        a_cum, b_cum = jax.lax.associative_scan(combine, (da_c, dbu_c), axis=1)
+        h_seq = a_cum * h[:, None] + b_cum                     # [B, ck, di, ds]
+        y_c = jnp.einsum("bsdn,bsn->bsd", h_seq, c_c)          # [B, ck, di]
+        return h_seq[:, -1], y_c
+
+    h_fin, y = jax.lax.scan(chunk_body, h0, (da, dbu, cc))
+    y = y.transpose(1, 0, 2, 3).reshape(B, n * ck, di)[:, :S]
+    return y + u * d_skip, h_fin
+
+
+def mamba_fwd(params, x, cfg, plan: ShardingPlan, dist: Dist, *,
+              make_cache: bool = False):
+    """x: [B, S_loc, D] seq-sharded. Returns (y [B, S_loc, D], cache|None)."""
+    di, dtr, ds, dc = _dims(cfg)
+    seq_ax = plan.seq_axis
+    B, s_loc, d = x.shape
+    xg = dist.all_gather(x, seq_ax, dim=1)                    # [B, S, D]
+    S = xg.shape[1]
+
+    u = xg @ params["w_x"]                                     # [B, S, di_loc]
+    z = xg @ params["w_z"]
+    # depthwise causal conv over S
+    conv_w = params["conv_w"]                                  # [dc, di_loc]
+    u_pad = jnp.pad(u, ((0, 0), (dc - 1, 0), (0, 0)))
+    conv = sum(u_pad[:, i:i + S] * conv_w[i] for i in range(dc)) + params["conv_b"]
+    uc = jax.nn.silu(conv.astype(jnp.float32)).astype(u.dtype)
+
+    bc = uc @ params["w_bc"]
+    b, c = jnp.split(bc.astype(jnp.float32), 2, axis=-1)       # [B, S, ds]
+    dt_ = jax.nn.softplus(
+        ((uc @ params["w_dt_in"]) @ params["w_dt"]).astype(jnp.float32)
+        + params["dt_bias"].astype(jnp.float32))
+
+    h0 = jnp.zeros((B, u.shape[-1], ds), jnp.float32)
+    y, h_fin = _ssm_scan(uc.astype(jnp.float32), dt_, b, c,
+                         params["log_a"], params["d_skip"], h0)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = y @ params["w_out"]
+    out = dist.reduce_scatter(out, seq_ax, dim=1)
+
+    cache = None
+    if make_cache:
+        conv_tail = jnp.pad(u, ((0, 0), (dc - 1, 0), (0, 0)))[:, -(dc - 1):] \
+            if dc > 1 else jnp.zeros((B, 0, u.shape[-1]), u.dtype)
+        cache = {"conv": conv_tail, "ssm": h_fin.astype(jnp.float32)}
+    return out, cache
+
+
+def mamba_decode(params, x, cache, cfg, plan: ShardingPlan, dist: Dist):
+    """x: [B, 1, D] replicated over tp; cache: conv [B, dc-1, di_loc],
+    ssm [B, di_loc, ds]."""
+    di, dtr, ds, dc = _dims(cfg)
+    B = x.shape[0]
+    xt = x[:, 0]
+    u = xt @ params["w_x"]                                     # [B, di_loc]
+    z = xt @ params["w_z"]
+
+    conv_in = jnp.concatenate([cache["conv"], u[:, None]], axis=1)  # [B, dc, di]
+    conv = jnp.einsum("bcd,cd->bd", conv_in, params["conv_w"]) + params["conv_b"]
+    uc = jax.nn.silu(conv.astype(jnp.float32)).astype(u.dtype)
+
+    bc = uc @ params["w_bc"]
+    b, c = jnp.split(bc.astype(jnp.float32), 2, axis=-1)       # [B, ds]
+    dt_ = jax.nn.softplus(
+        ((uc @ params["w_dt_in"]) @ params["w_dt"]).astype(jnp.float32)
+        + params["dt_bias"].astype(jnp.float32))               # [B, di]
+
+    a = -jnp.exp(params["log_a"])
+    da = jnp.exp(dt_[..., None] * a)                           # [B, di, ds]
+    h = cache["ssm"] * da + (dt_ * uc.astype(jnp.float32))[..., None] * b[:, None, :]
+    y = jnp.einsum("bdn,bn->bd", h, c) + uc.astype(jnp.float32) * params["d_skip"]
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = y @ params["w_out"]
+    out = dist.psum(out, plan.tp_axis)
+    new_cache = {"conv": conv_in[:, 1:], "ssm": h}
+    return out[:, None], new_cache
+
+
+def mamba_cache_spec(cfg, plan: ShardingPlan, batch: int):
+    """ShapeDtypeStructs + PartitionSpecs for the decode cache."""
+    di, dtr, ds, dc = _dims(cfg)
+    tp = plan.tp_axis
+    bax = plan.batch_axes
+    shapes = {
+        "conv": jax.ShapeDtypeStruct((batch, dc - 1, di), jnp.dtype(cfg.dtype)),
+        "ssm": jax.ShapeDtypeStruct((batch, di, ds), jnp.float32),
+    }
+    specs = {"conv": P(bax, None, tp), "ssm": P(bax, tp, None)}
+    return shapes, specs

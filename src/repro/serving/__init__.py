@@ -1,0 +1,4 @@
+"""Serving runtime: continuous-batching engine, KV-cache management,
+dual-batch-overlap step, speculative decoding."""
+from repro.serving.engine import Engine, Request
+from repro.serving.specdec import SDDecoder

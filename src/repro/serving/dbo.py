@@ -1,0 +1,97 @@
+"""Dual-batch overlap serve step (paper section 2.3, Fig 4).
+
+The batch splits into two microbatches; the stack applies layer i to
+microbatch A, then layer i to microbatch B, alternating. A's MoE all-to-all
+is data-independent of B's attention/FFN compute (and vice versa), so XLA's
+latency-hiding scheduler can overlap the collective of one microbatch with
+the compute of the other — the structural analogue of DeepSeek's dual-stream
+DBO, expressed in one SPMD program.
+
+``core/overlap.py`` quantifies the expected gain analytically; this module
+is the runnable counterpart whose lowered HLO exhibits the interleaving
+(benchmarks/dryrun_dbo.py counts independent collective/compute pairs).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.models import transformer as tf
+from repro.models.layers import common
+from repro.sharding.dist import Dist
+from repro.sharding.plans import ShardingPlan
+
+
+def _interleaved_stack(params, xa, xb, cfg: ModelConfig, plan, dist, *,
+                       caches_a, caches_b, pos):
+    """Apply the decoder stack to two microbatches, layer-interleaved."""
+    period = cfg.period
+    n_per = cfg.n_periods
+    n_rem = cfg.n_remainder
+
+    def one_period(xa, xb, pparams, pca, pcb):
+        nca, ncb = [], []
+        for i, spec in enumerate(period):
+            p_i = pparams[i]
+            xa, ca, _ = tf.apply_layer(spec, p_i, xa, cfg, plan, dist,
+                                       mode="decode", cache=pca[i], pos=pos)
+            xb, cb, _ = tf.apply_layer(spec, p_i, xb, cfg, plan, dist,
+                                       mode="decode", cache=pcb[i], pos=pos)
+            nca.append(ca)
+            ncb.append(cb)
+        return xa, xb, tuple(nca), tuple(ncb)
+
+    new_pa = new_pb = None
+    if n_per > 0:
+        def body(carry, xs):
+            xa, xb = carry
+            pparams, pca, pcb = xs
+            xa, xb, nca, ncb = one_period(xa, xb, pparams, pca, pcb)
+            return (xa, xb), (nca, ncb)
+
+        (xa, xb), (new_pa, new_pb) = jax.lax.scan(
+            body, (xa, xb),
+            (params["stack"]["periods"], caches_a["periods"],
+             caches_b["periods"]))
+
+    new_ra, new_rb = [], []
+    for i in range(n_rem):
+        p_i = params["stack"]["rem"][i]
+        xa, ca, _ = tf.apply_layer(period[i], p_i, xa, cfg, plan, dist,
+                                   mode="decode", cache=caches_a["rem"][i],
+                                   pos=pos)
+        xb, cb, _ = tf.apply_layer(period[i], p_i, xb, cfg, plan, dist,
+                                   mode="decode", cache=caches_b["rem"][i],
+                                   pos=pos)
+        new_ra.append(ca)
+        new_rb.append(cb)
+
+    ca = {"periods": new_pa if new_pa is not None else (),
+          "rem": tuple(new_ra)}
+    cb = {"periods": new_pb if new_pb is not None else (),
+          "rem": tuple(new_rb)}
+    return xa, xb, ca, cb
+
+
+def dbo_decode_step(params, caches_a, caches_b, tok_a, tok_b, pos,
+                    cfg: ModelConfig, plan: ShardingPlan, dist: Dist):
+    """One DBO decode step over two microbatches.
+
+    tok_a/tok_b: [B/2, 1]; caches_*: per-microbatch cache trees.
+    Returns (next_a, next_b, caches_a, caches_b).
+    """
+    xa = common.embed(params["embed"], tok_a, cfg, plan, dist)
+    xb = common.embed(params["embed"], tok_b, cfg, plan, dist)
+    xa, xb, ca, cb = _interleaved_stack(params, xa, xb, cfg, plan, dist,
+                                        caches_a=caches_a, caches_b=caches_b,
+                                        pos=pos)
+    out = []
+    for x in (xa, xb):
+        x = common.rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+        logits = common.lm_logits(params["embed"], x, cfg, plan, dist)
+        out.append(common.greedy_sample(logits, cfg, plan, dist))
+    return out[0], out[1], ca, cb

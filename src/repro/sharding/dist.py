@@ -1,0 +1,109 @@
+"""Distribution context: one abstraction for single-device and shard_map SPMD.
+
+The whole model runs inside ONE ``jax.shard_map`` region (manual SPMD): every
+collective is explicit, so the lowered HLO contains exactly the all-to-all /
+all-gather / reduce-scatter / all-reduce traffic the paper reasons about, and
+the roofline's collective-bytes term is faithful.
+
+``Dist`` wraps the ``jax.lax`` collectives with the mesh axis names; the
+``NullDist`` implements them as identities so the identical model code runs
+on a single CPU device for smoke tests / the serving example.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+AxisName = Union[str, Tuple[str, ...]]
+
+
+class Dist:
+    """Collective ops bound to mesh axis names inside a shard_map region."""
+
+    def __init__(self, axis_sizes: dict[str, int]):
+        self._sizes = dict(axis_sizes)
+
+    # ------------- topology -------------
+    def size(self, axis: Optional[AxisName]) -> int:
+        if axis is None:
+            return 1
+        if isinstance(axis, tuple):
+            n = 1
+            for a in axis:
+                n *= self._sizes.get(a, 1)
+            return n
+        return self._sizes.get(axis, 1)
+
+    def index(self, axis: Optional[AxisName]):
+        if axis is None or self.size(axis) == 1:
+            return jnp.int32(0)
+        return lax.axis_index(axis)
+
+    # ------------- collectives -------------
+    def psum(self, x, axis: Optional[AxisName]):
+        if axis is None or self.size(axis) == 1:
+            return x
+        return lax.psum(x, axis)
+
+    def pmax(self, x, axis: Optional[AxisName]):
+        if axis is None or self.size(axis) == 1:
+            return x
+        return lax.pmax(x, axis)
+
+    def all_gather(self, x, axis: Optional[AxisName], dim: int = 0):
+        """Tiled all-gather along array dim `dim` over mesh axis `axis`."""
+        if axis is None or self.size(axis) == 1:
+            return x
+        return lax.all_gather(x, axis, axis=dim, tiled=True)
+
+    def reduce_scatter(self, x, axis: Optional[AxisName], dim: int = 0):
+        """Tiled psum_scatter along array dim `dim` over mesh axis `axis`."""
+        if axis is None or self.size(axis) == 1:
+            return x
+        return lax.psum_scatter(x, axis, scatter_dimension=dim, tiled=True)
+
+    def all_to_all(self, x, axis: Optional[AxisName], split_dim: int, concat_dim: int):
+        if axis is None or self.size(axis) == 1:
+            return x
+        return lax.all_to_all(x, axis, split_axis=split_dim,
+                              concat_axis=concat_dim, tiled=True)
+
+    def ppermute(self, x, axis: Optional[AxisName], perm: Sequence[Tuple[int, int]]):
+        if axis is None or self.size(axis) == 1:
+            return x
+        return lax.ppermute(x, axis, perm)
+
+    def roll(self, x, axis: Optional[AxisName], shift: int = 1):
+        """Ring shift: rank r -> rank (r+shift) % n."""
+        n = self.size(axis)
+        if axis is None or n == 1:
+            return x
+        perm = [(i, (i + shift) % n) for i in range(n)]
+        return lax.ppermute(x, axis, perm)
+
+
+class NullDist(Dist):
+    """Single-device stand-in: every collective is the identity."""
+
+    def __init__(self):
+        super().__init__({})
+
+    def size(self, axis):
+        return 1
+
+    def index(self, axis):
+        return jnp.int32(0)
+
+
+def argmax_across(dist: Dist, values, indices, axis: Optional[AxisName]):
+    """Global argmax over a sharded dimension: values/indices are the local
+    winners; returns the global winning index (ties -> lowest index)."""
+    if axis is None or dist.size(axis) == 1:
+        return indices
+    vmax = dist.pmax(values, axis)
+    # lowest global index among ties
+    cand = jnp.where(values >= vmax, indices, jnp.iinfo(jnp.int32).max)
+    return -dist.pmax(-cand, axis)

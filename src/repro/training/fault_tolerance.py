@@ -1,0 +1,77 @@
+"""Failure handling: checkpoint-backed recovery loop + failure injection.
+
+Large-fleet training treats worker failure as routine: detect at a step
+boundary, restore the last atomic checkpoint, resume the (deterministic,
+seekable) data stream at the restored step. This module provides:
+
+  * WorkerFailure — the exception class the runtime surfaces;
+  * FailureInjector — deterministic fault injection for tests/drills;
+  * run_with_recovery — the driver loop: catches failures mid-run,
+    restores, and continues until the target step, bounded by
+    `max_restarts` (a crash-looping job must page a human, not spin).
+
+Straggler policy lives in training/data.py (DeadlineIterator): a slow
+batch producer is skipped, not waited for. Hardware-level straggler
+mitigation on a real fleet adds per-step all-reduce deadlines; the decision
+logic is the same and is exercised here through the injector.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional
+
+from repro.training.data import SyntheticLM
+from repro.training.train_loop import Trainer
+
+
+class WorkerFailure(RuntimeError):
+    """A worker (or its host / link) died during a step."""
+
+
+@dataclass
+class FailureInjector:
+    """Raise WorkerFailure at the configured step indices (once each)."""
+    fail_at: List[int] = field(default_factory=list)
+    fired: List[int] = field(default_factory=list)
+
+    def check(self, step: int):
+        if step in self.fail_at and step not in self.fired:
+            self.fired.append(step)
+            raise WorkerFailure(f"injected failure at step {step}")
+
+
+@dataclass
+class RecoveryReport:
+    restarts: int
+    completed_steps: int
+    losses: List[float]
+    recovery_log: List[str]
+
+
+def run_with_recovery(trainer: Trainer, data: SyntheticLM, n_steps: int, *,
+                      injector: Optional[FailureInjector] = None,
+                      max_restarts: int = 5) -> RecoveryReport:
+    """Drive training to `n_steps`, recovering from WorkerFailure by
+    restoring the latest checkpoint. Requires trainer.tc.ckpt_every > 0."""
+    assert trainer.tc.ckpt_every > 0 and trainer.tc.ckpt_dir, \
+        "recovery needs periodic checkpoints"
+    restarts = 0
+    log: List[str] = []
+    # initial checkpoint so step-0 failures are recoverable
+    trainer.save()
+    while trainer.step_idx < n_steps:
+        try:
+            tokens = data.batch(trainer.step_idx)
+            if injector is not None:
+                injector.check(trainer.step_idx)
+            trainer.train_step(tokens)
+        except WorkerFailure as e:
+            restarts += 1
+            if restarts > max_restarts:
+                raise RuntimeError(
+                    f"exceeded {max_restarts} restarts; aborting") from e
+            at = trainer.restore()
+            log.append(f"{e} -> restored step {at} (restart {restarts})")
+    return RecoveryReport(restarts=restarts, completed_steps=trainer.step_idx,
+                          losses=trainer.losses, recovery_log=log)

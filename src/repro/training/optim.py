@@ -1,0 +1,54 @@
+"""Minimal sharded AdamW (f32 moments over possibly-bf16 params).
+
+Moments carry the same sharding specs as their parameters, so the optimizer
+update is fully local on every rank; gradient reduction happens before
+(see launch.steps.reduce_grads).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: dict
+    v: dict
+
+
+def init_state(params):
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros,
+                      v=jax.tree.map(jnp.copy, zeros))
+
+
+def state_specs(param_specs):
+    return AdamWState(step=P(), m=param_specs,
+                      v=jax.tree.map(lambda s: s, param_specs,
+                                     is_leaf=lambda s: isinstance(s, P)))
+
+
+def update(params, grads, state: AdamWState, *, lr=3e-4, b1=0.9, b2=0.95,
+           eps=1e-8, weight_decay=0.1):
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+
+    m_new = jax.tree.map(
+        lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+        state.m, grads)
+    v_new = jax.tree.map(
+        lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+        state.v, grads)
+
+    def upd(p, m, v):
+        delta = (m / bc1) / (jnp.sqrt(v / bc2) + eps) \
+            + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+    params_new = jax.tree.map(upd, params, m_new, v_new)
+    return params_new, AdamWState(step=step, m=m_new, v=v_new)

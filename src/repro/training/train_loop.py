@@ -1,0 +1,168 @@
+"""Training driver: init -> (accumulate microbatches -> update) -> log /
+checkpoint -> resume. Works single-device (NullDist) and under shard_map on
+a mesh (launch.steps builds the production-mesh step; this loop is the
+driver around either).
+
+Fault-tolerance contract (training/fault_tolerance.py drives it):
+  * checkpoints are atomic (checkpoint.py) and carried with the data step
+    counter, so a restart resumes the exact stream position;
+  * the step function is pure (params, opt, batch) -> (params, opt, loss):
+    a failed step leaves no partial state.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.sharding.dist import Dist, NullDist
+from repro.sharding.plans import ShardingPlan, null_plan
+from repro.training import checkpoint as ckpt
+from repro.training import compression, optim
+from repro.training.data import SyntheticLM
+
+
+@dataclass
+class TrainConfig:
+    lr: float = 3e-4
+    microbatches: int = 1          # gradient accumulation factor
+    remat: bool = False
+    grad_compress: bool = False    # int8 + error feedback on reduction axes
+    log_every: int = 10
+    ckpt_every: int = 0            # 0 = off
+    ckpt_dir: str = ""
+    ckpt_keep: int = 3
+    seed: int = 0
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, tc: TrainConfig, *,
+                 plan: Optional[ShardingPlan] = None,
+                 dist: Optional[Dist] = None):
+        self.cfg = cfg
+        self.tc = tc
+        self.plan = plan or null_plan("train")
+        self.dist = dist or NullDist()
+        key = jax.random.PRNGKey(tc.seed)
+        self.params, self.pspecs = M.init_model(cfg, self.plan, key)
+        self.opt_state = optim.init_state(self.params)
+        self.err_state = (compression.init_error_state(self.params)
+                          if tc.grad_compress else None)
+        self.step_idx = 0
+        self.losses: List[float] = []
+        self._step = jax.jit(self._build_step(), donate_argnums=(0, 1, 3))
+
+    # ------------------------------------------------------------------
+
+    def _build_step(self):
+        cfg, tc, plan, dist = self.cfg, self.tc, self.plan, self.dist
+
+        def loss_fn(p, batch):
+            return M.train_loss(p, batch, cfg, plan, dist, remat=tc.remat)
+
+        def reduce(g, err):
+            """Reduce grads over replicated axes; int8-compress the psum on
+            the slowest axis (pod > data) when enabled."""
+            axes = [a for a in plan.mesh_axes if a in ("pod", "data")]
+            if not axes:
+                return g, err
+            if not tc.grad_compress:
+                for a in axes:
+                    g = jax.tree.map(lambda x: dist.psum(x, a), g)
+                return g, err
+            slow = axes[0]
+            fast = axes[1:]
+            for a in fast:
+                g = jax.tree.map(lambda x: dist.psum(x, a), g)
+            pairs = jax.tree.map(
+                lambda x, e: compression.compressed_psum(x, slow, dist, e),
+                g, err)
+            g = jax.tree.map(lambda pr: pr[0], pairs,
+                             is_leaf=lambda x: isinstance(x, tuple))
+            err = jax.tree.map(lambda pr: pr[1], pairs,
+                               is_leaf=lambda x: isinstance(x, tuple))
+            return g, err
+
+        def step(params, opt_state, batch, err_state):
+            """batch tokens: [mb, B/mb, S] — scan accumulates microbatch
+            grads (the microbatch A2A/AR of step i overlaps step i+1's
+            compute under XLA's scheduler)."""
+            def one(acc, mb):
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                return (jax.tree.map(jnp.add, acc[0], g), acc[1] + l), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), _ = jax.lax.scan(one, (zeros, 0.0), batch)
+            n = batch["tokens"].shape[0]
+            grads = jax.tree.map(lambda g: g / n, gsum)
+            grads, err_state = reduce(grads, err_state)
+            params, opt_state = optim.update(params, grads, opt_state,
+                                             lr=tc.lr)
+            return params, opt_state, lsum / n, err_state
+
+        return step
+
+    # ------------------------------------------------------------------
+
+    def _shape_batch(self, tokens: np.ndarray) -> Dict[str, jnp.ndarray]:
+        mb = self.tc.microbatches
+        B, S = tokens.shape
+        assert B % mb == 0, (B, mb)
+        batch = {"tokens": jnp.asarray(tokens).reshape(mb, B // mb, S)}
+        if self.cfg.frontend == "vit_patches":
+            batch["patches"] = jnp.zeros(
+                (mb, B // mb, self.cfg.n_frontend_tokens, self.cfg.d_model),
+                jnp.dtype(self.cfg.dtype))
+        if self.cfg.frontend == "audio_frames":
+            batch["frames"] = jnp.zeros(
+                (mb, B // mb, S, self.cfg.d_model), jnp.dtype(self.cfg.dtype))
+        return batch
+
+    def train_step(self, tokens: np.ndarray) -> float:
+        batch = self._shape_batch(tokens)
+        self.params, self.opt_state, loss, self.err_state = self._step(
+            self.params, self.opt_state, batch, self.err_state)
+        self.step_idx += 1
+        loss = float(loss)
+        self.losses.append(loss)
+        if self.tc.ckpt_every and self.step_idx % self.tc.ckpt_every == 0:
+            self.save()
+        return loss
+
+    # ------------------------------------------------------------------
+    # checkpoint / resume
+    # ------------------------------------------------------------------
+
+    def _state_tree(self):
+        return {"params": self.params, "opt": self.opt_state}
+
+    def save(self):
+        assert self.tc.ckpt_dir, "ckpt_dir not configured"
+        ckpt.save(self._state_tree(), self.tc.ckpt_dir, self.step_idx)
+        ckpt.prune_old(self.tc.ckpt_dir, self.tc.ckpt_keep)
+
+    def restore(self, step: Optional[int] = None) -> int:
+        state, at = ckpt.restore(self._state_tree(), self.tc.ckpt_dir, step)
+        self.params, self.opt_state = state["params"], state["opt"]
+        self.step_idx = at
+        return at
+
+    def run(self, data: SyntheticLM, n_steps: int, *,
+            log: Callable[[str], None] = print) -> List[float]:
+        t0 = time.time()
+        while self.step_idx < n_steps:
+            tokens = data.batch(self.step_idx)
+            loss = self.train_step(tokens)
+            if self.tc.log_every and self.step_idx % self.tc.log_every == 0:
+                dt = time.time() - t0
+                log(f"step {self.step_idx:5d} loss {loss:.4f} "
+                    f"({dt / max(self.step_idx, 1):.2f}s/step)")
+        return self.losses

@@ -1,0 +1,175 @@
+"""TCO model, workload op-lists, and optimizer trend checks against the
+paper's first-order rules of thumb (paper section 4.1, Table 4)."""
+import dataclasses
+
+import pytest
+
+from repro.configs import get_arch
+from repro.core import (H100, BLACKWELL, Scenario, best_of_opts,
+                        make_cluster, max_throughput)
+from repro.core import tco, workload
+from repro.core.specdec import SpecDecConfig, sd_tpot
+from repro.core.workload import ServingPoint
+
+
+@pytest.fixture(scope="module")
+def dsv3():
+    return get_arch("deepseek-v3")
+
+
+# a reduced DeepSeek-V3-like config keeps optimizer tests fast
+@pytest.fixture(scope="module")
+def dsv3_small(dsv3):
+    return dsv3.replace(num_layers=8)
+
+
+# ---------------------------------------------------------------------------
+# TCO
+# ---------------------------------------------------------------------------
+
+def test_switchless_has_zero_switch_cost():
+    for topo in ("torus", "fullmesh"):
+        t = tco.cluster_tco(make_cluster(topo, 64, H100))
+        assert t.monthly_switch == 0.0
+
+
+def test_scaleup_network_share():
+    """Scale-up network should be a noticeable share of TCO (the premise of
+    the whole paper) but not dominate the XPU cost."""
+    t = tco.cluster_tco(make_cluster("scale-up", 64, H100))
+    share = t.monthly_network / t.total(1.0)
+    assert 0.10 < share < 0.45, share
+
+
+def test_two_level_fat_tree_cost_jump():
+    """Past 64 XPUs the scale-up network needs a two-level fat-tree; the
+    per-XPU network cost must jump (paper section 4.3.2)."""
+    t64 = tco.cluster_tco(make_cluster("scale-up", 64, H100))
+    t256 = tco.cluster_tco(make_cluster("scale-up", 256, H100))
+    assert t256.monthly_network / 256 > 1.5 * t64.monthly_network / 64
+
+
+def test_adjustment_factor():
+    cl = make_cluster("scale-up", 64, H100)
+    t = tco.cluster_tco(cl)
+    assert t.total(0.0) < t.total(0.5) < t.total(1.0) < t.total(2.0)
+    assert t.total(0.0) == pytest.approx(t.monthly_xpu + t.monthly_energy_xpu)
+
+
+def test_lower_bandwidth_costs_less():
+    hi = tco.cluster_tco(make_cluster("scale-up", 64, H100, link_bw=450e9))
+    lo = tco.cluster_tco(make_cluster("scale-up", 64, H100, link_bw=150e9))
+    assert lo.monthly_network < hi.monthly_network
+
+
+# ---------------------------------------------------------------------------
+# workload (Table 4 relationships)
+# ---------------------------------------------------------------------------
+
+def test_kv_cache_scales_with_context(dsv3):
+    k1 = workload.kv_cache_bytes_per_request(dsv3, 512)
+    k2 = workload.kv_cache_bytes_per_request(dsv3, 4096)
+    assert k2 == pytest.approx(8 * k1, rel=1e-6)
+
+
+def test_mla_kv_much_smaller_than_gqa(dsv3):
+    """MLA at ctx 8192 ~ 1 GB/request claim check (paper section 4.1.2:
+    '~1 GB per request' at context 8192 with fp16-ish cache)."""
+    kv = workload.kv_cache_bytes_per_request(dsv3, 8192)
+    assert 0.03e9 < kv < 1.2e9
+
+
+def test_max_batch_shrinks_with_context(dsv3):
+    p = ServingPoint(batch_global=1, context=512, ep=64, n_devices=64)
+    b_short = workload.max_batch_by_memory(dsv3, p, H100.hbm_cap)
+    p_long = dataclasses.replace(p, context=4096)
+    b_long = workload.max_batch_by_memory(dsv3, p_long, H100.hbm_cap)
+    assert b_long < b_short
+    assert b_short > 0
+
+
+def test_a2a_message_grows_with_batch(dsv3):
+    p1 = ServingPoint(batch_global=1024, context=512, ep=64, n_devices=64)
+    p2 = dataclasses.replace(p1, batch_global=2048)
+    m1 = [o for o in workload.decode_iteration(dsv3, p1)
+          if o.kind == "a2a"][0].m_bytes
+    m2 = [o for o in workload.decode_iteration(dsv3, p2)
+          if o.kind == "a2a"][0].m_bytes
+    assert m2 == pytest.approx(2 * m1)
+
+
+def test_moe_arch_emits_a2a_dense_does_not():
+    dense = get_arch("deepseek-67b")
+    p = ServingPoint(batch_global=512, context=512, ep=64, n_devices=64)
+    kinds = {o.kind for o in workload.decode_iteration(dense,
+             dataclasses.replace(p, ep=1, tp=8, n_devices=64))}
+    assert "a2a" not in kinds
+    moe_kinds = {o.kind for o in workload.decode_iteration(
+        get_arch("olmoe-1b-7b"), p)}
+    assert "a2a" in moe_kinds
+
+
+# ---------------------------------------------------------------------------
+# optimizer trends (paper section 4.1)
+# ---------------------------------------------------------------------------
+
+def test_throughput_increases_with_tpot_budget(dsv3_small):
+    cl = make_cluster("scale-up", 64, H100)
+    thr = []
+    for t in (15.0, 40.0, 100.0):
+        op = max_throughput(cl, dsv3_small, Scenario(t, 512))
+        assert op is not None
+        thr.append(op.throughput)
+    assert thr[0] < thr[1] <= thr[2]
+
+
+def test_long_context_reduces_throughput(dsv3_small):
+    cl = make_cluster("scale-up", 64, H100)
+    short = max_throughput(cl, dsv3_small, Scenario(40, 512))
+    long_ = max_throughput(cl, dsv3_small, Scenario(40, 4096))
+    assert long_.throughput < short.throughput
+
+
+def test_dbo_helps_at_relaxed_slo(dsv3_small):
+    """DBO must close (most of) the 450 vs 150 GB/s gap at TPOT=100ms
+    (paper Fig 11a)."""
+    sc = Scenario(100, 512)
+    hi = make_cluster("scale-up", 64, H100, link_bw=450e9)
+    lo = make_cluster("scale-up", 64, H100, link_bw=150e9)
+    no_lo = best_of_opts(lo, dsv3_small, sc, opts="noopt")
+    dbo_lo = best_of_opts(lo, dsv3_small, sc, opts="dbo")
+    dbo_hi = best_of_opts(hi, dsv3_small, sc, opts="dbo")
+    assert dbo_lo.throughput >= no_lo.throughput
+    # gap after DBO must be small relative to the hi-BW throughput
+    assert dbo_lo.throughput > 0.8 * dbo_hi.throughput
+
+
+def test_sd_required_for_tight_slo(dsv3):
+    """TPOT=15ms with full DeepSeek-V3: SD extends the reachable SLO
+    (paper: 'SD is necessary to meet the SLO of TPOT=15ms')."""
+    cl = make_cluster("torus", 64, H100)
+    sc = Scenario(15, 512)
+    no = best_of_opts(cl, dsv3, sc, opts="dbo")
+    sd = best_of_opts(cl, dsv3, sc, opts="dbo+sd")
+    assert sd is not None
+    if no is not None:
+        assert sd.throughput >= no.throughput
+
+
+def test_sd_tpot_formula():
+    sd = SpecDecConfig(spec_m=4, spec_p=0.8)
+    assert sd_tpot(0.010, 0.014, sd) == pytest.approx(0.024 / 3.2)
+
+
+def test_blackwell_faster_than_hopper(dsv3_small):
+    sc = Scenario(40, 512)
+    h = max_throughput(make_cluster("scale-up", 64, H100), dsv3_small, sc)
+    b = max_throughput(make_cluster("scale-up", 64, BLACKWELL), dsv3_small,
+                       sc)
+    assert b.throughput > h.throughput
+
+
+def test_exposed_comm_nonnegative(dsv3_small):
+    cl = make_cluster("torus", 64, H100)
+    op = max_throughput(cl, dsv3_small, Scenario(40, 512), dbo=True)
+    assert op.exposed_comm >= 0.0

@@ -1,0 +1,133 @@
+"""Table 3 ground truth: our A2A cost formulas must reproduce the paper's
+coefficients exactly, and the alpha-beta model must behave sanely."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import alphabeta as ab
+from repro.core import collectives as coll
+from repro.core.hardware import H100
+from repro.core.topology import make_cluster
+
+
+# ---------------------------------------------------------------------------
+# paper Table 3 (exact coefficients)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,dims,exp", [
+    (64, (4, 4, 4), dict(rounds=1, dests=63, m_coeff=63 / 64)),
+    (256, (8, 8, 4), dict(rounds=1, dests=255, m_coeff=255 / 256)),
+])
+def test_scaleup_p2p(n, dims, exp):
+    c = coll.a2a_p2p(n)
+    assert (c.rounds, c.dests) == (exp["rounds"], exp["dests"])
+    assert c.m_coeff == pytest.approx(exp["m_coeff"])
+
+
+@pytest.mark.parametrize("n,exp", [
+    (64, dict(rounds=6, dests=6, m_coeff=3.0)),
+    (256, dict(rounds=8, dests=8, m_coeff=4.0)),
+])
+def test_scaleup_bruck(n, exp):
+    c = coll.a2a_bruck(n)
+    assert (c.rounds, c.dests) == (exp["rounds"], exp["dests"])
+    assert c.m_coeff == pytest.approx(exp["m_coeff"])
+
+
+@pytest.mark.parametrize("dims,exp", [
+    ((4, 4, 4), dict(rounds=3, dests=27, m_coeff=9 / 4)),
+    ((8, 8, 4), dict(rounds=3, dests=51, m_coeff=17 / 4)),
+])
+def test_fullmesh_dor(dims, exp):
+    c = coll.a2a_fullmesh_dor(dims)
+    assert (c.rounds, c.dests) == (exp["rounds"], exp["dests"])
+    assert c.m_coeff == pytest.approx(exp["m_coeff"])
+
+
+@pytest.mark.parametrize("dims,exp", [
+    ((4, 4, 4), dict(rounds=6, dests=36, m_coeff=3.0)),
+    ((8, 8, 4), dict(rounds=12, dests=72, m_coeff=6.0)),
+])
+def test_torus_halfring(dims, exp):
+    c = coll.a2a_torus_halfring(dims)
+    assert (c.rounds, c.dests) == (exp["rounds"], exp["dests"])
+    assert c.m_coeff == pytest.approx(exp["m_coeff"])
+
+
+# ---------------------------------------------------------------------------
+# ordering properties the paper relies on (Fig 7)
+# ---------------------------------------------------------------------------
+
+def test_a2a_topology_ordering_large_messages():
+    """scale-up < fullmesh < torus at large message sizes (beta-dominated)."""
+    m = 256 * 2**20
+    su = make_cluster("scale-up", 64, H100)
+    fm = make_cluster("fullmesh", 64, H100)
+    to = make_cluster("torus", 64, H100)
+    assert su.a2a_time(m) < fm.a2a_time(m) < to.a2a_time(m)
+
+
+def test_a2a_grows_with_cluster_size():
+    for topo in ("scale-up", "torus", "fullmesh"):
+        small = make_cluster(topo, 64, H100)
+        large = make_cluster(topo, 256, H100)
+        m = 16 * 2**20
+        assert small.a2a_time(m) < large.a2a_time(m), topo
+
+
+def test_best_algorithm_switches_with_message_size():
+    """Small m -> log-round Bruck wins (alpha-bound); large m -> P2P wins
+    (beta-bound). The menu's min() must capture this crossover."""
+    n = 256
+    ab_model = ab.CLUSTER
+    bw = 450e9
+
+    def t(c, m):
+        return ab_model.time(rounds=c.rounds, dests=c.dests,
+                             m_coeff=c.m_coeff, m_bytes=m, bandwidth=bw)
+
+    p2p, bruck = coll.a2a_p2p(n), coll.a2a_bruck(n)
+    assert t(bruck, 1024) < t(p2p, 1024)
+    assert t(p2p, 2**30) < t(bruck, 2**30)
+
+
+# ---------------------------------------------------------------------------
+# alpha-beta fitting (the Table 1 procedure on synthetic data)
+# ---------------------------------------------------------------------------
+
+def test_fit_alpha_beta_recovers_params():
+    rng = np.random.default_rng(0)
+    truth = ab.AlphaBeta(alpha0=6e-6, alpha_r=0.8e-6, alpha_d=0.3e-6,
+                         link_utilization=0.72)
+    bw = 450e9
+    rounds = rng.integers(1, 16, 200).astype(float)
+    dests = rng.integers(1, 256, 200).astype(float)
+    # span alpha-dominated to beta-dominated sizes but keep the unweighted
+    # lstsq conditioned enough to identify the alpha terms
+    m = np.exp(rng.uniform(np.log(128), np.log(2**22), 200))
+    times = np.array([truth.time(rounds=r, dests=d, m_coeff=1.0, m_bytes=mm,
+                                 bandwidth=bw)
+                      for r, d, mm in zip(rounds, dests, m)])
+    times *= 1 + rng.normal(0, 0.02, 200)          # 2% measurement noise
+    fit = ab.fit_alpha_beta(rounds, dests, m, bw, times)
+    assert fit.alpha0 == pytest.approx(truth.alpha0, rel=0.25)
+    assert fit.alpha_r == pytest.approx(truth.alpha_r, rel=0.25)
+    assert fit.alpha_d == pytest.approx(truth.alpha_d, rel=0.25)
+    assert fit.link_utilization == pytest.approx(truth.link_utilization,
+                                                 rel=0.05)
+    model = [fit.time(rounds=r, dests=d, m_coeff=1.0, m_bytes=mm,
+                      bandwidth=bw)
+             for r, d, mm in zip(rounds, dests, m)]
+    assert ab.mean_relative_error(model, times) < 0.05
+
+
+def test_beta_definition():
+    """beta = 1/(utilization x peak BW): halving BW doubles the beta term
+    (the alpha0 offset subtracts out)."""
+    model = ab.INTER_NODE
+    m = 2**28
+    t1 = model.time(rounds=0, dests=0, m_coeff=1, m_bytes=m, bandwidth=450e9)
+    t2 = model.time(rounds=0, dests=0, m_coeff=1, m_bytes=m, bandwidth=225e9)
+    assert (t2 - model.alpha0) / (t1 - model.alpha0) == pytest.approx(2.0)
+    assert t1 - model.alpha0 == pytest.approx(m / (0.843 * 450e9))

