@@ -8,32 +8,38 @@ from __future__ import annotations
 
 from benchmarks.common import save, table
 from repro.configs import get_arch
-from repro.core import H100, Scenario, make_cluster, max_throughput
+from repro.core import H100, Scenario, make_cluster
+from repro.core.sweep import sweep_max_throughput
 
 
 def run(verbose: bool = True):
     cfg = get_arch("deepseek-v3")
     tpots = (10.0, 15.0, 20.0, 40.0, 60.0, 100.0)
+    ctxs = (512, 4096, 8192)
+    bws = (450e9, 150e9)
+    clusters = [make_cluster("scale-up", 64, H100, link_bw=bw) for bw in bws]
+    scenarios = [Scenario(t, c) for c in ctxs for t in tpots]
+    # one batched grid evaluation for the whole 2-cluster x 18-scenario sweep
+    ops = sweep_max_throughput(clusters, cfg, scenarios)
+
     results = {}
     rows = []
-    for ctx in (512, 4096, 8192):
-        for tpot in tpots:
-            row = [ctx, int(tpot)]
-            for bw in (450e9, 150e9):
-                cl = make_cluster("scale-up", 64, H100, link_bw=bw)
-                op = max_throughput(cl, cfg, Scenario(tpot, ctx))
-                key = f"ctx{ctx}/bw{int(bw / 1e9)}"
-                if op is None:
-                    row += ["miss", "-"]
-                    results.setdefault(key, []).append(
-                        {"tpot_ms": tpot, "thpt_per_xpu": 0.0, "batch": 0})
-                else:
-                    row += [f"{op.throughput / 64:.0f}", op.batch]
-                    results.setdefault(key, []).append(
-                        {"tpot_ms": tpot,
-                         "thpt_per_xpu": op.throughput / 64,
-                         "batch": op.batch})
-            rows.append(row)
+    for si, sc in enumerate(scenarios):
+        row = [sc.context, int(sc.tpot_ms)]
+        for ci, bw in enumerate(bws):
+            op = ops[ci][si]
+            key = f"ctx{sc.context}/bw{int(bw / 1e9)}"
+            if op is None:
+                row += ["miss", "-"]
+                results.setdefault(key, []).append(
+                    {"tpot_ms": sc.tpot_ms, "thpt_per_xpu": 0.0, "batch": 0})
+            else:
+                row += [f"{op.throughput / 64:.0f}", op.batch]
+                results.setdefault(key, []).append(
+                    {"tpot_ms": sc.tpot_ms,
+                     "thpt_per_xpu": op.throughput / 64,
+                     "batch": op.batch})
+        rows.append(row)
     out = table(["ctx", "TPOT ms", "450: tok/s/XPU", "B", "150: tok/s/XPU",
                  "B"], rows, title="Fig 10 — scenario sweep (no sw opts)")
 

@@ -9,20 +9,26 @@ from __future__ import annotations
 
 from benchmarks.common import save, table
 from repro.configs import get_arch
-from repro.core import H100, Scenario, best_of_opts, make_cluster
+from repro.core import H100, Scenario, make_cluster
+from repro.core.sweep import best_of_opts_multi
 
 
 def run(verbose: bool = True):
     cfg = get_arch("deepseek-v3")
     tpots = (10.0, 15.0, 25.0, 40.0, 60.0, 100.0)
     bws = (450e9, 150e9, 50e9)
+    clusters = [make_cluster("scale-up", 64, H100, link_bw=bw) for bw in bws]
+    scenarios = [Scenario(t, 512) for t in tpots]
     results = {}
+    # one shared engine pass covers all three opts curves
+    grids = best_of_opts_multi(clusters, cfg, scenarios,
+                               ("noopt", "dbo", "dbo+sd"))
     for opts in ("noopt", "dbo", "dbo+sd"):
-        for bw in bws:
-            cl = make_cluster("scale-up", 64, H100, link_bw=bw)
+        grid = grids[opts]
+        for ci, bw in enumerate(bws):
             key = f"{opts}/bw{int(bw / 1e9)}"
-            for tpot in tpots:
-                op = best_of_opts(cl, cfg, Scenario(tpot, 512), opts=opts)
+            for si, tpot in enumerate(tpots):
+                op = grid[ci][si]
                 results.setdefault(key, []).append(
                     {"tpot_ms": tpot,
                      "thpt_per_xpu": (op.throughput / 64) if op else 0.0,

@@ -8,7 +8,8 @@ from __future__ import annotations
 
 from benchmarks.common import save, table
 from repro.configs import get_arch
-from repro.core import H100, Scenario, best_of_opts, make_cluster
+from repro.core import H100, Scenario, make_cluster
+from repro.core.sweep import best_of_opts_multi
 from repro.core.tco import cluster_tco
 
 TOPOS = ("scale-up", "scale-out", "torus", "fullmesh")
@@ -17,17 +18,20 @@ SCENARIOS = [Scenario(t, c) for c in (512, 4096) for t in (15.0, 40.0, 100.0)]
 
 def run(verbose: bool = True, n: int = 64):
     cfg = get_arch("deepseek-v3")
+    clusters = [make_cluster(topo, n, H100) for topo in TOPOS]
+    # batched: one shared engine pass spans topologies x scenarios x opts
+    grids = best_of_opts_multi(clusters, cfg, SCENARIOS,
+                               ("noopt", "dbo+sd"))
     results = {}
     rows = []
     improvements = []
-    for sc in SCENARIOS:
+    for si, sc in enumerate(SCENARIOS):
         per_topo = {}
-        for topo in TOPOS:
-            cl = make_cluster(topo, n, H100)
-            cost = cluster_tco(cl).per_xpu(n)
+        for ti, topo in enumerate(TOPOS):
+            cost = cluster_tco(clusters[ti]).per_xpu(n)
             entry = {"cost_per_xpu": cost}
             for opts in ("noopt", "dbo+sd"):
-                op = best_of_opts(cl, cfg, sc, opts=opts)
+                op = grids[opts][ti][si]
                 entry[opts] = {
                     "thpt_per_xpu": (op.throughput / n) if op else 0.0,
                     "thpt_per_cost": (op.throughput / n / cost) if op else 0.0,

@@ -8,7 +8,8 @@ from __future__ import annotations
 
 from benchmarks.common import save, table
 from repro.configs import get_arch
-from repro.core import H100, Scenario, best_of_opts, make_cluster
+from repro.core import H100, Scenario, make_cluster
+from repro.core.sweep import best_of_opts_grid
 from repro.core.tco import cluster_tco
 
 TOPOS = ("scale-up", "torus", "fullmesh")
@@ -17,15 +18,19 @@ TOPOS = ("scale-up", "torus", "fullmesh")
 def run(verbose: bool = True):
     cfg = get_arch("deepseek-v3")
     scenarios = [Scenario(t, 512) for t in (15.0, 40.0, 100.0)]
+    # one batched grid call per cluster size (grids must share n_xpus)
+    clusters = {n: [make_cluster(topo, n, H100) for topo in TOPOS]
+                for n in (64, 256)}
+    grids = {n: best_of_opts_grid(cls, cfg, scenarios, "dbo+sd")
+             for n, cls in clusters.items()}
     results = {}
     rows = []
-    for sc in scenarios:
-        for topo in TOPOS:
+    for si, sc in enumerate(scenarios):
+        for ti, topo in enumerate(TOPOS):
             row = [sc.name, topo]
             for n in (64, 256):
-                cl = make_cluster(topo, n, H100)
-                cost = cluster_tco(cl).per_xpu(n)
-                op = best_of_opts(cl, cfg, sc, opts="dbo+sd")
+                cost = cluster_tco(clusters[n][ti]).per_xpu(n)
+                op = grids[n][ti][si]
                 tpx = (op.throughput / n) if op else 0.0
                 results[f"{sc.name}/{topo}/{n}"] = {
                     "thpt_per_xpu": tpx, "thpt_per_cost": tpx / cost,

@@ -3,31 +3,41 @@ clusters, 450 vs 150 GB/s, context 512).
 
 Trends: TPOT grows sublinearly at small batch (memory-bound compute +
 alpha-dominated comm); throughput = B/TPOT keeps rising; the beta-term gap
-between the clusters appears once messages are large."""
+between the clusters appears once messages are large.
+
+Runs on the batched sweep engine: one op table, one vectorized evaluation
+over the (cluster, batch) grid instead of per-point `iteration_time` calls.
+"""
 from __future__ import annotations
+
+import numpy as np
 
 from benchmarks.common import fmt_bw, save, table
 from repro.configs import get_arch
 from repro.core import H100, make_cluster
-from repro.core.optimizer import iteration_time
-from repro.core.workload import ServingPoint
+from repro.core import optable, sweep
 
 
 def run(verbose: bool = True):
     cfg = get_arch("deepseek-v3")
     batches = [64, 256, 1024, 4096, 8192, 16384, 32768, 65536]
+    clusters = [make_cluster("scale-up", 64, H100, link_bw=450e9),
+                make_cluster("scale-up", 64, H100, link_bw=150e9)]
+    op_table = optable.op_table(cfg, 1, 64, 64, "fp8")
+    t, tc, tm = sweep.batched_iteration_components(
+        op_table, clusters, np.array(batches), context=512)
+
     results = {"450": [], "150": []}
     rows = []
-    for b in batches:
+    for bi, b in enumerate(batches):
         row = [b]
-        for bw, key in ((450e9, "450"), (150e9, "150")):
-            cl = make_cluster("scale-up", 64, H100, link_bw=bw)
-            p = ServingPoint(batch_global=b, context=512, ep=64, n_devices=64)
-            t, _, tc, tm = iteration_time(cfg, p, cl, dbo=False)
-            results[key].append({"batch": b, "tpot_ms": t * 1e3,
-                                 "t_comp_ms": tc * 1e3, "t_comm_ms": tm * 1e3,
-                                 "thpt_per_xpu": b / t / 64})
-            row += [f"{t * 1e3:.2f}", f"{b / t / 64:.0f}"]
+        for ci, key in ((0, "450"), (1, "150")):
+            ti = float(t[ci, bi])
+            results[key].append({"batch": b, "tpot_ms": ti * 1e3,
+                                 "t_comp_ms": float(tc[ci, bi]) * 1e3,
+                                 "t_comm_ms": float(tm[ci, bi]) * 1e3,
+                                 "thpt_per_xpu": b / ti / 64})
+            row += [f"{ti * 1e3:.2f}", f"{b / ti / 64:.0f}"]
         rows.append(row)
     out = table(["batch", "TPOT@450 ms", "tok/s/XPU", "TPOT@150 ms",
                  "tok/s/XPU"], rows,

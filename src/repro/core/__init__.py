@@ -10,6 +10,8 @@ methodology for MoE LLM serving networks.
   overlap      DBO greedy two-lane scheduler -> exposed communication time
   specdec      speculative decoding TPOT model
   tco          CapEx/OpEx cluster cost model (+ adjustment factor c)
+  optable      decode op list lowered to coefficient arrays (sweep input)
+  sweep        batched operating-point search (vectorized alpha-beta + DBO)
   optimizer    max-throughput-under-SLO sweep
   pareto       performance-vs-cost sweep + Pareto frontier (Fig 17)
   future       Blackwell/Rubin saturating-bandwidth projection (Fig 18/19)
@@ -17,7 +19,9 @@ methodology for MoE LLM serving networks.
 from repro.core.alphabeta import AlphaBeta, INTRA_NODE, INTER_NODE, CLUSTER
 from repro.core.hardware import (H100, BLACKWELL, RUBIN, TPU_V5E, GENERATIONS,
                                  XPUSpec)
-from repro.core.optimizer import Scenario, SCENARIOS, best_of_opts, max_throughput
+from repro.core.optimizer import (Scenario, SCENARIOS, best_of_opts,
+                                  best_of_opts_scalar, max_throughput,
+                                  max_throughput_scalar)
 from repro.core.specdec import SpecDecConfig
 from repro.core.topology import Cluster, make_cluster, TOPOLOGIES
 from repro.core.tco import cluster_tco, throughput_per_cost

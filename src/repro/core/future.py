@@ -38,13 +38,23 @@ def throughput_vs_bandwidth(cfg: ModelConfig, scenario: Scenario,
                             bw_grid: Sequence[float], *,
                             opts: str = "dbo+sd",
                             alpha_scale: float = 1.0) -> List[BWCurvePoint]:
-    """Throughput-per-XPU as link bandwidth sweeps (paper Fig 18/19)."""
-    pts = []
+    """Throughput-per-XPU as link bandwidth sweeps (paper Fig 18/19).
+
+    The whole bandwidth grid evaluates as one batched sweep; the alpha-scaled
+    cluster subclass composes transparently because the sweep engine reads
+    alphas through `cluster._ab()`."""
+    from repro.core import sweep
+
+    clusters = []
     for bw in bw_grid:
         cl = make_cluster(topology, n, xpu, link_bw=bw)
         if alpha_scale != 1.0:
             cl = scaled_alpha_cluster(cl, alpha_scale)
-        op = optimizer.best_of_opts(cl, cfg, scenario, opts=opts)
+        clusters.append(cl)
+    grid = sweep.best_of_opts_grid(clusters, cfg, [scenario], opts)
+    pts = []
+    for bw, row in zip(bw_grid, grid):
+        op = row[0]
         if op is None:
             continue
         pts.append(BWCurvePoint(topology=topology, link_bw=bw,

@@ -1,0 +1,195 @@
+"""Structured op tables: `workload.decode_iteration` lowered to arrays.
+
+The optimizer's sweep evaluates the same decode op list at every point of a
+batch-grid x {dbo, sd} x scenario x topology cross-product. Rebuilding the
+op list (hundreds of dataclass instances) per point is the hot path of every
+figure benchmark. This module lowers the op list ONCE per (model,
+parallelism, dtype) into a coefficient table; every per-op quantity is then
+a closed form over the sweep variables, so the whole grid evaluates as a
+handful of NumPy broadcasts (see `repro.core.sweep`).
+
+Every op emitted by `workload.decode_iteration` is exactly linear in the
+basis {1, rows, rows*ctx, b*ctx} where b = batch_per_device and
+rows = b * q_len:
+
+  flops   = flop_row * rows + flop_row_ctx * rows * ctx     (attn core)
+  bytes   = bytes_const + bytes_row * rows + bytes_ctx * b * ctx  (KV stream)
+  m_bytes = m_row * rows                                    (comm payloads)
+
+Rather than duplicating the formulas in `workload.py` (and silently
+diverging from them), the coefficients are recovered by probing
+`decode_iteration` at points chosen so the linear solve is trivial
+(b in {0, tp}, ctx in {0, 1}), then validated against an independent probe
+at a generic (b, q, ctx) point — if a future workload change breaks the
+linearity assumption, `build_op_table` raises instead of mis-sweeping.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import lru_cache
+from typing import Tuple
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import workload
+from repro.core.compute_model import EFF_COMPUTE
+from repro.core.workload import ServingPoint
+
+# integer codes for Op.kind
+KIND_COMPUTE, KIND_A2A, KIND_AR = 0, 1, 2
+KIND_CODES = {"compute": KIND_COMPUTE, "a2a": KIND_A2A, "ar": KIND_AR}
+
+
+@dataclass(frozen=True)
+class OpTable:
+    """Decode-iteration op list as coefficient arrays (one row per op).
+
+    Fixed per (model config, tp, ep, n_devices, dtype, kv_dtype); evaluated
+    at any (batch, q_len, context) via the closed forms in the docstrings
+    below. All arrays have shape (n_ops,).
+    """
+    cfg_name: str
+    tp: int
+    ep: int
+    n: int
+    dtype: str
+    kv_dtype: str
+
+    names: Tuple[str, ...]
+    kind: np.ndarray           # int8, KIND_* codes
+    group: np.ndarray          # AR group size (0 for non-AR ops)
+    eff: np.ndarray            # compute efficiency at rows >= GEMM_SMALL_TOKENS
+    eff_small: np.ndarray      # compute efficiency below the thin-GEMM cutoff
+
+    flop_row: np.ndarray       # FLOPs per row
+    flop_row_ctx: np.ndarray   # FLOPs per row per context token (attn core)
+    bytes_const: np.ndarray    # weight bytes streamed regardless of batch
+    bytes_row: np.ndarray      # activation bytes per row
+    bytes_ctx: np.ndarray      # KV bytes per request per context token
+    m_row: np.ndarray          # comm payload bytes per row
+
+    @property
+    def n_ops(self) -> int:
+        return len(self.names)
+
+    @property
+    def is_compute(self) -> np.ndarray:
+        return self.kind == KIND_COMPUTE
+
+    # ------------- closed-form evaluation -------------
+    def batch_per_device(self, batches: np.ndarray) -> np.ndarray:
+        return np.asarray(batches, float) * self.tp / self.n
+
+    def rows(self, batches: np.ndarray, q_len: int) -> np.ndarray:
+        return self.batch_per_device(batches) * q_len
+
+    def flops(self, batches: np.ndarray, q_len: int, ctx: int) -> np.ndarray:
+        """(n_ops, *batches.shape) FLOPs per op."""
+        rows = self.rows(batches, q_len)
+        return (self.flop_row[:, None] * rows
+                + self.flop_row_ctx[:, None] * (rows * ctx))
+
+    def op_bytes(self, batches: np.ndarray, q_len: int, ctx: int) -> np.ndarray:
+        rows = self.rows(batches, q_len)
+        b = self.batch_per_device(batches)
+        return (self.bytes_const[:, None] + self.bytes_row[:, None] * rows
+                + self.bytes_ctx[:, None] * (b * ctx))
+
+    def m_bytes(self, batches: np.ndarray, q_len: int) -> np.ndarray:
+        return self.m_row[:, None] * self.rows(batches, q_len)
+
+
+def _probe(cfg: ModelConfig, *, batch_global: int, context: int, q_len: int,
+           tp: int, ep: int, n: int, dtype: str, kv_dtype: str):
+    p = ServingPoint(batch_global=batch_global, context=context, tp=tp,
+                     ep=ep, n_devices=n, dtype=dtype, kv_dtype=kv_dtype,
+                     q_len=q_len)
+    ops = workload.decode_iteration(cfg, p)
+    return (tuple(o.name for o in ops),
+            np.array([o.flops for o in ops]),
+            np.array([o.bytes for o in ops]),
+            np.array([o.m_bytes for o in ops]),
+            ops)
+
+
+def build_op_table(cfg: ModelConfig, *, tp: int = 1, ep: int = 1,
+                   n_devices: int = 0, dtype: str = "fp8",
+                   kv_dtype: str = "bf16") -> OpTable:
+    """Lower one decode iteration to an OpTable via linear probes.
+
+    Probe points: b=0 isolates constant (weight) bytes; b=tp (i.e.
+    batch_global=n, which makes batch_per_device exactly tp) isolates the
+    per-row terms; ctx 0 vs 1 isolates the context terms.
+    """
+    n = n_devices or (ep * tp)
+    kw = dict(tp=tp, ep=ep, n=n, dtype=dtype, kv_dtype=kv_dtype)
+    names0, f0, by0, m0, ops = _probe(cfg, batch_global=0, context=0,
+                                      q_len=1, **kw)
+    names1, f1, by1, m1, _ = _probe(cfg, batch_global=n, context=0,
+                                    q_len=1, **kw)
+    names2, f2, by2, m2, _ = _probe(cfg, batch_global=n, context=1,
+                                    q_len=1, **kw)
+    if not (names0 == names1 == names2):
+        raise ValueError("op-list structure varies with batch/context; "
+                         "cannot lower to a table")
+
+    b1 = float(tp)                       # batch_per_device at the b-probes
+    flop_row = f1 / b1
+    flop_row_ctx = (f2 - f1) / b1
+    bytes_const = by0
+    bytes_row = (by1 - by0) / b1
+    bytes_ctx = (by2 - by1) / b1
+    m_row = m1 / b1
+
+    eff = np.array([EFF_COMPUTE.get(o.op_class, EFF_COMPUTE["other"])
+                    for o in ops])
+    eff_small = np.array([
+        EFF_COMPUTE["gemm_small"] if o.op_class == "gemm"
+        else EFF_COMPUTE.get(o.op_class, EFF_COMPUTE["other"])
+        for o in ops])
+
+    table = OpTable(
+        cfg_name=cfg.name, tp=tp, ep=ep, n=n, dtype=dtype, kv_dtype=kv_dtype,
+        names=names0,
+        kind=np.array([KIND_CODES[o.kind] for o in ops], np.int8),
+        group=np.array([o.group for o in ops], np.int64),
+        eff=eff, eff_small=eff_small,
+        flop_row=flop_row, flop_row_ctx=flop_row_ctx,
+        bytes_const=bytes_const, bytes_row=bytes_row, bytes_ctx=bytes_ctx,
+        m_row=m_row)
+    _validate(cfg, table, **kw)
+    return table
+
+
+def _validate(cfg: ModelConfig, table: OpTable, *, tp, ep, n, dtype,
+              kv_dtype, rtol: float = 1e-9):
+    """Cross-check the closed forms against a generic probe point. Guards
+    against future nonlinearity creeping into `workload.decode_iteration`."""
+    bg, ctx, q = 3 * n, 37, 2
+    _, f, by, m, _ = _probe(cfg, batch_global=bg, context=ctx, q_len=q,
+                            tp=tp, ep=ep, n=n, dtype=dtype,
+                            kv_dtype=kv_dtype)
+    batches = np.array([bg], float)
+    got_f = table.flops(batches, q, ctx)[:, 0]
+    got_by = table.op_bytes(batches, q, ctx)[:, 0]
+    got_m = table.m_bytes(batches, q)[:, 0]
+    for got, want, what in ((got_f, f, "flops"), (got_by, by, "bytes"),
+                            (got_m, m, "m_bytes")):
+        err = np.abs(got - want) / np.maximum(np.abs(want), 1.0)
+        if err.max() > rtol:
+            i = int(err.argmax())
+            raise ValueError(
+                f"op table diverges from decode_iteration on {what} for op "
+                f"{table.names[i]!r}: {got[i]!r} vs {want[i]!r} — workload "
+                "formulas are no longer linear in the sweep basis")
+
+
+@lru_cache(maxsize=64)
+def op_table(cfg: ModelConfig, tp: int, ep: int, n_devices: int,
+             dtype: str = "fp8", kv_dtype: str = "bf16") -> OpTable:
+    """LRU-cached table builder — the sweep engine's entry point. ModelConfig
+    is a frozen dataclass, so it hashes by value and config edits miss the
+    cache as they should."""
+    return build_op_table(cfg, tp=tp, ep=ep, n_devices=n_devices,
+                          dtype=dtype, kv_dtype=kv_dtype)

@@ -6,6 +6,14 @@ compute + communication (with DBO's two-lane overlap when enabled), and
 return the configuration with the highest throughput whose TPOT meets the
 SLO. "Cluster builders provision for peak load": max capacity per cost is
 the paper's cost-effectiveness metric.
+
+Two execution paths share this module's public API:
+
+  max_throughput / best_of_opts          batched (repro.core.sweep): the
+      whole batch grid evaluates as array programs, the argmax winner is
+      re-derived through the scalar path below.
+  max_throughput_scalar / best_of_opts_scalar   the seed one-point-at-a-time
+      reference, kept as ground truth for tests and boundary fallbacks.
 """
 from __future__ import annotations
 
@@ -149,7 +157,30 @@ def max_throughput(cluster: Cluster, cfg: ModelConfig, scenario: Scenario,
                    tp: int = 1, ep: Optional[int] = None,
                    dtype: str = "fp8") -> Optional[OperatingPoint]:
     """Best operating point under the TPOT SLO, or None if the SLO is
-    unreachable at every feasible batch size."""
+    unreachable at every feasible batch size.
+
+    Evaluates the batch grid through the vectorized sweep engine
+    (`repro.core.sweep`); the winning point is re-derived through the exact
+    scalar path below, so the result is byte-identical to
+    `max_throughput_scalar`. Pass lists of clusters/scenarios to
+    `sweep.sweep_max_throughput` directly to amortize one grid evaluation
+    across a whole figure.
+    """
+    from repro.core import sweep
+    return sweep.sweep_max_throughput([cluster], cfg, [scenario], dbo=dbo,
+                                      sd=sd, tp=tp, ep=ep,
+                                      dtype=dtype)[0][0]
+
+
+def max_throughput_scalar(cluster: Cluster, cfg: ModelConfig,
+                          scenario: Scenario, *, dbo: bool = False,
+                          sd: Optional[SpecDecConfig] = None, tp: int = 1,
+                          ep: Optional[int] = None,
+                          dtype: str = "fp8") -> Optional[OperatingPoint]:
+    """Reference scalar sweep (the seed implementation, one `tpot_at` call
+    per grid point). Kept as the ground truth the batched engine is tested
+    against, and as the fallback when a batched TPOT lands exactly on the
+    SLO boundary."""
     n = cluster.n_xpus
     if cfg.moe is not None:
         ep = ep or n
@@ -177,18 +208,33 @@ def max_throughput(cluster: Cluster, cfg: ModelConfig, scenario: Scenario,
 def best_of_opts(cluster: Cluster, cfg: ModelConfig, scenario: Scenario,
                  opts: str = "dbo+sd", **kw) -> Optional[OperatingPoint]:
     """opts: 'noopt' | 'dbo' | 'dbo+sd'. DBO/SD results fall back to the
-    unoptimized point when that is faster (paper's 'best of' curves)."""
-    candidates = [max_throughput(cluster, cfg, scenario, dbo=False, sd=None,
-                                 **kw)]
+    unoptimized point when that is faster (paper's 'best of' curves).
+
+    Runs on the batched sweep engine; `sweep.best_of_opts_grid` is the
+    many-clusters/many-scenarios entry point the benchmarks use."""
+    from repro.core import sweep
+    return sweep.best_of_opts_grid([cluster], cfg, [scenario], opts,
+                                   **kw)[0][0]
+
+
+def best_of_opts_scalar(cluster: Cluster, cfg: ModelConfig,
+                        scenario: Scenario, opts: str = "dbo+sd",
+                        **kw) -> Optional[OperatingPoint]:
+    """Reference scalar counterpart of `best_of_opts` (seed semantics)."""
+    candidates = [max_throughput_scalar(cluster, cfg, scenario, dbo=False,
+                                        sd=None, **kw)]
     if opts in ("dbo", "dbo+sd"):
         candidates.append(
-            max_throughput(cluster, cfg, scenario, dbo=True, sd=None, **kw))
+            max_throughput_scalar(cluster, cfg, scenario, dbo=True, sd=None,
+                                  **kw))
     if opts == "dbo+sd":
         sd = SpecDecConfig()
         candidates.append(
-            max_throughput(cluster, cfg, scenario, dbo=True, sd=sd, **kw))
+            max_throughput_scalar(cluster, cfg, scenario, dbo=True, sd=sd,
+                                  **kw))
         candidates.append(
-            max_throughput(cluster, cfg, scenario, dbo=False, sd=sd, **kw))
+            max_throughput_scalar(cluster, cfg, scenario, dbo=False, sd=sd,
+                                  **kw))
     candidates = [c for c in candidates if c is not None]
     if not candidates:
         return None

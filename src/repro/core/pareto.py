@@ -44,17 +44,33 @@ def sweep_networks(cfg: ModelConfig, scenario: Scenario, xpu: XPUSpec,
                                                 "torus", "fullmesh"),
                    bw_fracs: Sequence[float] = BW_FRACTIONS,
                    opts: str = "dbo+sd", c: float = 1.0) -> List[ParetoPoint]:
-    points: List[ParetoPoint] = []
-    for topo in topologies:
-        for n in sizes:
+    """All (topology, link bandwidth) points of one scenario, evaluated as
+    one batched grid per cluster size (the sweep engine requires a uniform
+    device count per grid). Point order matches the seed's nested loops."""
+    from repro.core import sweep
+
+    ops_by_size = {}
+    for n in sizes:
+        keys, clusters = [], []
+        for topo in topologies:
             for f in bw_fracs:
                 # each topology sweeps fractions of its own provision
                 # (scale-out: NIC-class fabric on top of the intra-node
                 # scale-up domain it always carries — see core.topology)
                 base_bw = (xpu.scale_out_bw if topo == "scale-out"
                            else xpu.scale_up_bw)
-                cl = make_cluster(topo, n, xpu, link_bw=base_bw * f)
-                op = optimizer.best_of_opts(cl, cfg, scenario, opts=opts)
+                keys.append((topo, f))
+                clusters.append(make_cluster(topo, n, xpu,
+                                             link_bw=base_bw * f))
+        grid = sweep.best_of_opts_grid(clusters, cfg, [scenario], opts)
+        ops_by_size[n] = {k: (cl, row[0])
+                          for k, cl, row in zip(keys, clusters, grid)}
+
+    points: List[ParetoPoint] = []
+    for topo in topologies:
+        for n in sizes:
+            for f in bw_fracs:
+                cl, op = ops_by_size[n][(topo, f)]
                 if op is None:
                     continue
                 cost = tco.cluster_tco(cl).per_xpu(n, c)

@@ -1,0 +1,424 @@
+"""Batched sweep engine: the operating-point search as array programs.
+
+The optimizer's search space is a batch-grid x {dbo, sd} x scenario x
+topology cross-product; the seed implementation walked it one scalar Python
+evaluation at a time, rebuilding the decode op list at every point. This
+module evaluates the whole grid with NumPy broadcasts over a precomputed
+`optable.OpTable`:
+
+  compute times   roofline closed forms over (batch, q_len, context), with
+                  the thin-GEMM efficiency switch applied elementwise
+  alpha-beta comm each cluster's collective-algorithm menu lowered to
+                  (A, B) pairs so t = min_alg(A + B * m) broadcasts over the
+                  payload grid
+  DBO             the two-lane fixed-order schedule is a (max,+) recurrence
+                  in the op order (see overlap.simulate_two_lane), so it
+                  vectorizes exactly over the grid: same max/add operations,
+                  batched over trailing axes
+
+`batched_tpot` matches the scalar `optimizer.tpot_at` to float rounding
+(~1e-15 relative; asserted at 1e-9 in tests/test_sweep.py). Selection
+(feasibility + argmax) runs on the batched values; the single winning point
+is then re-evaluated through the exact scalar path so the returned
+`OperatingPoint` is byte-identical to the seed implementation.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import collectives as coll
+from repro.core import optable, workload
+from repro.core.compute_model import (EFF_MEMORY, GEMM_SMALL_TOKENS,
+                                      T_LAUNCH)
+from repro.core.optable import OpTable
+from repro.core.overlap import MAX_STAGGER
+from repro.core.specdec import SpecDecConfig
+from repro.core.topology import Cluster
+from repro.core.workload import ServingPoint
+
+
+# ---------------------------------------------------------------------------
+# per-cluster alpha-beta lowering
+# ---------------------------------------------------------------------------
+
+def _comm_menu_coeffs(cluster: Cluster, kind: int,
+                      group: int) -> List[Tuple[float, float]]:
+    """Lower one collective menu to (A, B) pairs: t(m) = min_alg(A + B*m).
+
+    A carries the alpha terms exactly as `AlphaBeta.time` associates them;
+    B*m keeps the scalar's (m_coeff * m) * beta association elementwise, so
+    the batched time equals the scalar time to the rounding of the shared
+    subexpressions.
+    """
+    ab = cluster._ab()
+    beta = 1.0 / (ab.link_utilization * cluster.link_bw)
+    if kind == optable.KIND_A2A:
+        menu = coll.a2a_menu(cluster.topology, cluster.n_xpus, cluster.dims)
+    else:
+        n = group or cluster.n_xpus
+        menu = coll.ar_menu(cluster.topology, n, cluster.dims)
+    return [(ab.alpha0 + c.rounds * ab.alpha_r + c.dests * ab.alpha_d,
+             c.m_coeff, beta) for c in menu.values()]
+
+
+def _comm_times(table: OpTable, cluster: Cluster,
+                m: np.ndarray) -> np.ndarray:
+    """Comm time per op, shape of `m` (n_ops, ...); 0 for compute ops."""
+    out = np.zeros_like(m)
+    for kind in (optable.KIND_A2A, optable.KIND_AR):
+        for group in np.unique(table.group[table.kind == kind]):
+            sel = (table.kind == kind) & (table.group == group)
+            if not sel.any():
+                continue
+            algs = _comm_menu_coeffs(cluster, kind, int(group))
+            best = None
+            for a, m_coeff, beta in algs:
+                t = a + (m_coeff * m[sel]) * beta
+                best = t if best is None else np.minimum(best, t)
+            out[sel] = best
+    return out
+
+
+# ---------------------------------------------------------------------------
+# grid evaluation context
+# ---------------------------------------------------------------------------
+
+class GridEval:
+    """Shared evaluation state for one (table, clusters, scenarios, batches)
+    grid. Duration tensors and DBO makespans are cached per (q_len, half)
+    so the dbo / dbo+sd / sd variants of one sweep reuse each other's work.
+
+    All result arrays have shape (n_clusters, n_scenarios, n_batches).
+    """
+
+    def __init__(self, table: OpTable, clusters: Sequence[Cluster],
+                 scenarios: Sequence, batches: np.ndarray):
+        self.table = table
+        self.clusters = list(clusters)
+        self.scenarios = list(scenarios)
+        self.batches = np.asarray(batches, np.int64)
+        self.half = np.maximum(self.batches // 2, 1)
+        self._dur: Dict = {}
+        self._mk: Dict = {}
+        self._seq: Dict = {}
+
+    # ------------- durations -------------
+    def _durations(self, q: int, half: bool):
+        """(comp, comm) duration tensors, (n_ops, n_cl, n_sc, n_b); entries
+        are zero off their own lane, exactly like the scalar timers."""
+        key = (q, half)
+        if key in self._dur:
+            return self._dur[key]
+        t = self.table
+        b_arr = self.half if half else self.batches
+        rows = t.rows(b_arr, q)                        # (n_b,)
+        ctx = np.array([sc.context for sc in self.scenarios],
+                       float)[:, None]                 # (n_sc, 1)
+        is_comp = t.is_compute[:, None, None, None]
+
+        # compute roofline (cluster axis only matters if XPUs differ)
+        flops_base = t.flop_row[:, None] * rows
+        flops_ctx = t.flop_row_ctx[:, None] * rows
+        byts_base = t.bytes_const[:, None] + t.bytes_row[:, None] * rows
+        byts_ctx = t.bytes_ctx[:, None] * t.batch_per_device(b_arr)
+        flops_sc = flops_base[:, None, :] + flops_ctx[:, None, :] * ctx
+        byts_sc = byts_base[:, None, :] + byts_ctx[:, None, :] * ctx
+
+        fp8 = t.dtype == "fp8"
+        eff = np.where(rows < GEMM_SMALL_TOKENS,
+                       t.eff_small[:, None], t.eff[:, None])[:, None, :]
+        comp_by_xpu: Dict[int, np.ndarray] = {}
+        comp = np.zeros((t.n_ops, len(self.clusters)) + flops_sc.shape[1:])
+        for ci, cl in enumerate(self.clusters):
+            xk = id(cl.xpu)
+            if xk not in comp_by_xpu:
+                peak = cl.xpu.flops_fp8 if fp8 else cl.xpu.flops_bf16
+                t_c = flops_sc / (peak * eff)
+                t_m = byts_sc / (cl.xpu.hbm_bw * EFF_MEMORY)
+                comp_by_xpu[xk] = np.maximum(t_c, t_m) + T_LAUNCH
+            comp[:, ci] = comp_by_xpu[xk]
+        comp = np.where(is_comp, comp, 0.0)
+
+        m = t.m_bytes(b_arr, q)                        # (n_ops, n_b)
+        comm = np.zeros_like(comp)
+        for ci, cl in enumerate(self.clusters):
+            comm[:, ci] = _comm_times(t, cl, m)[:, None, :]
+        comm = np.where(is_comp, 0.0, comm)
+
+        self._dur[key] = (comp, comm)
+        return self._dur[key]
+
+    # ------------- no-overlap iteration -------------
+    def seq_components(self, q: int, half: bool = False):
+        """(t_iter, t_compute, t_comm), each (n_cl, n_sc, n_b) — the
+        dbo=False path of optimizer.iteration_time."""
+        key = (q, half)
+        if key not in self._seq:
+            comp, comm = self._durations(q, half)
+            tc = comp.sum(axis=0)
+            tm = comm.sum(axis=0)
+            self._seq[key] = (tc + tm, tc, tm)
+        return self._seq[key]
+
+    # ------------- DBO two-lane schedule -------------
+    def dbo_makespan(self, q: int) -> np.ndarray:
+        """Best-stagger two-lane makespan at HALF batch, (n_cl,n_sc,n_b).
+
+        Exact vectorization of overlap.dbo_tpot: with a fixed per-lane
+        order, every start time is max(end of the microbatch's previous op,
+        end of the lane's previous op) — a (max,+) recurrence evaluated here
+        in merged order with the batch grid as trailing axes.
+        """
+        if q in self._mk:
+            return self._mk[q]
+        comp, comm = self._durations(q, half=True)
+        dur = comp + comm                      # disjoint supports
+        lanes = (~self.table.is_compute).astype(np.int8)
+        n = dur.shape[0]
+        tail = dur.shape[1:]
+        best = None
+        for s in range(0, min(MAX_STAGGER, max(n - 1, 0)) + 1):
+            order = sorted(((k, mb) for mb in (0, 1) for k in range(n)),
+                           key=lambda km: (km[0] + (s if km[1] else 0),
+                                           km[1]))
+            ready = [np.zeros(tail), np.zeros(tail)]
+            free = [np.zeros(tail), np.zeros(tail)]
+            for k, mb in order:
+                lane = int(lanes[k])
+                end = np.maximum(ready[mb], free[lane]) + dur[k]
+                ready[mb] = end
+                free[lane] = end
+            mk = np.maximum(ready[0], ready[1])
+            best = mk if best is None else np.minimum(best, mk)
+        self._mk[q] = best
+        return best
+
+    # ------------- TPOT -------------
+    def best_iteration(self, q: int, dbo: bool) -> np.ndarray:
+        """min(no-overlap, DBO) per grid point — optimizer's best_iter."""
+        t_seq, _, _ = self.seq_components(q)
+        if not dbo:
+            return t_seq
+        mk = self.dbo_makespan(q)
+        return np.where(self.batches >= 2, np.minimum(t_seq, mk), t_seq)
+
+    def tpot(self, *, dbo: bool = False,
+             sd: Optional[SpecDecConfig] = None) -> np.ndarray:
+        """TPOT seconds over the grid — batched optimizer.tpot_at."""
+        t1 = self.best_iteration(1, dbo)
+        if sd is None:
+            return t1
+        tv = self.best_iteration(sd.spec_m, dbo)
+        return (t1 + tv) / sd.tokens_per_iteration
+
+
+def batched_tpot(op_table: OpTable, clusters: Sequence[Cluster],
+                 batches: np.ndarray, scenarios: Sequence, *,
+                 dbo: bool = False,
+                 sd: Optional[SpecDecConfig] = None) -> np.ndarray:
+    """TPOT for every (cluster, scenario, batch) grid point in one shot.
+
+    Returns shape (n_clusters, n_scenarios, n_batches); matches the scalar
+    `optimizer.tpot_at` within float-rounding (tested at 1e-9 relative).
+    All clusters must share the op table's device count.
+    """
+    return GridEval(op_table, clusters, scenarios, batches).tpot(dbo=dbo,
+                                                                 sd=sd)
+
+
+def batched_iteration_components(op_table: OpTable,
+                                 clusters: Sequence[Cluster],
+                                 batches: np.ndarray, context: int,
+                                 q_len: int = 1):
+    """No-overlap (t_iter, t_compute, t_comm), each (n_cl, n_b) — the
+    batched optimizer.iteration_time(dbo=False) for one context."""
+    from repro.core.optimizer import Scenario
+
+    ev = GridEval(op_table, clusters, [Scenario(0.0, context)], batches)
+    t, tc, tm = ev.seq_components(q_len)
+    return t[:, 0, :], tc[:, 0, :], tm[:, 0, :]
+
+
+# ---------------------------------------------------------------------------
+# grid search: max throughput under SLO, batched over clusters x scenarios
+# ---------------------------------------------------------------------------
+
+def _resolve_parallelism(cfg: ModelConfig, n: int, tp: int,
+                         ep: Optional[int]) -> int:
+    if cfg.moe is not None:
+        return ep or n
+    return 1
+
+
+def _prepare_grid(clusters, cfg, scenarios, tp, ep_r, dtype):
+    """Per-(cluster, scenario) seed batch grids + their sorted union."""
+    from repro.core.optimizer import _batch_grid
+    n = clusters[0].n_xpus
+    grids = {}
+    union = set()
+    for ci, cl in enumerate(clusters):
+        for si, sc in enumerate(scenarios):
+            p0 = ServingPoint(batch_global=1, context=sc.context, tp=tp,
+                              ep=ep_r, n_devices=n, dtype=dtype)
+            b_max = workload.max_batch_by_memory(cfg, p0, cl.xpu.hbm_cap)
+            grids[ci, si] = _batch_grid(b_max, max(n // tp, 1))
+            union.update(grids[ci, si])
+    batches = np.array(sorted(union), np.int64)
+    return grids, batches
+
+
+def _select_and_finalize(ev: GridEval, grids, cfg, *, dbo, sd, tp, ep_r,
+                         dtype):
+    """Feasibility + argmax on the batched TPOTs, then re-evaluate the
+    winner through the exact scalar path (byte-identical OperatingPoint)."""
+    from repro.core import optimizer
+
+    tpot = ev.tpot(dbo=dbo, sd=sd)
+    index = {int(b): i for i, b in enumerate(ev.batches)}
+    n = ev.clusters[0].n_xpus
+    out: List[List[Optional[optimizer.OperatingPoint]]] = []
+    for ci, cl in enumerate(ev.clusters):
+        row = []
+        for si, sc in enumerate(ev.scenarios):
+            budget = sc.tpot_ms * 1e-3
+            best_b, best_thr = None, 0.0
+            knife_edge = False
+            for b in grids[ci, si]:
+                t = float(tpot[ci, si, index[b]])
+                if t > budget:
+                    # batched and scalar TPOT agree within 1e-9 relative
+                    # (the bound tests/test_sweep.py asserts); a rejection
+                    # inside that band could flip under scalar rounding, so
+                    # the whole cell defers to the exact search
+                    knife_edge = knife_edge or t <= budget * (1 + 1e-9)
+                    continue
+                thr = b / t
+                if best_b is None or thr > best_thr:
+                    best_b, best_thr = b, thr
+            if knife_edge:
+                row.append(optimizer.max_throughput_scalar(
+                    cl, cfg, ev.scenarios[si], dbo=dbo, sd=sd, tp=tp,
+                    ep=ep_r, dtype=dtype))
+                continue
+            if best_b is None:
+                row.append(None)
+                continue
+            p = ServingPoint(batch_global=best_b, context=sc.context, tp=tp,
+                             ep=ep_r, n_devices=n, dtype=dtype)
+            tpot_s, ect, tc, tm = optimizer.tpot_at(cfg, p, cl, dbo=dbo,
+                                                    sd=sd)
+            if tpot_s > budget:
+                # the batched value sat exactly on the SLO boundary and the
+                # scalar rounding disagrees — defer to the exact search
+                row.append(optimizer.max_throughput_scalar(
+                    cl, cfg, sc, dbo=dbo, sd=sd, tp=tp, ep=ep_r,
+                    dtype=dtype))
+                continue
+            row.append(optimizer.OperatingPoint(
+                batch=best_b, tpot=tpot_s, throughput=best_b / tpot_s,
+                used_dbo=dbo, used_sd=sd is not None, exposed_comm=ect,
+                t_compute=tc, t_comm=tm))
+        out.append(row)
+    return out
+
+
+def sweep_max_throughput(clusters: Sequence[Cluster], cfg: ModelConfig,
+                         scenarios: Sequence, *, dbo: bool = False,
+                         sd: Optional[SpecDecConfig] = None, tp: int = 1,
+                         ep: Optional[int] = None, dtype: str = "fp8"
+                         ) -> List[List[Optional["OperatingPoint"]]]:
+    """Batched optimizer.max_throughput over clusters x scenarios.
+
+    Clusters must share a device count (they may differ in topology, link
+    bandwidth, and alpha sets). Returns [cluster][scenario] OperatingPoints
+    (None where the SLO is unreachable), byte-identical to the scalar path.
+    """
+    n = clusters[0].n_xpus
+    if any(cl.n_xpus != n for cl in clusters):
+        raise ValueError("sweep_max_throughput requires a uniform device "
+                         "count; group clusters by n_xpus")
+    ep_r = _resolve_parallelism(cfg, n, tp, ep)
+    grids, batches = _prepare_grid(clusters, cfg, scenarios, tp, ep_r, dtype)
+    if batches.size == 0:
+        return [[None] * len(scenarios) for _ in clusters]
+    table = optable.op_table(cfg, tp, ep_r, n, dtype)
+    ev = GridEval(table, clusters, scenarios, batches)
+    return _select_and_finalize(ev, grids, cfg, dbo=dbo, sd=sd, tp=tp,
+                                ep_r=ep_r, dtype=dtype)
+
+
+def _variants_for(opts: str) -> List[Tuple[bool, Optional[SpecDecConfig]]]:
+    """The (dbo, sd) candidates of one opts level, in seed's tie-break
+    order (best_of_opts keeps the FIRST candidate on equal throughput)."""
+    variants: List[Tuple[bool, Optional[SpecDecConfig]]] = [(False, None)]
+    if opts in ("dbo", "dbo+sd"):
+        variants.append((True, None))
+    if opts == "dbo+sd":
+        sd = SpecDecConfig()
+        variants += [(True, sd), (False, sd)]
+    return variants
+
+
+def best_of_opts_multi(clusters: Sequence[Cluster], cfg: ModelConfig,
+                       scenarios: Sequence,
+                       opts_levels: Sequence[str] = ("noopt", "dbo",
+                                                     "dbo+sd"), *,
+                       tp: int = 1, ep: Optional[int] = None,
+                       dtype: str = "fp8"
+                       ) -> Dict[str, List[List[Optional["OperatingPoint"]]]]:
+    """Batched optimizer.best_of_opts for SEVERAL opts levels at once.
+
+    One GridEval and one result per (dbo, sd) variant are shared across the
+    levels ('dbo+sd' already evaluates everything 'noopt' and 'dbo' need),
+    so e.g. fig11's three curves cost one engine pass, not three.
+    """
+    n = clusters[0].n_xpus
+    if any(cl.n_xpus != n for cl in clusters):
+        raise ValueError("best_of_opts_multi requires a uniform device "
+                         "count")
+    ep_r = _resolve_parallelism(cfg, n, tp, ep)
+    grids, batches = _prepare_grid(clusters, cfg, scenarios, tp, ep_r, dtype)
+    if batches.size == 0:
+        empty = [[None] * len(scenarios) for _ in clusters]
+        return {opts: [list(row) for row in empty] for opts in opts_levels}
+    table = optable.op_table(cfg, tp, ep_r, n, dtype)
+    ev = GridEval(table, clusters, scenarios, batches)
+
+    by_variant: Dict[Tuple, List[List[Optional["OperatingPoint"]]]] = {}
+    out = {}
+    for opts in opts_levels:
+        per_variant = []
+        for d, s in _variants_for(opts):
+            key = (d, s)
+            if key not in by_variant:
+                by_variant[key] = _select_and_finalize(
+                    ev, grids, cfg, dbo=d, sd=s, tp=tp, ep_r=ep_r,
+                    dtype=dtype)
+            per_variant.append(by_variant[key])
+        level = []
+        for ci in range(len(clusters)):
+            row = []
+            for si in range(len(scenarios)):
+                best = None
+                for cand in (v[ci][si] for v in per_variant):
+                    if cand is None:
+                        continue
+                    if best is None or cand.throughput > best.throughput:
+                        best = cand
+                row.append(best)
+            level.append(row)
+        out[opts] = level
+    return out
+
+
+def best_of_opts_grid(clusters: Sequence[Cluster], cfg: ModelConfig,
+                      scenarios: Sequence, opts: str = "dbo+sd", *,
+                      tp: int = 1, ep: Optional[int] = None,
+                      dtype: str = "fp8"
+                      ) -> List[List[Optional["OperatingPoint"]]]:
+    """Batched optimizer.best_of_opts over clusters x scenarios."""
+    return best_of_opts_multi(clusters, cfg, scenarios, [opts], tp=tp,
+                              ep=ep, dtype=dtype)[opts]

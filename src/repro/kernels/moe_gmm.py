@@ -49,16 +49,32 @@ def _kernel(x_ref, wg_ref, wu_ref, wd_ref, out_ref, acc_ref, *, n_f: int):
 @functools.partial(jax.jit, static_argnames=("block_t", "block_f", "interpret"))
 def moe_gmm_pallas(x, w_gate, w_up, w_down, *, block_t: int = 128,
                    block_f: int = 256, interpret: bool = False):
-    """x: [E, T, D]; w_gate/w_up: [E, D, F]; w_down: [E, F, D] -> [E, T, D]."""
+    """x: [E, T, D]; w_gate/w_up: [E, D, F]; w_down: [E, F, D] -> [E, T, D].
+
+    T and F need not be tile multiples: the token and FFN axes zero-pad up
+    to the block size (block_t itself shrinks to T when T is smaller), so
+    arbitrary capacity factors run instead of tripping a divisibility
+    assert. Zero token rows produce zero outputs (sliced off) and zero FFN
+    columns contribute nothing to the down-projection, so padding is exact.
+    """
     e, t, d = x.shape
     f = w_gate.shape[-1]
-    bt = min(block_t, t)
-    bf = min(block_f, f)
-    assert t % bt == 0 and f % bf == 0, (t, bt, f, bf)
-    n_t, n_f = t // bt, f // bf
+    # shrink tiles for small T/F, keeping them hardware-aligned (sublane x8
+    # on the token axis, lane x128 on the FFN axis)
+    bt = min(block_t, -(-t // 8) * 8)
+    bf = min(block_f, -(-f // 128) * 128)
+    t_pad = -(-t // bt) * bt
+    f_pad = -(-f // bf) * bf
+    if t_pad != t:
+        x = jnp.pad(x, ((0, 0), (0, t_pad - t), (0, 0)))
+    if f_pad != f:
+        w_gate = jnp.pad(w_gate, ((0, 0), (0, 0), (0, f_pad - f)))
+        w_up = jnp.pad(w_up, ((0, 0), (0, 0), (0, f_pad - f)))
+        w_down = jnp.pad(w_down, ((0, 0), (0, f_pad - f), (0, 0)))
+    n_t, n_f = t_pad // bt, f_pad // bf
 
     grid = (e, n_t, n_f)
-    return pl.pallas_call(
+    out = pl.pallas_call(
         functools.partial(_kernel, n_f=n_f),
         grid=grid,
         in_specs=[
@@ -68,8 +84,9 @@ def moe_gmm_pallas(x, w_gate, w_up, w_down, *, block_t: int = 128,
             pl.BlockSpec((1, bf, d), lambda e_, t_, f_: (e_, f_, 0)),
         ],
         out_specs=pl.BlockSpec((1, bt, d), lambda e_, t_, f_: (e_, t_, 0)),
-        out_shape=jax.ShapeDtypeStruct((e, t, d), x.dtype),
+        out_shape=jax.ShapeDtypeStruct((e, t_pad, d), x.dtype),
         # f32 accumulator persisted across the sequential f grid steps
         scratch_shapes=[pltpu.VMEM((bt, d), jnp.float32)],
         interpret=interpret,
     )(x, w_gate, w_up, w_down)
+    return out[:, :t] if t_pad != t else out

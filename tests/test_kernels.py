@@ -1,12 +1,13 @@
 """Per-kernel validation: Pallas (interpret=True on CPU) vs the pure-jnp
-oracle, swept over shapes and dtypes, plus hypothesis property tests."""
+oracle, swept over shapes and dtypes. The hypothesis property tests live in
+test_kernels_props.py behind pytest.importorskip, so a missing `hypothesis`
+degrades to a skip instead of killing collection."""
 import functools
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.kernels import ref
 from repro.kernels.flash_decode import flash_decode_pallas
@@ -71,13 +72,15 @@ def test_moe_gmm_block_shapes(block_t, block_f):
                                rtol=2e-5)
 
 
-@given(e=st.integers(1, 3), nt=st.integers(1, 3), nf=st.integers(1, 3),
-       seed=st.integers(0, 2**16))
-@settings(max_examples=12, deadline=None)
-def test_moe_gmm_property(e, nt, nf, seed):
-    """Property: any (expert, tile-count) combination matches the oracle."""
-    t, d, f = 64 * nt, 32, 128 * nf
-    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+@pytest.mark.parametrize("e,t,d,f", [
+    (2, 100, 64, 300),       # t and f both off the tile boundary
+    (1, 7, 32, 130),         # tiny t -> block_t shrinks to t
+    (3, 130, 64, 256),       # t just past one tile
+])
+def test_moe_gmm_unaligned_shapes(e, t, d, f):
+    """Arbitrary capacity factors: non-tile-multiple t/f zero-pad instead of
+    crashing."""
+    ks = jax.random.split(jax.random.PRNGKey(t * 10 + f), 4)
     x = rand(ks[0], (e, t, d), jnp.float32)
     wg = rand(ks[1], (e, d, f), jnp.float32)
     wu = rand(ks[2], (e, d, f), jnp.float32)
@@ -85,6 +88,7 @@ def test_moe_gmm_property(e, nt, nf, seed):
     got = moe_gmm_pallas(x, wg, wu, wd, block_t=64, block_f=128,
                          interpret=True)
     want = ref.moe_gmm_ref(x, wg, wu, wd)
+    assert got.shape == (e, t, d)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=3e-5,
                                rtol=3e-5)
 
@@ -140,23 +144,6 @@ def test_flash_decode_block_invariance(block_s):
     got = flash_decode_pallas(q, k, v, jnp.int32(700), block_s=block_s,
                               interpret=True)
     want = ref.flash_decode_ref(q, k, v, 700)
-    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=3e-5,
-                               rtol=3e-5)
-
-
-@given(length_frac=st.floats(0.01, 1.0), seed=st.integers(0, 2**16))
-@settings(max_examples=12, deadline=None)
-def test_flash_decode_length_property(length_frac, seed):
-    """Property: masking via `length` equals physically truncating K/V."""
-    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
-    b, h, kh, s, hd = 1, 4, 2, 512, 32
-    q = rand(ks[0], (b, h, hd), jnp.float32)
-    k = rand(ks[1], (b, kh, s, hd), jnp.float32)
-    v = rand(ks[2], (b, kh, s, hd), jnp.float32)
-    length = max(int(s * length_frac), 1)
-    got = flash_decode_pallas(q, k, v, jnp.int32(length), interpret=True)
-    want = ref.flash_decode_ref(q, k[:, :, :length], v[:, :, :length],
-                                length)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=3e-5,
                                rtol=3e-5)
 

@@ -1,0 +1,57 @@
+"""Hypothesis property tests for the Pallas kernels.
+
+Kept separate from test_kernels.py so a missing `hypothesis` (an optional
+[dev] dependency) skips this module instead of erroring the whole suite at
+collection.
+"""
+import pytest
+
+pytest.importorskip("hypothesis")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.flash_decode import flash_decode_pallas
+from repro.kernels.moe_gmm import moe_gmm_pallas
+
+
+def rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype) * 0.3
+
+
+@given(e=st.integers(1, 3), nt=st.integers(1, 3), nf=st.integers(1, 3),
+       seed=st.integers(0, 2**16))
+@settings(max_examples=12, deadline=None)
+def test_moe_gmm_property(e, nt, nf, seed):
+    """Property: any (expert, tile-count) combination matches the oracle."""
+    t, d, f = 64 * nt, 32, 128 * nf
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    x = rand(ks[0], (e, t, d), jnp.float32)
+    wg = rand(ks[1], (e, d, f), jnp.float32)
+    wu = rand(ks[2], (e, d, f), jnp.float32)
+    wd = rand(ks[3], (e, f, d), jnp.float32)
+    got = moe_gmm_pallas(x, wg, wu, wd, block_t=64, block_f=128,
+                         interpret=True)
+    want = ref.moe_gmm_ref(x, wg, wu, wd)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=3e-5,
+                               rtol=3e-5)
+
+
+@given(length_frac=st.floats(0.01, 1.0), seed=st.integers(0, 2**16))
+@settings(max_examples=12, deadline=None)
+def test_flash_decode_length_property(length_frac, seed):
+    """Property: masking via `length` equals physically truncating K/V."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    b, h, kh, s, hd = 1, 4, 2, 512, 32
+    q = rand(ks[0], (b, h, hd), jnp.float32)
+    k = rand(ks[1], (b, kh, s, hd), jnp.float32)
+    v = rand(ks[2], (b, kh, s, hd), jnp.float32)
+    length = max(int(s * length_frac), 1)
+    got = flash_decode_pallas(q, k, v, jnp.int32(length), interpret=True)
+    want = ref.flash_decode_ref(q, k[:, :, :length], v[:, :, :length],
+                                length)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=3e-5,
+                               rtol=3e-5)

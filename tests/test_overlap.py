@@ -1,6 +1,9 @@
-"""DBO two-lane scheduler invariants + paper-mechanics checks (Fig 5/6)."""
+"""DBO two-lane scheduler invariants + paper-mechanics checks (Fig 5/6).
+
+The hypothesis property test lives in test_overlap_props.py behind
+pytest.importorskip, so a missing `hypothesis` degrades to a skip instead of
+killing collection."""
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core.overlap import ScheduleResult, TimedOp, simulate_two_lane
 
@@ -40,35 +43,3 @@ def test_compute_bound_hides_all():
 def test_empty_streams():
     res = simulate_two_lane([], [])
     assert res.makespan == 0.0
-
-
-@given(st.lists(st.tuples(st.sampled_from(["compute", "comm"]),
-                          st.floats(0.001, 10.0)), min_size=1, max_size=30))
-@settings(max_examples=200, deadline=None)
-def test_schedule_invariants(ops):
-    """Property: makespan >= max(lane busy times); >= each stream's total;
-    <= the fully-serial sum of both streams; within-stream order
-    preserved."""
-    a = [TimedOp(f"a{i}", l, d, 0) for i, (l, d) in enumerate(ops)]
-    b = [TimedOp(f"b{i}", l, d, 1) for i, (l, d) in enumerate(ops)]
-    res = simulate_two_lane(a, b)
-    stream_total = sum(d for _, d in ops)
-    assert res.makespan >= res.compute_busy - 1e-9
-    assert res.makespan >= res.comm_busy - 1e-9
-    assert res.makespan >= stream_total - 1e-9
-    assert res.makespan <= 2 * stream_total + 1e-9
-    # per-microbatch op order is preserved
-    for mb in (0, 1):
-        ends = [e for (_, m, s, e) in res.timeline if m == mb]
-        starts = [s for (_, m, s, e) in res.timeline if m == mb]
-        for i in range(1, len(ends)):
-            assert starts[i] >= ends[i - 1] - 1e-9
-    # lanes never run two ops at once
-    for lane in ("compute", "comm"):
-        lane_ops = sorted(
-            [(s, e) for (n, m, s, e) in res.timeline
-             for op in [next(o for o in (a + b)
-                             if o.name == n and o.mb == m)]
-             if op.lane == lane])
-        for (s1, e1), (s2, e2) in zip(lane_ops, lane_ops[1:]):
-            assert s2 >= e1 - 1e-9

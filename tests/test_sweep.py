@@ -1,0 +1,176 @@
+"""Sweep-engine validation: the batched path must match the scalar path.
+
+Three layers of guarantee, mirroring how the engine is built:
+
+  1. the op table's closed forms reproduce `workload.decode_iteration`
+     at random (batch, q_len, context) points (1e-9 relative),
+  2. `sweep.batched_tpot` matches the scalar `optimizer.tpot_at` on a
+     seeded random sample of (model, topology, batch, scenario, dbo, sd)
+     points (1e-9 relative),
+  3. `optimizer.max_throughput` / `best_of_opts` (batched) return
+     byte-identical `OperatingPoint`s to the seed scalar implementations
+     on the Table-3 cluster configs (all four topologies, N=64 and 256).
+"""
+from dataclasses import replace
+
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.core import H100, Scenario, make_cluster
+from repro.core import optable, optimizer, sweep, workload
+from repro.core.specdec import SpecDecConfig
+from repro.core.workload import ServingPoint
+
+TABLE3_TOPOS = ("scale-up", "scale-out", "torus", "fullmesh")
+TABLE3_SIZES = (64, 256)
+
+
+# ---------------------------------------------------------------------------
+# 1. op table vs decode_iteration
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch,tp,ep", [
+    ("deepseek-v3", 1, 64),       # MLA + MoE + shared expert
+    ("olmoe-1b-7b", 1, 16),       # GQA + MoE
+    ("starcoder2-3b", 2, 1),      # dense GQA with TP all-reduces
+    ("jamba-v0.1-52b", 1, 8),     # mamba/attn hybrid + MoE
+])
+def test_optable_matches_decode_iteration(arch, tp, ep):
+    cfg = get_arch(arch)
+    if cfg.moe is None:
+        ep = 1
+    n = 64
+    table = optable.op_table(cfg, tp, ep, n)
+    rng = np.random.default_rng(0)
+    for _ in range(8):
+        bg = int(rng.integers(1, 1 << 16))
+        ctx = int(rng.integers(1, 16384))
+        q = int(rng.integers(1, 8))
+        p = ServingPoint(batch_global=bg, context=ctx, tp=tp, ep=ep,
+                         n_devices=n, q_len=q)
+        ops = workload.decode_iteration(cfg, p)
+        assert tuple(o.name for o in ops) == table.names
+        b = np.array([bg])
+        for got, want in (
+                (table.flops(b, q, ctx)[:, 0], [o.flops for o in ops]),
+                (table.op_bytes(b, q, ctx)[:, 0], [o.bytes for o in ops]),
+                (table.m_bytes(b, q)[:, 0], [o.m_bytes for o in ops])):
+            np.testing.assert_allclose(got, np.array(want), rtol=1e-9,
+                                       atol=1e-6)
+
+
+def test_op_table_cache():
+    cfg = get_arch("deepseek-v3")
+    assert optable.op_table(cfg, 1, 64, 64) is optable.op_table(cfg, 1, 64, 64)
+    assert (optable.op_table(cfg, 1, 64, 64)
+            is not optable.op_table(cfg, 1, 32, 64))
+
+
+# ---------------------------------------------------------------------------
+# 2. batched TPOT vs scalar tpot_at (property over a seeded random sample)
+# ---------------------------------------------------------------------------
+
+def test_batched_tpot_matches_scalar_sample():
+    rng = np.random.default_rng(1234)
+    archs = ("deepseek-v3", "olmoe-1b-7b")
+    sizes = (8, 64, 256)
+    for _ in range(24):
+        arch = archs[rng.integers(len(archs))]
+        topo = TABLE3_TOPOS[rng.integers(len(TABLE3_TOPOS))]
+        n = int(sizes[rng.integers(len(sizes))])
+        if topo in ("torus", "fullmesh") and n == 8:
+            n = 64                      # 2x2x2 dims exist but stay on-paper
+        cfg = get_arch(arch)
+        ep = n if cfg.moe is not None else 1
+        cl = make_cluster(topo, n, H100,
+                          link_bw=float(rng.choice([50e9, 150e9, 450e9])))
+        sc = Scenario(float(rng.choice([10.0, 15.0, 40.0, 100.0])),
+                      int(rng.choice([512, 4096])))
+        dbo = bool(rng.integers(2))
+        sd = SpecDecConfig() if rng.integers(2) else None
+        batches = np.sort(rng.integers(1, 1 << 15, size=4))
+        table = optable.op_table(cfg, 1, ep, n)
+        got = sweep.batched_tpot(table, [cl], batches, [sc], dbo=dbo,
+                                 sd=sd)[0, 0]
+        p0 = ServingPoint(batch_global=1, context=sc.context, tp=1, ep=ep,
+                          n_devices=n)
+        want = np.array([
+            optimizer.tpot_at(cfg, replace(p0, batch_global=int(b)), cl,
+                              dbo=dbo, sd=sd)[0]
+            for b in batches])
+        np.testing.assert_allclose(got, want, rtol=1e-9)
+
+
+def test_batched_iteration_components_match_scalar():
+    cfg = get_arch("deepseek-v3")
+    cl = make_cluster("scale-up", 64, H100)
+    table = optable.op_table(cfg, 1, 64, 64)
+    batches = np.array([64, 1000, 8192])
+    t, tc, tm = sweep.batched_iteration_components(table, [cl], batches, 512)
+    for i, b in enumerate(batches):
+        p = ServingPoint(batch_global=int(b), context=512, ep=64,
+                         n_devices=64)
+        ts, _, tcs, tms = optimizer.iteration_time(cfg, p, cl, dbo=False)
+        np.testing.assert_allclose([t[0, i], tc[0, i], tm[0, i]],
+                                   [ts, tcs, tms], rtol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# 3. byte-identical OperatingPoints on the Table-3 cluster configs
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("topo", TABLE3_TOPOS)
+@pytest.mark.parametrize("n", TABLE3_SIZES)
+def test_max_throughput_byte_identical_table3(topo, n):
+    cfg = get_arch("deepseek-v3")
+    cl = make_cluster(topo, n, H100)
+    for sc in (Scenario(40.0, 512), Scenario(15.0, 4096)):
+        for dbo, sd in ((False, None), (True, SpecDecConfig())):
+            fast = optimizer.max_throughput(cl, cfg, sc, dbo=dbo, sd=sd)
+            ref = optimizer.max_throughput_scalar(cl, cfg, sc, dbo=dbo,
+                                                  sd=sd)
+            assert fast == ref, (topo, n, sc.name, dbo, sd)
+
+
+@pytest.mark.parametrize("opts", ["noopt", "dbo", "dbo+sd"])
+def test_best_of_opts_byte_identical(opts):
+    cfg = get_arch("deepseek-v3")
+    cl = make_cluster("fullmesh", 64, H100)
+    sc = Scenario(40.0, 512)
+    assert (optimizer.best_of_opts(cl, cfg, sc, opts=opts)
+            == optimizer.best_of_opts_scalar(cl, cfg, sc, opts=opts))
+
+
+def test_best_of_opts_grid_shape_and_consistency():
+    """The grid entry point agrees with per-point best_of_opts."""
+    cfg = get_arch("deepseek-v3")
+    clusters = [make_cluster(t, 64, H100) for t in ("scale-up", "torus")]
+    scenarios = [Scenario(40.0, 512), Scenario(100.0, 4096)]
+    grid = sweep.best_of_opts_grid(clusters, cfg, scenarios, "dbo")
+    assert len(grid) == 2 and all(len(row) == 2 for row in grid)
+    for ci, cl in enumerate(clusters):
+        for si, sc in enumerate(scenarios):
+            assert grid[ci][si] == optimizer.best_of_opts(cl, cfg, sc,
+                                                          opts="dbo")
+
+
+def test_best_of_opts_multi_matches_per_level():
+    """The shared-engine multi-level entry point equals per-level grids."""
+    cfg = get_arch("deepseek-v3")
+    clusters = [make_cluster("scale-up", 64, H100, link_bw=bw)
+                for bw in (450e9, 150e9)]
+    scenarios = [Scenario(40.0, 512)]
+    multi = sweep.best_of_opts_multi(clusters, cfg, scenarios,
+                                     ("noopt", "dbo", "dbo+sd"))
+    for opts in ("noopt", "dbo", "dbo+sd"):
+        assert multi[opts] == sweep.best_of_opts_grid(clusters, cfg,
+                                                      scenarios, opts)
+
+
+def test_mixed_cluster_sizes_rejected():
+    cfg = get_arch("deepseek-v3")
+    clusters = [make_cluster("scale-up", 64, H100),
+                make_cluster("scale-up", 256, H100)]
+    with pytest.raises(ValueError, match="uniform device count"):
+        sweep.sweep_max_throughput(clusters, cfg, [Scenario(40.0, 512)])
