@@ -28,16 +28,17 @@ def run(verbose: bool = True):
         row = [sc.context, int(sc.tpot_ms)]
         for ci, bw in enumerate(bws):
             op = ops[ci][si]
+            n_xpus = clusters[ci].n_xpus
             key = f"ctx{sc.context}/bw{int(bw / 1e9)}"
             if op is None:
                 row += ["miss", "-"]
                 results.setdefault(key, []).append(
                     {"tpot_ms": sc.tpot_ms, "thpt_per_xpu": 0.0, "batch": 0})
             else:
-                row += [f"{op.throughput / 64:.0f}", op.batch]
+                row += [f"{op.throughput / n_xpus:.0f}", op.batch]
                 results.setdefault(key, []).append(
                     {"tpot_ms": sc.tpot_ms,
-                     "thpt_per_xpu": op.throughput / 64,
+                     "thpt_per_xpu": op.throughput / n_xpus,
                      "batch": op.batch})
         rows.append(row)
     out = table(["ctx", "TPOT ms", "450: tok/s/XPU", "B", "150: tok/s/XPU",

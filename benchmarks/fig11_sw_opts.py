@@ -27,11 +27,12 @@ def run(verbose: bool = True):
         grid = grids[opts]
         for ci, bw in enumerate(bws):
             key = f"{opts}/bw{int(bw / 1e9)}"
+            n_xpus = clusters[ci].n_xpus
             for si, tpot in enumerate(tpots):
                 op = grid[ci][si]
                 results.setdefault(key, []).append(
                     {"tpot_ms": tpot,
-                     "thpt_per_xpu": (op.throughput / 64) if op else 0.0,
+                     "thpt_per_xpu": (op.throughput / n_xpus) if op else 0.0,
                      "used_dbo": bool(op and op.used_dbo),
                      "used_sd": bool(op and op.used_sd)})
 

@@ -33,11 +33,12 @@ def run(verbose: bool = True):
         row = [b]
         for ci, key in ((0, "450"), (1, "150")):
             ti = float(t[ci, bi])
+            n_xpus = clusters[ci].n_xpus
             results[key].append({"batch": b, "tpot_ms": ti * 1e3,
                                  "t_comp_ms": float(tc[ci, bi]) * 1e3,
                                  "t_comm_ms": float(tm[ci, bi]) * 1e3,
-                                 "thpt_per_xpu": b / ti / 64})
-            row += [f"{ti * 1e3:.2f}", f"{b / ti / 64:.0f}"]
+                                 "thpt_per_xpu": b / ti / n_xpus})
+            row += [f"{ti * 1e3:.2f}", f"{b / ti / n_xpus:.0f}"]
         rows.append(row)
     out = table(["batch", "TPOT@450 ms", "tok/s/XPU", "TPOT@150 ms",
                  "tok/s/XPU"], rows,

@@ -20,6 +20,27 @@ Each harness run records wall-clock per sweep-heavy module next to the
 timings measured at the seed commit into
 `bench_results/BENCH_sweep_timing.json`; the end-to-end speedup quoted
 there is the evidence for the engine's >= 5x acceptance bar.
+
+Prefill serving modes
+---------------------
+`fig_prefill_scenarios` extends the operating-point search beyond the
+paper's decode-only model: `Scenario` carries an optional
+(`prompt_len`, `ttft_ms`) prefill spec, `workload.prefill_iteration`
+emits the chunk op list (attention quadratic in chunk, MoE rows linear),
+`optable.prefill_op_table` lowers it to polynomial coefficient tables,
+and `sweep.sweep_prefill` searches three modes per (cluster, scenario):
+
+  decode    the paper's search, prefill free (baseline)
+  chunked   prefill chunks interleaved into decode iterations — joint
+            batch x chunk-size search; TPOT carries the load-weighted
+            chunk tax, TTFT is the sum of the chunk iterations
+  disagg    prefill/decode pools with the split ratio swept; throughput
+            is the balanced pipeline rate, TTFT one whole-prompt pass
+            plus the KV-cache handoff
+
+Decode-only scenarios (`prompt_len == 0`) evaluate byte-identically to
+the seed search — the fig9-fig18 JSONs are regression-locked by
+tests/test_prefill.py.
 """
 from __future__ import annotations
 
@@ -43,6 +64,7 @@ MODULES = [
     "benchmarks.fig16_scale",
     "benchmarks.fig17_pareto",
     "benchmarks.fig18_future",
+    "benchmarks.fig_prefill_scenarios",
     "benchmarks.roofline",
 ]
 

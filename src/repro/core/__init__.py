@@ -6,12 +6,13 @@ methodology for MoE LLM serving networks.
   topology     scale-up / scale-out / 3D torus / 3D full-mesh clusters
   hardware     XPU generations (H100, Blackwell, Rubin, TPU v5e; Table 5)
   compute_model roofline-with-efficiency per-layer compute times
-  workload     MoE decode iteration -> ordered op list (per-device shapes)
+  workload     MoE decode/prefill iterations -> ordered op lists (per-device)
   overlap      DBO greedy two-lane scheduler -> exposed communication time
   specdec      speculative decoding TPOT model
   tco          CapEx/OpEx cluster cost model (+ adjustment factor c)
-  optable      decode op list lowered to coefficient arrays (sweep input)
-  sweep        batched operating-point search (vectorized alpha-beta + DBO)
+  optable      decode/prefill op lists lowered to coefficient arrays
+  sweep        batched operating-point search (vectorized alpha-beta + DBO,
+               chunked / disaggregated prefill serving modes)
   optimizer    max-throughput-under-SLO sweep
   pareto       performance-vs-cost sweep + Pareto frontier (Fig 17)
   future       Blackwell/Rubin saturating-bandwidth projection (Fig 18/19)
@@ -21,7 +22,9 @@ from repro.core.hardware import (H100, BLACKWELL, RUBIN, TPU_V5E, GENERATIONS,
                                  XPUSpec)
 from repro.core.optimizer import (Scenario, SCENARIOS, best_of_opts,
                                   best_of_opts_scalar, max_throughput,
-                                  max_throughput_scalar)
+                                  max_throughput_prefill,
+                                  max_throughput_scalar,
+                                  PrefillOperatingPoint)
 from repro.core.specdec import SpecDecConfig
 from repro.core.topology import Cluster, make_cluster, TOPOLOGIES
 from repro.core.tco import cluster_tco, throughput_per_cost

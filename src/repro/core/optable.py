@@ -193,3 +193,189 @@ def op_table(cfg: ModelConfig, tp: int, ep: int, n_devices: int,
     cache as they should."""
     return build_op_table(cfg, tp=tp, ep=ep, n_devices=n_devices,
                           dtype=dtype, kv_dtype=kv_dtype)
+
+
+# ---------------------------------------------------------------------------
+# prefill tables
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class PrefillOpTable:
+    """`workload.prefill_iteration` lowered to polynomial coefficients.
+
+    With b = batch_per_device, rows = b * chunk, and ctx = tokens already
+    cached when the chunk starts, every prefill op is exactly a polynomial
+    over the basis
+
+      flops   = flop_row * rows + flop_row_ctx * rows*ctx
+                + flop_row_chunk * rows*chunk          (causal intra-chunk)
+      bytes   = bytes_const + bytes_row * rows + bytes_ctx * b*ctx
+      m_bytes = m_row * rows
+
+    (the rows*chunk flop term is the quadratic-in-chunk attention core; the
+    chunk's own KV streaming lands in bytes_row since it is linear in rows).
+    As with the decode table, coefficients are recovered by probing
+    `prefill_iteration` rather than re-deriving formulas, and validated at
+    an independent (batch, chunk, context) point so nonlinearity creeping
+    into the workload raises instead of mis-sweeping.
+    """
+    cfg_name: str
+    tp: int
+    ep: int
+    n: int
+    dtype: str
+    kv_dtype: str
+
+    names: Tuple[str, ...]
+    kind: np.ndarray
+    group: np.ndarray
+    eff: np.ndarray
+    eff_small: np.ndarray
+
+    flop_row: np.ndarray
+    flop_row_ctx: np.ndarray
+    flop_row_chunk: np.ndarray
+    bytes_const: np.ndarray
+    bytes_row: np.ndarray
+    bytes_ctx: np.ndarray
+    m_row: np.ndarray
+
+    @property
+    def n_ops(self) -> int:
+        return len(self.names)
+
+    @property
+    def is_compute(self) -> np.ndarray:
+        return self.kind == KIND_COMPUTE
+
+    # ------------- closed-form evaluation -------------
+    # `chunk` and `ctx` broadcast together (e.g. the per-chunk sizes and
+    # offsets of one chunked-prefill schedule); `batch_global` is scalar.
+    def batch_per_device(self, batch_global: float) -> float:
+        return batch_global * self.tp / self.n
+
+    def rows(self, batch_global: float, chunk: np.ndarray) -> np.ndarray:
+        return self.batch_per_device(batch_global) * np.asarray(chunk, float)
+
+    def flops(self, batch_global: float, chunk: np.ndarray,
+              ctx: np.ndarray) -> np.ndarray:
+        """(n_ops, *chunk.shape) FLOPs per op."""
+        rows = self.rows(batch_global, chunk)
+        ctx = np.asarray(ctx, float)
+        return (self.flop_row[:, None] * rows
+                + self.flop_row_ctx[:, None] * (rows * ctx)
+                + self.flop_row_chunk[:, None] * (rows * np.asarray(chunk,
+                                                                    float)))
+
+    def op_bytes(self, batch_global: float, chunk: np.ndarray,
+                 ctx: np.ndarray) -> np.ndarray:
+        rows = self.rows(batch_global, chunk)
+        b = self.batch_per_device(batch_global)
+        ctx = np.asarray(ctx, float)
+        return (self.bytes_const[:, None] + self.bytes_row[:, None] * rows
+                + self.bytes_ctx[:, None] * (b * ctx))
+
+    def m_bytes(self, batch_global: float, chunk: np.ndarray) -> np.ndarray:
+        return self.m_row[:, None] * self.rows(batch_global, chunk)
+
+
+def _probe_prefill(cfg: ModelConfig, *, batch_global: int, context: int,
+                   chunk: int, tp: int, ep: int, n: int, dtype: str,
+                   kv_dtype: str):
+    p = ServingPoint(batch_global=batch_global, context=context, tp=tp,
+                     ep=ep, n_devices=n, dtype=dtype, kv_dtype=kv_dtype)
+    ops = workload.prefill_iteration(cfg, p, chunk)
+    return (tuple(o.name for o in ops),
+            np.array([o.flops for o in ops]),
+            np.array([o.bytes for o in ops]),
+            np.array([o.m_bytes for o in ops]),
+            ops)
+
+
+def build_prefill_op_table(cfg: ModelConfig, *, tp: int = 1, ep: int = 1,
+                           n_devices: int = 0, dtype: str = "fp8",
+                           kv_dtype: str = "bf16") -> PrefillOpTable:
+    """Lower one prefill iteration to a PrefillOpTable via polynomial probes.
+
+    Probe points: b=0 isolates constant (weight) bytes; at b=tp, chunk 1 vs
+    2 (ctx=0) separates the rows and rows*chunk flop terms; ctx 0 vs 1 at
+    chunk=1 isolates the context terms.
+    """
+    n = n_devices or (ep * tp)
+    kw = dict(tp=tp, ep=ep, n=n, dtype=dtype, kv_dtype=kv_dtype)
+    names0, f0, by0, m0, ops = _probe_prefill(cfg, batch_global=0, context=0,
+                                              chunk=1, **kw)
+    names1, f1, by1, m1, _ = _probe_prefill(cfg, batch_global=n, context=0,
+                                            chunk=1, **kw)
+    names2, f2, by2, m2, _ = _probe_prefill(cfg, batch_global=n, context=0,
+                                            chunk=2, **kw)
+    names3, f3, by3, m3, _ = _probe_prefill(cfg, batch_global=n, context=1,
+                                            chunk=1, **kw)
+    if not (names0 == names1 == names2 == names3):
+        raise ValueError("prefill op-list structure varies with "
+                         "batch/chunk/context; cannot lower to a table")
+
+    b1 = float(tp)                       # batch_per_device at the b-probes
+    # flops: f1 = b1*(fr + fc); f2 = b1*(2*fr + 4*fc); f3 adds b1*fctx
+    flop_row_chunk = (f2 - 2 * f1) / (2 * b1)
+    flop_row = f1 / b1 - flop_row_chunk
+    flop_row_ctx = (f3 - f1) / b1
+    bytes_const = by0
+    bytes_row = (by1 - by0) / b1
+    bytes_ctx = (by3 - by1) / b1
+    m_row = m1 / b1
+
+    eff = np.array([EFF_COMPUTE.get(o.op_class, EFF_COMPUTE["other"])
+                    for o in ops])
+    eff_small = np.array([
+        EFF_COMPUTE["gemm_small"] if o.op_class == "gemm"
+        else EFF_COMPUTE.get(o.op_class, EFF_COMPUTE["other"])
+        for o in ops])
+
+    table = PrefillOpTable(
+        cfg_name=cfg.name, tp=tp, ep=ep, n=n, dtype=dtype, kv_dtype=kv_dtype,
+        names=names0,
+        kind=np.array([KIND_CODES[o.kind] for o in ops], np.int8),
+        group=np.array([o.group for o in ops], np.int64),
+        eff=eff, eff_small=eff_small,
+        flop_row=flop_row, flop_row_ctx=flop_row_ctx,
+        flop_row_chunk=flop_row_chunk,
+        bytes_const=bytes_const, bytes_row=bytes_row, bytes_ctx=bytes_ctx,
+        m_row=m_row)
+    _validate_prefill(cfg, table, **kw)
+    return table
+
+
+def _validate_prefill(cfg: ModelConfig, table: PrefillOpTable, *, tp, ep, n,
+                      dtype, kv_dtype, rtol: float = 1e-9):
+    """Cross-check the closed forms against a generic probe point (the
+    chunk=7 probe would expose e.g. a cubic-in-chunk term the chunk={1,2}
+    fit could not see)."""
+    bg, chunk, ctx = 3 * n, 7, 37
+    _, f, by, m, _ = _probe_prefill(cfg, batch_global=bg, context=ctx,
+                                    chunk=chunk, tp=tp, ep=ep, n=n,
+                                    dtype=dtype, kv_dtype=kv_dtype)
+    c_arr = np.array([chunk], float)
+    o_arr = np.array([ctx], float)
+    got_f = table.flops(bg, c_arr, o_arr)[:, 0]
+    got_by = table.op_bytes(bg, c_arr, o_arr)[:, 0]
+    got_m = table.m_bytes(bg, c_arr)[:, 0]
+    for got, want, what in ((got_f, f, "flops"), (got_by, by, "bytes"),
+                            (got_m, m, "m_bytes")):
+        err = np.abs(got - want) / np.maximum(np.abs(want), 1.0)
+        if err.max() > rtol:
+            i = int(err.argmax())
+            raise ValueError(
+                f"prefill op table diverges from prefill_iteration on "
+                f"{what} for op {table.names[i]!r}: {got[i]!r} vs "
+                f"{want[i]!r} — workload formulas are no longer polynomial "
+                "in the prefill sweep basis")
+
+
+@lru_cache(maxsize=64)
+def prefill_op_table(cfg: ModelConfig, tp: int, ep: int, n_devices: int,
+                     dtype: str = "fp8",
+                     kv_dtype: str = "bf16") -> PrefillOpTable:
+    """LRU-cached prefill table builder — the prefill sweep's entry point."""
+    return build_prefill_op_table(cfg, tp=tp, ep=ep, n_devices=n_devices,
+                                  dtype=dtype, kv_dtype=kv_dtype)

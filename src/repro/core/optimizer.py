@@ -32,13 +32,38 @@ from repro.core.workload import ServingPoint
 
 @dataclass(frozen=True)
 class Scenario:
-    """TPOT SLO x average context length (paper section 3.1)."""
+    """TPOT SLO x average context length (paper section 3.1), optionally
+    extended with a prefill spec: `prompt_len` (tokens to prefill per
+    request) and `ttft_ms` (time-to-first-token SLO; 0 = unconstrained).
+    `prompt_len == 0` keeps the seed's decode-only semantics."""
     tpot_ms: float
     context: int
+    prompt_len: int = 0
+    ttft_ms: float = 0.0
 
     @property
     def name(self) -> str:
-        return f"tpot{int(self.tpot_ms)}ms_ctx{self.context}"
+        base = f"tpot{int(self.tpot_ms)}ms_ctx{self.context}"
+        if self.prompt_len:
+            base += f"_p{self.prompt_len}_ttft{int(self.ttft_ms)}ms"
+        return base
+
+    @property
+    def gen_len(self) -> int:
+        """Decode tokens per request implied by `context` being the AVERAGE
+        KV length during decode: context = prompt_len + gen_len / 2."""
+        return max(2 * (self.context - self.prompt_len), 1)
+
+    @property
+    def mem_context(self) -> int:
+        """Context of the single-request KV REJECTION guard: a scenario is
+        serveable only if one request's prompt plus its decode context can
+        be held at all. Batch sizing itself stays at the seed convention
+        (KV at the AVERAGE `context`); the in-flight prompt KV of chunked
+        prefill (at most one request per DP domain) is second-order
+        against the hundreds of decode slots per device and is not
+        reserved per slot."""
+        return self.context + self.prompt_len
 
 
 # the paper's evaluation grid
@@ -59,6 +84,25 @@ class OperatingPoint:
     @property
     def throughput_per_xpu(self):  # filled by caller via cluster.n_xpus
         raise AttributeError("use result.throughput / cluster.n_xpus")
+
+
+@dataclass(frozen=True)
+class PrefillOperatingPoint:
+    """Operating point of a prefill-aware serving mode.
+
+    mode 'decode' is the seed's prefill-free search (ttft = 0.0 means "not
+    modeled"); 'chunked' interleaves prefill chunks into decode iterations;
+    'disagg' splits the cluster into prefill/decode pools. `throughput` is
+    decode tokens/s cluster-wide, capped by the prefill/decode pipeline
+    balance, so modes are directly comparable."""
+    mode: str                  # "decode" | "chunked" | "disagg"
+    batch: int                 # decode requests in flight
+    tpot: float                # seconds (chunked: mixed-iteration average)
+    ttft: float                # seconds (0.0 in decode mode)
+    throughput: float          # decode tokens/s, cluster-wide
+    chunk: int = 0             # chunked: chunk size; disagg: prompt tokens/pass
+    n_prefill_xpus: int = 0    # disagg: prefill-pool device count
+    n_decode_xpus: int = 0     # disagg: decode-pool device count
 
 
 # ---------------------------------------------------------------------------
@@ -101,6 +145,59 @@ def iteration_time(cfg: ModelConfig, p: ServingPoint, cluster: Cluster,
     tc = 2 * sum(t_comp(o) for o in ops_half if o.kind == "compute")
     tm = 2 * sum(t_comm(o) for o in ops_half if o.kind != "compute")
     return makespan, exposed, tc, tm
+
+
+def prefill_iteration_time(cfg: ModelConfig, p: ServingPoint,
+                           cluster: Cluster,
+                           chunk: int) -> tuple[float, float, float]:
+    """One prefill iteration (`chunk` tokens after `p.context` cached) ->
+    (t_iter, t_compute, t_comm), no-overlap. The thin-GEMM efficiency
+    cutoff sees rows = batch_per_device * chunk, mirroring the decode
+    timers at q_len = chunk."""
+    ops = workload.prefill_iteration(cfg, p, chunk)
+    t_comp, t_comm = _timers(cluster, replace(p, q_len=chunk))
+    tc = sum(t_comp(o) for o in ops if o.kind == "compute")
+    tm = sum(t_comm(o) for o in ops if o.kind != "compute")
+    return tc + tm, tc, tm
+
+
+def chunked_prefill_tpot(cfg: ModelConfig, p: ServingPoint, cluster: Cluster,
+                         scenario: Scenario,
+                         chunk: int) -> tuple[float, float]:
+    """(TPOT, TTFT) of the chunked-prefill model at decode batch
+    B = `p.batch_global` (Sarathi-style: chunks piggyback on decode
+    iterations, one chunk per DP-attention domain per carrying iteration).
+
+    Each decode slot turns over every `gen_len` iterations and its
+    replacement prompt needs `n_chunks` chunk-iterations on one of the
+    `domains` DP lanes, so the fraction of iterations that carry a chunk is
+
+        phi = B_eff * n_chunks / (gen_len * domains)        (phi <= 1;
+        B_eff = min(B, domains * gen_len / n_chunks) is the
+        pipeline-balanced decode batch — beyond it prefill cannot refill
+        the batch and slots idle)
+
+    TPOT is the load-weighted average iteration, t_dec + phi * mean_j
+    t_chunk_j; TTFT is the sum over the prompt's chunk schedule of the
+    iterations it rides, sum_j (t_dec + t_chunk_j) — those iterations DO
+    carry its chunks back to back. No-overlap timing; DBO for mixed
+    iterations is a ROADMAP follow-on.
+    """
+    t_dec = iteration_time(cfg, p, cluster, dbo=False)[0]
+    sizes, offsets = workload.chunk_schedule(scenario.prompt_len, chunk)
+    pp = replace(p, batch_global=max(p.n // p.tp, 1))   # one chunk / domain
+    t_pre = [prefill_iteration_time(cfg, replace(pp, context=off), cluster,
+                                    s)[0]
+             for s, off in zip(sizes, offsets)]
+    m = len(t_pre)
+    domains = max(p.n // p.tp, 1)
+    g = scenario.gen_len
+    b_eff = min(float(p.batch_global), domains * g / m)
+    phi = b_eff * m / (g * domains)
+    s_pre = sum(t_pre)
+    tpot = t_dec + phi * (s_pre / m)
+    ttft = m * t_dec + s_pre
+    return tpot, ttft
 
 
 def tpot_at(cfg: ModelConfig, p: ServingPoint, cluster: Cluster, *,
@@ -190,6 +287,13 @@ def max_throughput_scalar(cluster: Cluster, cfg: ModelConfig,
 
     p0 = ServingPoint(batch_global=1, context=scenario.context, tp=tp, ep=ep,
                       n_devices=n, dtype=dtype)
+    # reject scenarios where ONE request's prompt + decode context cannot
+    # be held at all (degenerate empty grids otherwise); batch sizing
+    # keeps the seed convention of KV at the average context
+    p_mem = replace(p0, context=getattr(scenario, "mem_context",
+                                        scenario.context))
+    if not workload.single_request_fits(cfg, p_mem, cluster.xpu.hbm_cap):
+        return None
     b_max = workload.max_batch_by_memory(cfg, p0, cluster.xpu.hbm_cap)
     best: Optional[OperatingPoint] = None
     for b in _batch_grid(b_max, max(n // tp, 1)):
@@ -215,6 +319,20 @@ def best_of_opts(cluster: Cluster, cfg: ModelConfig, scenario: Scenario,
     from repro.core import sweep
     return sweep.best_of_opts_grid([cluster], cfg, [scenario], opts,
                                    **kw)[0][0]
+
+
+def max_throughput_prefill(cluster: Cluster, cfg: ModelConfig,
+                           scenario: Scenario, mode: str = "chunked",
+                           **kw) -> Optional[PrefillOperatingPoint]:
+    """Prefill-aware best operating point under BOTH the TPOT and TTFT SLOs.
+
+    mode: 'decode' (seed behavior, prefill unmodeled) | 'chunked' (prefill
+    chunks interleaved into decode iterations) | 'disagg' (cluster split
+    into prefill/decode pools, split ratio swept). Runs on the batched
+    prefill sweep; see `sweep.sweep_prefill` for the grid entry point."""
+    from repro.core import sweep
+    return sweep.sweep_prefill([cluster], cfg, [scenario], mode=mode,
+                               **kw)[0][0]
 
 
 def best_of_opts_scalar(cluster: Cluster, cfg: ModelConfig,

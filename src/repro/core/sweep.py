@@ -261,8 +261,18 @@ def _prepare_grid(clusters, cfg, scenarios, tp, ep_r, dtype):
     union = set()
     for ci, cl in enumerate(clusters):
         for si, sc in enumerate(scenarios):
+            # reject scenarios where ONE request's prompt + decode context
+            # cannot be held at all (empty grid, not a degenerate batch-0
+            # point); batch sizing keeps the seed convention of KV at the
+            # average context
+            mem_ctx = getattr(sc, "mem_context", sc.context)
             p0 = ServingPoint(batch_global=1, context=sc.context, tp=tp,
                               ep=ep_r, n_devices=n, dtype=dtype)
+            p_mem = ServingPoint(batch_global=1, context=mem_ctx, tp=tp,
+                                 ep=ep_r, n_devices=n, dtype=dtype)
+            if not workload.single_request_fits(cfg, p_mem, cl.xpu.hbm_cap):
+                grids[ci, si] = []
+                continue
             b_max = workload.max_batch_by_memory(cfg, p0, cl.xpu.hbm_cap)
             grids[ci, si] = _batch_grid(b_max, max(n // tp, 1))
             union.update(grids[ci, si])
@@ -422,3 +432,293 @@ def best_of_opts_grid(clusters: Sequence[Cluster], cfg: ModelConfig,
     """Batched optimizer.best_of_opts over clusters x scenarios."""
     return best_of_opts_multi(clusters, cfg, scenarios, [opts], tp=tp,
                               ep=ep, dtype=dtype)[opts]
+
+
+# ---------------------------------------------------------------------------
+# prefill-aware operating-point search
+# ---------------------------------------------------------------------------
+
+# chunk sizes tried by the chunked-prefill search (clipped to the prompt)
+CHUNK_GRID = (128, 256, 512, 1024, 2048)
+# prefill-pool fractions tried by the disaggregated-prefill search
+SPLIT_FRACS = (0.125, 0.25, 0.375, 0.5, 0.625, 0.75)
+
+
+def _prefill_chunk_times(ptable: "optable.PrefillOpTable", cluster: Cluster,
+                         batch_global: int, sizes: Sequence[int],
+                         offsets: Sequence[int]) -> np.ndarray:
+    """No-overlap prefill-iteration time per chunk of one schedule,
+    shape (n_chunks,) — the batched `optimizer.prefill_iteration_time`."""
+    s = np.asarray(sizes, float)
+    o = np.asarray(offsets, float)
+    rows = ptable.rows(batch_global, s)                    # (n_chunks,)
+    flops = ptable.flops(batch_global, s, o)               # (n_ops, n_chunks)
+    byts = ptable.op_bytes(batch_global, s, o)
+    m = ptable.m_bytes(batch_global, s)
+
+    fp8 = ptable.dtype == "fp8"
+    peak = cluster.xpu.flops_fp8 if fp8 else cluster.xpu.flops_bf16
+    eff = np.where(rows < GEMM_SMALL_TOKENS,
+                   ptable.eff_small[:, None], ptable.eff[:, None])
+    t_c = flops / (peak * eff)
+    t_m = byts / (cluster.xpu.hbm_bw * EFF_MEMORY)
+    comp = np.maximum(t_c, t_m) + T_LAUNCH
+    is_comp = ptable.is_compute[:, None]
+    comp = np.where(is_comp, comp, 0.0)
+    comm = np.where(is_comp, 0.0, _comm_times(ptable, cluster, m))
+    return comp.sum(axis=0) + comm.sum(axis=0)
+
+
+def _chunked_formulas(t_dec, s_pre, m: int, batches, gen_len: int,
+                      domains: int):
+    """(tpot, ttft, b_eff) of the load-weighted chunked-prefill model —
+    the ONE place the batched search evaluates it (see
+    `optimizer.chunked_prefill_tpot` for the derivation and the scalar
+    reference the 1e-9 equivalence test locks this against). Broadcasts
+    over any (t_dec, batches) shapes."""
+    b_eff = np.minimum(np.asarray(batches, float), domains * gen_len / m)
+    phi = b_eff * m / (gen_len * domains)
+    tpot = t_dec + phi * (s_pre / m)
+    ttft = m * t_dec + s_pre
+    return tpot, ttft, b_eff
+
+
+def batched_chunked_tpot_ttft(op_table: OpTable,
+                              ptable: "optable.PrefillOpTable",
+                              clusters: Sequence[Cluster],
+                              batches: np.ndarray, scenario,
+                              chunk: int) -> Tuple[np.ndarray, np.ndarray]:
+    """(TPOT, TTFT) of the chunked-prefill model over a (cluster, batch)
+    grid, each (n_clusters, n_batches) — the batched
+    `optimizer.chunked_prefill_tpot` (matches it to 1e-9 relative)."""
+    ev = GridEval(op_table, clusters, [scenario], batches)
+    t_dec = ev.seq_components(1)[0][:, 0, :]               # (n_cl, n_b)
+    sizes, offsets = workload.chunk_schedule(scenario.prompt_len, chunk)
+    domains = max(op_table.n // op_table.tp, 1)
+    s_pre = np.stack([_prefill_chunk_times(ptable, cl, domains, sizes,
+                                           offsets).sum()
+                      for cl in clusters])                 # (n_cl,)
+    tpot, ttft, _ = _chunked_formulas(t_dec, s_pre[:, None], len(sizes),
+                                      batches[None, :], scenario.gen_len,
+                                      domains)
+    return tpot, ttft
+
+
+def _as_decode_point(op) -> Optional["optimizer.PrefillOperatingPoint"]:
+    from repro.core import optimizer
+    if op is None:
+        return None
+    return optimizer.PrefillOperatingPoint(
+        mode="decode", batch=op.batch, tpot=op.tpot, ttft=0.0,
+        throughput=op.throughput)
+
+
+def _chunk_candidates(prompt_len: int, chunk_grid: Sequence[int]) -> List[int]:
+    return sorted({min(int(c), prompt_len) for c in chunk_grid if c >= 1})
+
+
+def _sweep_chunked(clusters, cfg, scenarios, tp, ep_r, dtype, chunk_grid):
+    """Joint (batch, chunk) search of the chunked-prefill mode.
+
+    For each (cluster, scenario): TPOT/TTFT over the batch grid x chunk
+    candidates via the closed-form tables (see
+    `optimizer.chunked_prefill_tpot` for the load-weighted iteration
+    model). Throughput is B_eff / TPOT with B_eff = min(B, domains *
+    gen_len / n_chunks) — past that batch the prefill lanes cannot refill
+    the decode batch and slots idle. The winner is re-derived through the
+    scalar path; knife-edge cells (batched feasibility within float
+    rounding of the SLO) may return a point within 1e-9 of the budget.
+    """
+    from repro.core import optimizer
+
+    n = clusters[0].n_xpus
+    table = optable.op_table(cfg, tp, ep_r, n, dtype)
+    ptable = optable.prefill_op_table(cfg, tp, ep_r, n, dtype)
+    grids, batches = _prepare_grid(clusters, cfg, scenarios, tp, ep_r, dtype)
+    if batches.size == 0:
+        return [[None] * len(scenarios) for _ in clusters]
+    ev = GridEval(table, clusters, scenarios, batches)
+    t_dec_all = ev.seq_components(1)[0]                    # (n_cl, n_sc, n_b)
+    index = {int(b): i for i, b in enumerate(batches)}
+    domains = max(n // tp, 1)
+
+    out: List[List[Optional[optimizer.PrefillOperatingPoint]]] = []
+    for ci, cl in enumerate(clusters):
+        row = []
+        for si, sc in enumerate(scenarios):
+            budget = sc.tpot_ms * 1e-3
+            ttft_budget = sc.ttft_ms * 1e-3 if sc.ttft_ms else float("inf")
+            best = None                     # (thr, b, chunk, b_eff)
+            for c in _chunk_candidates(sc.prompt_len, chunk_grid):
+                sizes, offsets = workload.chunk_schedule(sc.prompt_len, c)
+                m = len(sizes)
+                s_pre = float(_prefill_chunk_times(ptable, cl, domains,
+                                                   sizes, offsets).sum())
+                for b in grids[ci, si]:
+                    t_dec = float(t_dec_all[ci, si, index[b]])
+                    tpot, ttft, b_eff = (
+                        float(v) for v in _chunked_formulas(
+                            t_dec, s_pre, m, float(b), sc.gen_len, domains))
+                    if tpot > budget or ttft > ttft_budget:
+                        continue
+                    thr = b_eff / tpot
+                    if best is None or thr > best[0]:
+                        best = (thr, b, c, b_eff)
+            if best is None:
+                row.append(None)
+                continue
+            _, b, c, b_eff = best
+            p = ServingPoint(batch_global=b, context=sc.context, tp=tp,
+                             ep=ep_r, n_devices=n, dtype=dtype)
+            tpot_s, ttft_s = optimizer.chunked_prefill_tpot(cfg, p, cl, sc,
+                                                            c)
+            row.append(optimizer.PrefillOperatingPoint(
+                mode="chunked", batch=b, tpot=tpot_s, ttft=ttft_s,
+                throughput=b_eff / tpot_s, chunk=c))
+        out.append(row)
+    return out
+
+
+def _pool_dims(n: int) -> Tuple[int, ...]:
+    """Most-cubic 3D factorization of a pool size (sub-pools of torus /
+    full-mesh clusters need explicit dims; DIMS_BY_SIZE only covers the
+    paper's whole-cluster sizes)."""
+    best = (n, 1, 1)
+    for a in range(1, n + 1):
+        if n % a:
+            continue
+        for b in range(a, n // a + 1):
+            if (n // a) % b:
+                continue
+            c = n // (a * b)
+            if c < b:
+                break
+            if max((c, b, a)) < max(best):
+                best = (c, b, a)
+    return best
+
+
+def _subcluster(cl: Cluster, n_sub: int) -> Cluster:
+    """A pool carved out of `cl`: same XPU, per-XPU link bandwidth and
+    topology family, `n_sub` devices."""
+    dims = _pool_dims(n_sub) if cl.topology in ("torus", "fullmesh") else None
+    return Cluster(topology=cl.topology, n_xpus=n_sub, xpu=cl.xpu,
+                   link_bw=cl.link_bw, dims=dims)
+
+
+def _split_candidates(n: int, tp: int, fracs: Sequence[float]) -> List[int]:
+    """Prefill-pool sizes to try: tp-aligned, both pools >= tp devices."""
+    cands = set()
+    for f in fracs:
+        n_p = max(int(round(n * f / tp)), 1) * tp
+        if tp <= n_p <= n - tp:
+            cands.add(n_p)
+    return sorted(cands)
+
+
+def _sweep_disagg(clusters, cfg, scenarios, tp, dtype, split_fracs):
+    """Disaggregated-prefill search: sweep the prefill/decode split ratio.
+
+    The decode pool runs the ordinary decode-only search on its sub-cluster
+    (EP spans the pool); the prefill pool runs whole-prompt prefill, one
+    prompt per DP domain per pass. TTFT = prefill pass + KV-cache handoff
+    to the decode pool (alpha-beta over one XPU's link, at the cluster's
+    link utilization); throughput is the balanced pipeline rate
+    min(decode tokens/s, prefill request rate * gen_len).
+    """
+    from repro.core import optimizer
+
+    n = clusters[0].n_xpus
+    out: List[List[Optional[optimizer.PrefillOperatingPoint]]] = \
+        [[None] * len(scenarios) for _ in clusters]
+    for n_p in _split_candidates(n, tp, split_fracs):
+        n_d = n - n_p
+        # clusters share n_xpus, so their decode pools share n_d: one
+        # vectorized decode search covers ALL clusters x scenarios per split
+        dec_grid = sweep_max_throughput([_subcluster(cl, n_d)
+                                         for cl in clusters], cfg,
+                                        scenarios, tp=tp, dtype=dtype)
+        ep_p = n_p if cfg.moe is not None else 1
+        domains_p = max(n_p // tp, 1)
+        ptable = optable.prefill_op_table(cfg, tp, ep_p, n_p, dtype)
+        for ci, cl in enumerate(clusters):
+            cl_p = _subcluster(cl, n_p)
+            ab = cl._ab()
+            for si, sc in enumerate(scenarios):
+                dec = dec_grid[ci][si]
+                if dec is None:
+                    continue
+                L = sc.prompt_len
+                p_pre = ServingPoint(batch_global=domains_p, context=L,
+                                     tp=tp, ep=ep_p, n_devices=n_p,
+                                     dtype=dtype)
+                # each domain must hold one full prompt's KV beside its shard
+                if not workload.single_request_fits(cfg, p_pre,
+                                                    cl.xpu.hbm_cap):
+                    continue
+                t_p = float(_prefill_chunk_times(ptable, cl_p, domains_p,
+                                                 [L], [0])[0])
+                t_xfer = (ab.alpha0
+                          + workload.kv_cache_bytes_per_request(cfg, L)
+                          / (ab.link_utilization * cl.link_bw))
+                ttft = t_p + t_xfer
+                if sc.ttft_ms and ttft > sc.ttft_ms * 1e-3:
+                    continue
+                lam_p = domains_p / t_p                  # prompts / s
+                thr = min(dec.throughput, lam_p * sc.gen_len)
+                prev = out[ci][si]
+                if prev is None or thr > prev.throughput:
+                    out[ci][si] = optimizer.PrefillOperatingPoint(
+                        mode="disagg", batch=dec.batch, tpot=dec.tpot,
+                        ttft=ttft, throughput=thr, chunk=L,
+                        n_prefill_xpus=n_p, n_decode_xpus=n_d)
+    return out
+
+
+def sweep_prefill(clusters: Sequence[Cluster], cfg: ModelConfig,
+                  scenarios: Sequence, mode: str = "chunked", *,
+                  tp: int = 1, ep: Optional[int] = None, dtype: str = "fp8",
+                  chunk_grid: Sequence[int] = CHUNK_GRID,
+                  split_fracs: Sequence[float] = SPLIT_FRACS
+                  ) -> List[List[Optional["PrefillOperatingPoint"]]]:
+    """Prefill-aware operating-point search over clusters x scenarios.
+
+    mode:
+      'decode'   the seed's decode-only search (prefill free) wrapped as
+                 PrefillOperatingPoints — the comparison baseline;
+      'chunked'  prefill chunks interleaved into decode iterations (joint
+                 batch x chunk-size search under TPOT and TTFT SLOs);
+      'disagg'   cluster split into prefill/decode pools (split ratio
+                 swept; throughput capped by the balanced pipeline rate).
+
+    Prefill modes require `scenario.prompt_len >= 1`. Clusters must share
+    a device count, as in `sweep_max_throughput`.
+    """
+    n = clusters[0].n_xpus
+    if any(cl.n_xpus != n for cl in clusters):
+        raise ValueError("sweep_prefill requires a uniform device count; "
+                         "group clusters by n_xpus")
+    if mode == "decode":
+        grid = sweep_max_throughput(clusters, cfg, scenarios, tp=tp, ep=ep,
+                                    dtype=dtype)
+        return [[_as_decode_point(op) for op in row] for row in grid]
+    if mode not in ("chunked", "disagg"):
+        raise ValueError(f"unknown prefill mode {mode!r}; expected "
+                         "'decode' | 'chunked' | 'disagg'")
+    for sc in scenarios:
+        if getattr(sc, "prompt_len", 0) < 1:
+            raise ValueError(
+                f"scenario {getattr(sc, 'name', sc)!r} has no prompt_len; "
+                "prefill modes need Scenario(..., prompt_len=..., ttft_ms=...)")
+        if sc.prompt_len >= sc.context:
+            raise ValueError(
+                f"scenario {sc.name!r}: context ({sc.context}) must exceed "
+                f"prompt_len ({sc.prompt_len}) — context is the AVERAGE "
+                "decode KV length, prompt_len + gen_len / 2")
+    ep_r = _resolve_parallelism(cfg, n, tp, ep)
+    if mode == "chunked":
+        return _sweep_chunked(clusters, cfg, scenarios, tp, ep_r, dtype,
+                              chunk_grid)
+    if ep is not None:
+        raise ValueError("disagg mode resolves EP per pool; pass ep=None")
+    return _sweep_disagg(clusters, cfg, scenarios, tp, dtype, split_fracs)

@@ -16,8 +16,8 @@ All sizes below are PER DEVICE unless suffixed `_global`.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import List, Optional
+from dataclasses import dataclass, field, replace
+from typing import List, Optional, Tuple
 
 from repro.configs.base import ModelConfig
 from repro.core.compute_model import Op
@@ -210,6 +210,68 @@ def decode_iteration(cfg: ModelConfig, p: ServingPoint) -> List[Op]:
     return ops
 
 
+def prefill_iteration(cfg: ModelConfig, p: ServingPoint,
+                      chunk: int) -> List[Op]:
+    """Op list for ONE prefill iteration: `chunk` new prompt tokens per
+    request, appended after `p.context` tokens already in the KV cache
+    (the chunk's offset into the prompt; 0 for the first chunk).
+
+    Derived from `decode_iteration` at q_len=chunk — GEMM, router, expert
+    and communication shapes are IDENTICAL (rows = batch_per_device * chunk
+    tokens flow through every projection and A2A) — with two
+    prefill-specific corrections:
+
+      * the attention core gains the causal intra-chunk term: query i of
+        the chunk attends to `context + i + 1` keys, so on top of the
+        decode core's `chunk * context` (query, key) pairs it scores
+        chunk*(chunk+1)/2 in-chunk pairs (quadratic in `chunk`), and
+        streams the chunk's own KV once more (`chunk` extra key positions);
+      * the LM head is dropped: logits are only needed once per request
+        when its last chunk completes, and that single-row projection is
+        charged to the request's first decode iteration.
+
+    The corrections are derived by differencing `decode_iteration` at
+    context and context+1 (its per-context-token slopes), not by
+    duplicating the attention formulas — the same no-silent-divergence
+    policy `optable.build_op_table` uses.
+    """
+    if chunk < 1:
+        raise ValueError(f"prefill chunk must be >= 1 token, got {chunk}")
+    pq = replace(p, q_len=chunk)
+    ops0 = decode_iteration(cfg, pq)
+    ops1 = decode_iteration(cfg, replace(pq, context=p.context + 1))
+    out: List[Op] = []
+    for o, o1 in zip(ops0, ops1):
+        if o.name.rsplit(".", 1)[-1] == "lm_head":
+            continue
+        d_flops = o1.flops - o.flops       # per extra context token
+        d_bytes = o1.bytes - o.bytes
+        if d_flops or d_bytes:
+            o = replace(o,
+                        flops=o.flops + d_flops * (chunk + 1) / 2.0,
+                        bytes=o.bytes + d_bytes * chunk)
+        out.append(o)
+    return out
+
+
+def chunk_schedule(prompt_len: int, chunk: int) -> Tuple[List[int], List[int]]:
+    """(sizes, offsets) of the chunked-prefill schedule covering a prompt:
+    full `chunk`-token chunks plus a final partial one; `offsets[j]` is the
+    KV length already cached when chunk j starts."""
+    if prompt_len < 1:
+        raise ValueError(f"prompt_len must be >= 1, got {prompt_len}")
+    if chunk < 1:
+        raise ValueError(f"chunk must be >= 1, got {chunk}")
+    sizes, offsets = [], []
+    off = 0
+    while off < prompt_len:
+        s = min(chunk, prompt_len - off)
+        sizes.append(s)
+        offsets.append(off)
+        off += s
+    return sizes, offsets
+
+
 def kv_cache_bytes_per_request(cfg: ModelConfig, context: int,
                                kv_dtype: str = "bf16") -> float:
     """KV-cache footprint of one request at `context` tokens (all layers)."""
@@ -247,6 +309,15 @@ def model_shard_bytes(cfg: ModelConfig, tp: int, ep: int,
     expert_params = n_moe * m.num_experts * 3 * cfg.d_model * m.d_expert
     dense_params = total_params - expert_params
     return (dense_params / tp + expert_params / ep) * wb
+
+
+def single_request_fits(cfg: ModelConfig, p: ServingPoint, hbm_cap: float,
+                        reserve_frac: float = 0.10) -> bool:
+    """True iff ONE request's KV cache at `p.context` fits beside the model
+    shard — exactly `max_batch_by_memory(...) >= 1`, named so the
+    operating-point searches can REJECT scenarios whose per-request KV
+    cannot be held at all instead of quietly sweeping an empty grid."""
+    return max_batch_by_memory(cfg, p, hbm_cap, reserve_frac) >= 1
 
 
 def max_batch_by_memory(cfg: ModelConfig, p: ServingPoint, hbm_cap: float,
