@@ -1,0 +1,55 @@
+"""CI gate: fail when the sweep-heavy benchmark timings regress > MAX_RATIO
+over the committed baseline.
+
+  python benchmarks/check_timing.py --baseline <committed BENCH_sweep_timing.json> \
+      --current bench_results/BENCH_sweep_timing.json [--max-ratio 2.0]
+
+Only modules freshly timed in the current run are compared (the harness
+merges prior timings for modules a filtered run skipped — those carry the
+baseline values verbatim and would trivially pass). An absolute noise
+floor keeps sub-second modules from tripping the ratio on a cold CI
+runner: a module fails only if now > max(ratio * baseline, baseline + FLOOR_S).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+FLOOR_S = 5.0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True)
+    ap.add_argument("--current", required=True)
+    ap.add_argument("--max-ratio", type=float, default=2.0)
+    args = ap.parse_args(argv)
+
+    with open(args.baseline) as f:
+        base = json.load(f)["modules"]
+    with open(args.current) as f:
+        cur = json.load(f)["modules"]
+
+    failures = []
+    for name, row in cur.items():
+        now = row.get("now_s")
+        was = base.get(name, {}).get("now_s")
+        if now is None or was is None or now == was:
+            continue        # not timed this run (merged from baseline)
+        limit = max(args.max_ratio * was, was + FLOOR_S)
+        status = "FAIL" if now > limit else "ok"
+        print(f"[{status}] {name}: baseline {was:.2f}s -> now {now:.2f}s "
+              f"(limit {limit:.2f}s)")
+        if now > limit:
+            failures.append(name)
+    if failures:
+        print(f"\nsweep timing regressed >{args.max_ratio}x (+{FLOOR_S}s "
+              f"floor) in: {', '.join(failures)}", file=sys.stderr)
+        return 1
+    print("\nsweep timings within budget")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -12,9 +12,9 @@ from __future__ import annotations
 from benchmarks.common import save, table
 from repro.configs import get_arch
 from repro.core import Scenario
-from repro.core.future import (GENERATION_PROVISION, generation_report,
+from repro.core.future import (generation_report,
                                saturating_bandwidth, throughput_vs_bandwidth)
-from repro.core.hardware import BLACKWELL, RUBIN
+from repro.core.hardware import RUBIN
 
 
 def run(verbose: bool = True):
@@ -22,7 +22,6 @@ def run(verbose: bool = True):
     results = {}
     rows = []
     for gen in ("Blackwell", "Rubin"):
-        prov = GENERATION_PROVISION[gen]
         for tpot in (10.0, 40.0):
             for ctx in (512, 4096):
                 sc = Scenario(tpot, ctx)

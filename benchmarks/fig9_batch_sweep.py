@@ -12,7 +12,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import fmt_bw, save, table
+from benchmarks.common import save, table
 from repro.configs import get_arch
 from repro.core import H100, make_cluster
 from repro.core import optable, sweep

@@ -1,0 +1,121 @@
+"""Hybrid-parallelism study (fig14-style): does the topology ranking hold
+when every topology gets its BEST (tp, ep) mapping instead of the paper's
+fixed one?
+
+The paper compares topologies under one parallelism mapping (attention
+TP=1 / experts EP=n). MixServe-style co-optimization of (tp, ep = n/tp)
+per topology can move the operating points: TP shards the dense weight
+streams and makes tight TPOT SLOs reachable without SD, and each topology
+pays a DIFFERENT price for the TP all-reduce (scale-out hides it inside
+the NVLink island, meshes run it over a sub-mesh neighborhood, scale-up
+over the switched fabric). This benchmark re-ranks the Table-3 topologies
+under fixed vs. auto mapping and records where the mapping search strictly
+improves throughput (and therefore throughput/cost).
+"""
+from __future__ import annotations
+
+from benchmarks.common import save, table
+from repro.configs import get_arch
+from repro.core import H100, Scenario, make_cluster
+from repro.core.sweep import sweep_max_throughput
+from repro.core.tco import cluster_tco
+
+TOPOS = ("scale-up", "scale-out", "torus", "fullmesh")
+SCENARIOS = [Scenario(t, c) for c in (512, 4096) for t in (15.0, 40.0, 100.0)]
+
+
+def run(verbose: bool = True, n: int = 64):
+    cfg = get_arch("deepseek-v3")
+    clusters = [make_cluster(topo, n, H100) for topo in TOPOS]
+    fixed = sweep_max_throughput(clusters, cfg, SCENARIOS)
+    auto = sweep_max_throughput(clusters, cfg, SCENARIOS, tp="auto")
+
+    costs = {topo: cluster_tco(clusters[ti]).per_xpu(n)
+             for ti, topo in enumerate(TOPOS)}
+    results = {}
+    rows = []
+    never_worse = True
+    strict_cells = []
+    for si, sc in enumerate(SCENARIOS):
+        per_topo = {}
+        for ti, topo in enumerate(TOPOS):
+            cost = costs[topo]
+            f, a = fixed[ti][si], auto[ti][si]
+            f_thr = f.throughput if f else 0.0
+            a_thr = a.throughput if a else 0.0
+            never_worse &= a_thr >= f_thr
+            if a_thr > f_thr:
+                strict_cells.append([topo, sc.name])
+            per_topo[topo] = {
+                "cost_per_xpu": cost,
+                "fixed": {"thpt_per_xpu": f_thr / n,
+                          "thpt_per_cost": f_thr / n / cost,
+                          "batch": f.batch if f else 0},
+                "auto": {"thpt_per_xpu": a_thr / n,
+                         "thpt_per_cost": a_thr / n / cost,
+                         "batch": a.batch if a else 0,
+                         "tp": a.tp if a else 0, "ep": a.ep if a else 0},
+            }
+            rows.append([sc.name, topo, f"{f_thr / n:.0f}",
+                         f"{a_thr / n:.0f}",
+                         f"tp{a.tp}xep{a.ep}" if a else "-",
+                         f"{(a_thr / f_thr - 1) * 100:+.1f}%" if f_thr
+                         else ("feasible" if a_thr else "-")])
+        results[sc.name] = per_topo
+
+    # does the cost-effectiveness ranking of the topologies move?
+    def ranking(key):
+        out = {}
+        for sc in SCENARIOS:
+            tpc = {t: results[sc.name][t][key]["thpt_per_cost"]
+                   for t in TOPOS}
+            out[sc.name] = sorted(TOPOS, key=lambda t: -tpc[t])
+        return out
+
+    rank_fixed, rank_auto = ranking("fixed"), ranking("auto")
+    fixed_feasible = [sc for sc in SCENARIOS
+                      if results[sc.name]["scale-up"]["fixed"]
+                      ["thpt_per_cost"] > 0]
+    tight = [sc for sc in SCENARIOS if sc not in fixed_feasible]
+    results["ranking"] = {"fixed": rank_fixed, "auto": rank_auto}
+    results["claims"] = {
+        # the mapping search can only add candidates, never lose tp=1
+        "auto_never_worse": never_worse,
+        # and the axis must MATTER: at least one cell strictly improves
+        "auto_strictly_improves_somewhere": bool(strict_cells),
+        "strict_cells": strict_cells,
+        # the paper's headline SURVIVES co-optimization where its fixed
+        # mapping could serve at all: best switchless still beats scale-up
+        # on throughput/cost at every relaxed-SLO scenario
+        "switchless_wins_relaxed_slo_under_auto": all(
+            max(results[sc.name]["torus"]["auto"]["thpt_per_cost"],
+                results[sc.name]["fullmesh"]["auto"]["thpt_per_cost"])
+            > results[sc.name]["scale-up"]["auto"]["thpt_per_cost"]
+            for sc in fixed_feasible),
+        # ...but the tight-SLO scenarios ONLY the mapping search can serve
+        # flip the winner to a switched fabric (scale-out's NVLink-island
+        # TP or scale-up) — the ranking is mapping-dependent, the
+        # MixServe argument this axis exists to test
+        "tight_slo_feasible_only_under_auto": bool(tight) and all(
+            results[sc.name][t]["fixed"]["thpt_per_cost"] == 0
+            and any(results[sc.name][t2]["auto"]["thpt_per_cost"] > 0
+                    for t2 in TOPOS)
+            for sc in tight for t in TOPOS),
+        "tight_slo_winner_is_switched": all(
+            rank_auto[sc.name][0] in ("scale-up", "scale-out")
+            for sc in tight) if tight else False,
+    }
+    out = table(["scenario", "topology", "fixed tok/s/XPU", "auto tok/s/XPU",
+                 "auto map", "delta"], rows,
+                title=f"fig_parallelism — fixed vs auto (tp, ep) mapping "
+                      f"({n} XPUs, no sw opts)")
+    if verbose:
+        print(out)
+        print("\nclaims:", {k: v for k, v in results["claims"].items()
+                            if k != "strict_cells"})
+    save(f"fig_parallelism_{n}", results)
+    return results
+
+
+if __name__ == "__main__":
+    run()

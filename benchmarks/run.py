@@ -40,7 +40,26 @@ and `sweep.sweep_prefill` searches three modes per (cluster, scenario):
 
 Decode-only scenarios (`prompt_len == 0`) evaluate byte-identically to
 the seed search — the fig9-fig18 JSONs are regression-locked by
-tests/test_prefill.py.
+tests/test_prefill.py and by the CI `bench-regression` job, which
+regenerates fig10/table3 on a fresh checkout and fails on any diff.
+
+Hybrid-parallelism search
+-------------------------
+`max_throughput` / `best_of_opts` / `max_throughput_prefill` (and their
+grid entry points in `repro.core.sweep`) accept tp="auto": the search
+grows a joint (tp, ep = n/tp) mapping axis. `sweep.parallelism_candidates`
+enumerates the valid mappings (attention-head and expert-count
+divisibility plus weight-shard feasibility), each candidate evaluates
+through its own op table with the collectives placed by the topology
+(`Cluster.comm_spec`: the TP all-reduce runs over the scale-up / mesh
+neighborhood — a torus/full-mesh sub-mesh, the NVLink island of a
+scale-out cluster — and the expert A2A over the quotient fabric), and
+every (cluster, scenario) cell keeps the highest-throughput mapping,
+ties to the smallest tp so fixed-mapping results are byte-identical.
+`fig_parallelism` re-ranks the Table-3 topologies under fixed vs. auto
+mapping: switchless fabrics keep their cost-effectiveness win at
+relaxed SLOs, while tight-TPOT scenarios only the mapping search can
+serve flip the winner to the switched fabrics.
 """
 from __future__ import annotations
 
@@ -65,6 +84,7 @@ MODULES = [
     "benchmarks.fig17_pareto",
     "benchmarks.fig18_future",
     "benchmarks.fig_prefill_scenarios",
+    "benchmarks.fig_parallelism",
     "benchmarks.roofline",
 ]
 

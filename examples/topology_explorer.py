@@ -13,13 +13,11 @@ import argparse
 
 from repro.configs import get_arch
 from repro.core import GENERATIONS, Scenario, best_of_opts, make_cluster
-from repro.core.optimizer import iteration_time
 from repro.core.tco import cluster_tco
 from repro.core.workload import ServingPoint
 
 
 def show_schedule(cfg, cluster, batch):
-    import dataclasses
     from repro.core.optimizer import _timers
     from repro.core.overlap import simulate_two_lane, to_timed
     from repro.core.workload import decode_iteration

@@ -26,6 +26,7 @@ from repro.core.optimizer import (Scenario, SCENARIOS, best_of_opts,
                                   max_throughput_scalar,
                                   PrefillOperatingPoint)
 from repro.core.specdec import SpecDecConfig
+from repro.core.sweep import parallelism_candidates
 from repro.core.topology import Cluster, make_cluster, TOPOLOGIES
 from repro.core.tco import cluster_tco, throughput_per_cost
 from repro.core.workload import ServingPoint

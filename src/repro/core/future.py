@@ -19,7 +19,7 @@ from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence
 
 from repro.configs.base import ModelConfig
-from repro.core import alphabeta, optimizer
+from repro.core import optimizer
 from repro.core.hardware import XPUSpec, BLACKWELL, RUBIN
 from repro.core.optimizer import Scenario
 from repro.core.topology import Cluster, make_cluster

@@ -8,6 +8,12 @@ parallelism, dtype) into a coefficient table; every per-op quantity is then
 a closed form over the sweep variables, so the whole grid evaluates as a
 handful of NumPy broadcasts (see `repro.core.sweep`).
 
+Tables are LRU-cached per (model, tp, ep, n_devices, dtype, kv_dtype) — the
+full hybrid-parallelism key, so the (tp, ep) mapping search reuses one
+lowering per candidate mapping. The tp > 1 op lists gain the `moe_ar`
+all-reduce and the TP-sharded expert terms (see `workload.moe_ops`); both
+stay inside the linear basis below, so the probes need no new points.
+
 Every op emitted by `workload.decode_iteration` is exactly linear in the
 basis {1, rows, rows*ctx, b*ctx} where b = batch_per_device and
 rows = b * q_len:

@@ -17,9 +17,8 @@ Two execution paths share this module's public API:
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass, replace
-from typing import List, Optional, Sequence
+from typing import List, Optional, Sequence, Union
 
 from repro.configs.base import ModelConfig
 from repro.core import compute_model as cm
@@ -80,6 +79,8 @@ class OperatingPoint:
     exposed_comm: float            # seconds (under the schedule actually used)
     t_compute: float
     t_comm: float
+    tp: int = 1                    # the (tp, ep) mapping the point runs at
+    ep: int = 0                    # resolved EP degree (1 for dense models)
 
     @property
     def throughput_per_xpu(self):  # filled by caller via cluster.n_xpus
@@ -103,6 +104,8 @@ class PrefillOperatingPoint:
     chunk: int = 0             # chunked: chunk size; disagg: prompt tokens/pass
     n_prefill_xpus: int = 0    # disagg: prefill-pool device count
     n_decode_xpus: int = 0     # disagg: decode-pool device count
+    tp: int = 1                # the (tp, ep) mapping (disagg: ep is the
+    ep: int = 0                # decode pool's; each pool resolves its own)
 
 
 # ---------------------------------------------------------------------------
@@ -118,8 +121,9 @@ def _timers(cluster: Cluster, p: ServingPoint):
 
     def t_comm(op: Op) -> float:
         if op.kind == "a2a":
-            return cluster.a2a_time(op.m_bytes)
-        return cluster.ar_time(op.m_bytes, group=op.group or None)
+            return cluster.a2a_time(op.m_bytes, group=op.group or None,
+                                    tp=p.tp)
+        return cluster.ar_time(op.m_bytes, group=op.group or None, tp=p.tp)
 
     return t_comp, t_comm
 
@@ -251,7 +255,7 @@ def _batch_grid(b_max: int, ep: int) -> List[int]:
 
 def max_throughput(cluster: Cluster, cfg: ModelConfig, scenario: Scenario,
                    *, dbo: bool = False, sd: Optional[SpecDecConfig] = None,
-                   tp: int = 1, ep: Optional[int] = None,
+                   tp: Union[int, str] = 1, ep: Optional[int] = None,
                    dtype: str = "fp8") -> Optional[OperatingPoint]:
     """Best operating point under the TPOT SLO, or None if the SLO is
     unreachable at every feasible batch size.
@@ -262,6 +266,11 @@ def max_throughput(cluster: Cluster, cfg: ModelConfig, scenario: Scenario,
     `max_throughput_scalar`. Pass lists of clusters/scenarios to
     `sweep.sweep_max_throughput` directly to amortize one grid evaluation
     across a whole figure.
+
+    tp="auto" searches the joint (tp, ep = n/tp) hybrid-parallelism axis
+    (`sweep.parallelism_candidates`) and returns the best mapping's point
+    (ties prefer the smaller tp, so the fixed mapping wins exact draws);
+    the chosen mapping is recorded on `OperatingPoint.tp` / `.ep`.
     """
     from repro.core import sweep
     return sweep.sweep_max_throughput([cluster], cfg, [scenario], dbo=dbo,
@@ -280,7 +289,7 @@ def max_throughput_scalar(cluster: Cluster, cfg: ModelConfig,
     SLO boundary."""
     n = cluster.n_xpus
     if cfg.moe is not None:
-        ep = ep or n
+        ep = ep or max(n // tp, 1)
     else:
         ep = 1
     tpot_budget = scenario.tpot_ms * 1e-3
@@ -305,7 +314,8 @@ def max_throughput_scalar(cluster: Cluster, cfg: ModelConfig,
         if best is None or thr > best.throughput:
             best = OperatingPoint(batch=b, tpot=tpot, throughput=thr,
                                   used_dbo=dbo, used_sd=sd is not None,
-                                  exposed_comm=ect, t_compute=tc, t_comm=tm)
+                                  exposed_comm=ect, t_compute=tc, t_comm=tm,
+                                  tp=tp, ep=ep)
     return best
 
 
@@ -315,7 +325,8 @@ def best_of_opts(cluster: Cluster, cfg: ModelConfig, scenario: Scenario,
     unoptimized point when that is faster (paper's 'best of' curves).
 
     Runs on the batched sweep engine; `sweep.best_of_opts_grid` is the
-    many-clusters/many-scenarios entry point the benchmarks use."""
+    many-clusters/many-scenarios entry point the benchmarks use. Accepts
+    tp="auto" to co-optimize the (tp, ep) mapping per cluster."""
     from repro.core import sweep
     return sweep.best_of_opts_grid([cluster], cfg, [scenario], opts,
                                    **kw)[0][0]
@@ -329,7 +340,8 @@ def max_throughput_prefill(cluster: Cluster, cfg: ModelConfig,
     mode: 'decode' (seed behavior, prefill unmodeled) | 'chunked' (prefill
     chunks interleaved into decode iterations) | 'disagg' (cluster split
     into prefill/decode pools, split ratio swept). Runs on the batched
-    prefill sweep; see `sweep.sweep_prefill` for the grid entry point."""
+    prefill sweep; see `sweep.sweep_prefill` for the grid entry point.
+    All three modes accept tp="auto" to search the (tp, ep) mapping."""
     from repro.core import sweep
     return sweep.sweep_prefill([cluster], cfg, [scenario], mode=mode,
                                **kw)[0][0]

@@ -14,7 +14,7 @@ from repro.configs.base import ModelConfig
 from repro.core import optimizer, tco
 from repro.core.hardware import XPUSpec
 from repro.core.optimizer import Scenario
-from repro.core.topology import Cluster, make_cluster
+from repro.core.topology import make_cluster
 
 # the paper's bandwidth sweep grid, as fractions of the 1x provision
 BW_FRACTIONS = (1 / 9, 1 / 3, 2 / 3, 1.0, 2.0)

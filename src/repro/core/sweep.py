@@ -21,15 +21,23 @@ module evaluates the whole grid with NumPy broadcasts over a precomputed
 (feasibility + argmax) runs on the batched values; the single winning point
 is then re-evaluated through the exact scalar path so the returned
 `OperatingPoint` is byte-identical to the seed implementation.
+
+Hybrid parallelism (tp="auto"): the search grows a joint (tp, ep = n/tp)
+mapping axis. `parallelism_candidates` enumerates the valid mappings
+(head/expert divisibility + weight-shard feasibility), each candidate runs
+the same batched engine against its own op table with the collectives
+PLACED by the topology (`Cluster.comm_spec`: AR(tp) over the scale-up /
+mesh neighborhood, expert A2A over the quotient), and each (cluster,
+scenario) cell keeps the highest-throughput mapping — ties to the smallest
+tp, so fixed-mapping (tp=1) results are byte-identical to the seed.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core import collectives as coll
 from repro.core import optable, workload
 from repro.core.compute_model import (EFF_MEMORY, GEMM_SMALL_TOKENS,
                                       T_LAUNCH)
@@ -44,22 +52,20 @@ from repro.core.workload import ServingPoint
 # per-cluster alpha-beta lowering
 # ---------------------------------------------------------------------------
 
-def _comm_menu_coeffs(cluster: Cluster, kind: int,
-                      group: int) -> List[Tuple[float, float]]:
+def _comm_menu_coeffs(cluster: Cluster, kind: int, group: int,
+                      tp: int = 1) -> List[Tuple[float, float]]:
     """Lower one collective menu to (A, B) pairs: t(m) = min_alg(A + B*m).
 
     A carries the alpha terms exactly as `AlphaBeta.time` associates them;
     B*m keeps the scalar's (m_coeff * m) * beta association elementwise, so
     the batched time equals the scalar time to the rounding of the shared
-    subexpressions.
+    subexpressions. The menu, bandwidth, and alpha set come from the
+    cluster's `comm_spec` placement under the (tp, ep) mapping — identical
+    to the seed whole-cluster lowering at tp=1.
     """
-    ab = cluster._ab()
-    beta = 1.0 / (ab.link_utilization * cluster.link_bw)
-    if kind == optable.KIND_A2A:
-        menu = coll.a2a_menu(cluster.topology, cluster.n_xpus, cluster.dims)
-    else:
-        n = group or cluster.n_xpus
-        menu = coll.ar_menu(cluster.topology, n, cluster.dims)
+    menu, bw, ab = cluster.comm_spec(
+        "a2a" if kind == optable.KIND_A2A else "ar", group, tp)
+    beta = 1.0 / (ab.link_utilization * bw)
     return [(ab.alpha0 + c.rounds * ab.alpha_r + c.dests * ab.alpha_d,
              c.m_coeff, beta) for c in menu.values()]
 
@@ -73,7 +79,7 @@ def _comm_times(table: OpTable, cluster: Cluster,
             sel = (table.kind == kind) & (table.group == group)
             if not sel.any():
                 continue
-            algs = _comm_menu_coeffs(cluster, kind, int(group))
+            algs = _comm_menu_coeffs(cluster, kind, int(group), table.tp)
             best = None
             for a, m_coeff, beta in algs:
                 t = a + (m_coeff * m[sel]) * beta
@@ -246,11 +252,87 @@ def batched_iteration_components(op_table: OpTable,
 # grid search: max throughput under SLO, batched over clusters x scenarios
 # ---------------------------------------------------------------------------
 
+def parallelism_candidates(cfg: ModelConfig, cluster: Cluster, *,
+                           dtype: str = "fp8"
+                           ) -> List[Tuple[int, int]]:
+    """All valid (tp, ep) hybrid mappings of `cfg` on `cluster`, tp
+    ascending (so exact throughput ties resolve to the fixed mapping).
+
+    A tp is valid when it divides the device count AND the attention heads
+    shard evenly (num_kv_heads for GQA, num_heads for MLA; head-free
+    mixers only need the device-count divisibility); ep = n/tp must divide
+    the expert count (MoE) and the resulting weight shard must leave room
+    on the device (per-scenario KV feasibility is checked by the batch
+    grids, exactly as for the fixed mapping)."""
+    n = cluster.n_xpus
+    if cfg.attn_kind == "mla":
+        heads = cfg.num_heads
+    elif cfg.has_attention:
+        heads = cfg.num_kv_heads
+    else:
+        heads = 0
+    out: List[Tuple[int, int]] = []
+    for tp in range(1, n + 1):
+        if n % tp:
+            continue
+        if heads and (tp > heads or heads % tp):
+            continue
+        if cfg.moe is not None:
+            ep = n // tp
+            if cfg.moe.num_experts % ep:
+                continue
+        else:
+            ep = 1
+        shard = workload.model_shard_bytes(cfg, tp, ep, dtype)
+        if shard >= cluster.xpu.hbm_cap * (1 - workload.KV_RESERVE_FRAC):
+            continue
+        out.append((tp, ep))
+    return out
+
+
 def _resolve_parallelism(cfg: ModelConfig, n: int, tp: int,
                          ep: Optional[int]) -> int:
+    """Resolved EP degree of one FIXED mapping: ep defaults to n/tp for
+    MoE models (the hybrid family; n at the paper's tp=1), 1 for dense."""
     if cfg.moe is not None:
-        return ep or n
+        return ep or max(n // tp, 1)
     return 1
+
+
+def _merge_best(grids: Sequence[List[List]]) -> List[List]:
+    """Elementwise argmax-throughput across per-mapping [cluster][scenario]
+    grids; exact ties keep the EARLIEST grid (candidates are ordered tp
+    ascending, so the fixed mapping wins draws)."""
+    out = []
+    for ci in range(len(grids[0])):
+        row = []
+        for si in range(len(grids[0][ci])):
+            best = None
+            for g in grids:
+                cand = g[ci][si]
+                if cand is None:
+                    continue
+                if best is None or cand.throughput > best.throughput:
+                    best = cand
+            row.append(best)
+        out.append(row)
+    return out
+
+
+def _auto_candidates(clusters: Sequence[Cluster], cfg: ModelConfig,
+                     dtype: str) -> List[Tuple[int, int]]:
+    """Union of each cluster's valid mappings (clusters share a device
+    count but may differ in XPU, so a mapping one cluster's HBM prunes can
+    still be another's best — the per-cluster batch grids reject it where
+    the shard genuinely does not fit)."""
+    cands = sorted({c for cl in clusters
+                    for c in parallelism_candidates(cfg, cl, dtype=dtype)})
+    if not cands:
+        raise ValueError(
+            f"no feasible (tp, ep) mapping for {cfg.name!r} on "
+            f"{clusters[0].n_xpus} XPUs — model shard exceeds HBM at "
+            "every tensor-parallel degree")
+    return cands
 
 
 def _prepare_grid(clusters, cfg, scenarios, tp, ep_r, dtype):
@@ -330,27 +412,14 @@ def _select_and_finalize(ev: GridEval, grids, cfg, *, dbo, sd, tp, ep_r,
             row.append(optimizer.OperatingPoint(
                 batch=best_b, tpot=tpot_s, throughput=best_b / tpot_s,
                 used_dbo=dbo, used_sd=sd is not None, exposed_comm=ect,
-                t_compute=tc, t_comm=tm))
+                t_compute=tc, t_comm=tm, tp=tp, ep=ep_r))
         out.append(row)
     return out
 
 
-def sweep_max_throughput(clusters: Sequence[Cluster], cfg: ModelConfig,
-                         scenarios: Sequence, *, dbo: bool = False,
-                         sd: Optional[SpecDecConfig] = None, tp: int = 1,
-                         ep: Optional[int] = None, dtype: str = "fp8"
-                         ) -> List[List[Optional["OperatingPoint"]]]:
-    """Batched optimizer.max_throughput over clusters x scenarios.
-
-    Clusters must share a device count (they may differ in topology, link
-    bandwidth, and alpha sets). Returns [cluster][scenario] OperatingPoints
-    (None where the SLO is unreachable), byte-identical to the scalar path.
-    """
+def _sweep_fixed(clusters, cfg, scenarios, *, dbo, sd, tp, ep_r, dtype):
+    """One FIXED-mapping batched search (the pre-hybrid sweep body)."""
     n = clusters[0].n_xpus
-    if any(cl.n_xpus != n for cl in clusters):
-        raise ValueError("sweep_max_throughput requires a uniform device "
-                         "count; group clusters by n_xpus")
-    ep_r = _resolve_parallelism(cfg, n, tp, ep)
     grids, batches = _prepare_grid(clusters, cfg, scenarios, tp, ep_r, dtype)
     if batches.size == 0:
         return [[None] * len(scenarios) for _ in clusters]
@@ -358,6 +427,42 @@ def sweep_max_throughput(clusters: Sequence[Cluster], cfg: ModelConfig,
     ev = GridEval(table, clusters, scenarios, batches)
     return _select_and_finalize(ev, grids, cfg, dbo=dbo, sd=sd, tp=tp,
                                 ep_r=ep_r, dtype=dtype)
+
+
+def sweep_max_throughput(clusters: Sequence[Cluster], cfg: ModelConfig,
+                         scenarios: Sequence, *, dbo: bool = False,
+                         sd: Optional[SpecDecConfig] = None,
+                         tp: Union[int, str] = 1,
+                         ep: Optional[int] = None, dtype: str = "fp8"
+                         ) -> List[List[Optional["OperatingPoint"]]]:
+    """Batched optimizer.max_throughput over clusters x scenarios.
+
+    Clusters must share a device count (they may differ in topology, link
+    bandwidth, and alpha sets). Returns [cluster][scenario] OperatingPoints
+    (None where the SLO is unreachable), byte-identical to the scalar path.
+
+    tp="auto" sweeps the joint (tp, ep = n/tp) axis: every mapping from
+    `parallelism_candidates` runs the same batched search (its own op
+    table, batch grids, and topology-placed collectives) and each
+    (cluster, scenario) cell keeps the highest-throughput mapping, ties to
+    the smallest tp. The chosen mapping is recorded on the point's
+    `tp` / `ep` fields.
+    """
+    n = clusters[0].n_xpus
+    if any(cl.n_xpus != n for cl in clusters):
+        raise ValueError("sweep_max_throughput requires a uniform device "
+                         "count; group clusters by n_xpus")
+    if tp == "auto":
+        if ep is not None:
+            raise ValueError("tp='auto' resolves ep = n/tp per candidate; "
+                             "pass ep=None")
+        return _merge_best([
+            _sweep_fixed(clusters, cfg, scenarios, dbo=dbo, sd=sd, tp=t,
+                         ep_r=e, dtype=dtype)
+            for t, e in _auto_candidates(clusters, cfg, dtype)])
+    ep_r = _resolve_parallelism(cfg, n, tp, ep)
+    return _sweep_fixed(clusters, cfg, scenarios, dbo=dbo, sd=sd, tp=tp,
+                        ep_r=ep_r, dtype=dtype)
 
 
 def _variants_for(opts: str) -> List[Tuple[bool, Optional[SpecDecConfig]]]:
@@ -376,7 +481,7 @@ def best_of_opts_multi(clusters: Sequence[Cluster], cfg: ModelConfig,
                        scenarios: Sequence,
                        opts_levels: Sequence[str] = ("noopt", "dbo",
                                                      "dbo+sd"), *,
-                       tp: int = 1, ep: Optional[int] = None,
+                       tp: Union[int, str] = 1, ep: Optional[int] = None,
                        dtype: str = "fp8"
                        ) -> Dict[str, List[List[Optional["OperatingPoint"]]]]:
     """Batched optimizer.best_of_opts for SEVERAL opts levels at once.
@@ -384,11 +489,22 @@ def best_of_opts_multi(clusters: Sequence[Cluster], cfg: ModelConfig,
     One GridEval and one result per (dbo, sd) variant are shared across the
     levels ('dbo+sd' already evaluates everything 'noopt' and 'dbo' need),
     so e.g. fig11's three curves cost one engine pass, not three.
+    tp="auto" additionally sweeps the (tp, ep = n/tp) mapping axis per
+    level (one engine pass per candidate mapping).
     """
     n = clusters[0].n_xpus
     if any(cl.n_xpus != n for cl in clusters):
         raise ValueError("best_of_opts_multi requires a uniform device "
                          "count")
+    if tp == "auto":
+        if ep is not None:
+            raise ValueError("tp='auto' resolves ep = n/tp per candidate; "
+                             "pass ep=None")
+        per_cand = [best_of_opts_multi(clusters, cfg, scenarios, opts_levels,
+                                       tp=t, ep=e, dtype=dtype)
+                    for t, e in _auto_candidates(clusters, cfg, dtype)]
+        return {opts: _merge_best([pc[opts] for pc in per_cand])
+                for opts in opts_levels}
     ep_r = _resolve_parallelism(cfg, n, tp, ep)
     grids, batches = _prepare_grid(clusters, cfg, scenarios, tp, ep_r, dtype)
     if batches.size == 0:
@@ -426,7 +542,7 @@ def best_of_opts_multi(clusters: Sequence[Cluster], cfg: ModelConfig,
 
 def best_of_opts_grid(clusters: Sequence[Cluster], cfg: ModelConfig,
                       scenarios: Sequence, opts: str = "dbo+sd", *,
-                      tp: int = 1, ep: Optional[int] = None,
+                      tp: Union[int, str] = 1, ep: Optional[int] = None,
                       dtype: str = "fp8"
                       ) -> List[List[Optional["OperatingPoint"]]]:
     """Batched optimizer.best_of_opts over clusters x scenarios."""
@@ -510,7 +626,7 @@ def _as_decode_point(op) -> Optional["optimizer.PrefillOperatingPoint"]:
         return None
     return optimizer.PrefillOperatingPoint(
         mode="decode", batch=op.batch, tpot=op.tpot, ttft=0.0,
-        throughput=op.throughput)
+        throughput=op.throughput, tp=op.tp, ep=op.ep)
 
 
 def _chunk_candidates(prompt_len: int, chunk_grid: Sequence[int]) -> List[int]:
@@ -574,7 +690,7 @@ def _sweep_chunked(clusters, cfg, scenarios, tp, ep_r, dtype, chunk_grid):
                                                             c)
             row.append(optimizer.PrefillOperatingPoint(
                 mode="chunked", batch=b, tpot=tpot_s, ttft=ttft_s,
-                throughput=b_eff / tpot_s, chunk=c))
+                throughput=b_eff / tpot_s, chunk=c, tp=tp, ep=ep_r))
         out.append(row)
     return out
 
@@ -638,7 +754,7 @@ def _sweep_disagg(clusters, cfg, scenarios, tp, dtype, split_fracs):
         dec_grid = sweep_max_throughput([_subcluster(cl, n_d)
                                          for cl in clusters], cfg,
                                         scenarios, tp=tp, dtype=dtype)
-        ep_p = n_p if cfg.moe is not None else 1
+        ep_p = max(n_p // tp, 1) if cfg.moe is not None else 1
         domains_p = max(n_p // tp, 1)
         ptable = optable.prefill_op_table(cfg, tp, ep_p, n_p, dtype)
         for ci, cl in enumerate(clusters):
@@ -671,13 +787,15 @@ def _sweep_disagg(clusters, cfg, scenarios, tp, dtype, split_fracs):
                     out[ci][si] = optimizer.PrefillOperatingPoint(
                         mode="disagg", batch=dec.batch, tpot=dec.tpot,
                         ttft=ttft, throughput=thr, chunk=L,
-                        n_prefill_xpus=n_p, n_decode_xpus=n_d)
+                        n_prefill_xpus=n_p, n_decode_xpus=n_d,
+                        tp=tp, ep=dec.ep)
     return out
 
 
 def sweep_prefill(clusters: Sequence[Cluster], cfg: ModelConfig,
                   scenarios: Sequence, mode: str = "chunked", *,
-                  tp: int = 1, ep: Optional[int] = None, dtype: str = "fp8",
+                  tp: Union[int, str] = 1, ep: Optional[int] = None,
+                  dtype: str = "fp8",
                   chunk_grid: Sequence[int] = CHUNK_GRID,
                   split_fracs: Sequence[float] = SPLIT_FRACS
                   ) -> List[List[Optional["PrefillOperatingPoint"]]]:
@@ -691,8 +809,11 @@ def sweep_prefill(clusters: Sequence[Cluster], cfg: ModelConfig,
       'disagg'   cluster split into prefill/decode pools (split ratio
                  swept; throughput capped by the balanced pipeline rate).
 
-    Prefill modes require `scenario.prompt_len >= 1`. Clusters must share
-    a device count, as in `sweep_max_throughput`.
+    All three modes accept tp="auto": the (tp, ep = n/tp) mapping axis is
+    searched per (cluster, scenario) cell alongside the mode's own grid
+    (batch x chunk for chunked, split ratio for disagg), ties to the
+    smallest tp. Prefill modes require `scenario.prompt_len >= 1`.
+    Clusters must share a device count, as in `sweep_max_throughput`.
     """
     n = clusters[0].n_xpus
     if any(cl.n_xpus != n for cl in clusters):
@@ -715,8 +836,17 @@ def sweep_prefill(clusters: Sequence[Cluster], cfg: ModelConfig,
                 f"scenario {sc.name!r}: context ({sc.context}) must exceed "
                 f"prompt_len ({sc.prompt_len}) — context is the AVERAGE "
                 "decode KV length, prompt_len + gen_len / 2")
-    ep_r = _resolve_parallelism(cfg, n, tp, ep)
+    if tp == "auto":
+        if ep is not None:
+            raise ValueError("tp='auto' resolves ep = n/tp per candidate; "
+                             "pass ep=None")
+        return _merge_best([
+            sweep_prefill(clusters, cfg, scenarios, mode, tp=t,
+                          ep=e if mode == "chunked" else None, dtype=dtype,
+                          chunk_grid=chunk_grid, split_fracs=split_fracs)
+            for t, e in _auto_candidates(clusters, cfg, dtype)])
     if mode == "chunked":
+        ep_r = _resolve_parallelism(cfg, n, tp, ep)
         return _sweep_chunked(clusters, cfg, scenarios, tp, ep_r, dtype,
                               chunk_grid)
     if ep is not None:

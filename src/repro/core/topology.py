@@ -18,6 +18,32 @@ TOPOLOGIES = ("scale-up", "scale-out", "torus", "fullmesh")
 
 DIMS_BY_SIZE = {8: (2, 2, 2), 64: (4, 4, 4), 256: (8, 8, 4), 512: (8, 8, 8)}
 
+# XPUs per NVLink-class island inside a scale-out cluster (DGX-style node);
+# a TP domain that fits the island rides its scale-up switch, not the NIC
+NODE_XPUS = 8
+
+
+def _tp_subdims(dims: Tuple[int, ...],
+                tp: int) -> Optional[Tuple[int, ...]]:
+    """Greedy contiguous sub-mesh of `tp` devices inside `dims`: fill the
+    first dimension first (matching how DIMS_BY_SIZE orders the long axes).
+    Returns per-dim extents of the TP neighborhood, or None when `tp` has
+    no contiguous factorization (then placement falls back to the
+    whole-cluster menus)."""
+    sub = []
+    rem = tp
+    for d in dims:
+        t = math.gcd(rem, d)
+        sub.append(t)
+        rem //= t
+    if rem != 1:
+        return None
+    return tuple(sub)
+
+
+def _strip_ones(dims: Tuple[int, ...]) -> Tuple[int, ...]:
+    return tuple(d for d in dims if d > 1) or (1,)
+
 SWITCH_RADIX = 64
 SCALE_UP_PORTS = 16          # per XPU
 SCALE_OUT_PORTS = 1
@@ -46,20 +72,87 @@ class Cluster:
     def _ab(self) -> AlphaBeta:
         return CLUSTER if self.n_xpus > 8 else INTRA_NODE
 
-    def a2a_time(self, m_bytes: float) -> float:
-        """Best all-to-all algorithm for this topology; m = per-XPU payload."""
-        menu = coll.a2a_menu(self.topology, self.n_xpus, self.dims)
+    def comm_spec(self, kind: str, group: int = 0, tp: int = 1):
+        """(algorithm menu, bandwidth, AlphaBeta) of one collective PLACED
+        under the hybrid (tp, ep) mapping — the topology-aware half of the
+        parallelism search.
+
+        kind 'ar' with group == tp is the TP all-reduce: it runs over the
+        scale-up / mesh NEIGHBORHOOD (a tp-sized sub-mesh of torus /
+        full-mesh dims, the intra-node island of a scale-out cluster), so
+        it sees only the link bandwidth that points into that neighborhood.
+        kind 'a2a' with group == ep < n is the expert dispatch/gather over
+        the REMAINDER: the quotient of the cluster by the TP neighborhood
+        (stride-tp peers on meshes, with torus hops dilated by the stride).
+
+        tp <= 1, group in (0, n): the seed whole-cluster placement,
+        byte-identical to the pre-hybrid model.
+        """
+        n_grp = group or self.n_xpus
         ab = self._ab()
+        if kind == "a2a":
+            if tp <= 1 or n_grp >= self.n_xpus:
+                return (coll.a2a_menu(self.topology, self.n_xpus, self.dims),
+                        self.link_bw, ab)
+            if self.topology in ("scale-up", "scale-out"):
+                # any ep subset of the switched fabric at full provision
+                return coll.a2a_menu(self.topology, n_grp, None), \
+                    self.link_bw, ab
+            sub = _tp_subdims(self.dims, tp)
+            if sub is None:
+                return (coll.a2a_menu(self.topology, self.n_xpus, self.dims),
+                        self.link_bw, ab)
+            qdims = tuple(d // t for d, t in zip(self.dims, sub))
+            menu = coll.a2a_menu(self.topology, n_grp, _strip_ones(qdims))
+            active = [i for i, d in enumerate(self.dims) if d > 1]
+            if self.topology == "fullmesh":
+                # stride-t peers in a full-mesh line are directly linked:
+                # (q-1) of the (d-1) links per dim stay usable
+                frac = (sum(qdims[i] - 1 for i in active)
+                        / sum(self.dims[i] - 1 for i in active))
+            else:
+                # torus: a stride-t ring hop crosses t physical links
+                frac = (sum(1.0 / sub[i] for i in active if qdims[i] > 1)
+                        / len(active))
+            return menu, self.link_bw * max(frac, 1e-9), ab
+        # all-reduce
+        if tp > 1 and n_grp == tp and n_grp < self.n_xpus:
+            if self.topology == "scale-out" and tp <= NODE_XPUS:
+                # TP inside the NVLink-class island: scale-up switching at
+                # the XPU's scale-up provision, intra-node latencies
+                return (coll.ar_menu("scale-up", n_grp, None),
+                        self.xpu.scale_up_bw, INTRA_NODE)
+            if self.topology in ("torus", "fullmesh"):
+                sub = _tp_subdims(self.dims, tp)
+                if sub is not None:
+                    sdims = _strip_ones(sub)
+                    menu = coll.ar_menu(self.topology, n_grp, sdims)
+                    active = [i for i, d in enumerate(self.dims) if d > 1]
+                    if self.topology == "fullmesh":
+                        frac = (sum(s - 1 for s in sub)
+                                / sum(self.dims[i] - 1 for i in active))
+                    else:
+                        frac = (len([s for s in sub if s > 1])
+                                / len(active))
+                    return menu, self.link_bw * max(frac, 1e-9), ab
+        menu = coll.ar_menu(self.topology, n_grp, self.dims)
+        return menu, self.link_bw, ab
+
+    def a2a_time(self, m_bytes: float, group: Optional[int] = None,
+                 tp: int = 1) -> float:
+        """Best all-to-all algorithm for this topology; m = per-XPU payload.
+        `group`/`tp` place the collective under the hybrid mapping (see
+        `comm_spec`); the defaults are the seed whole-cluster semantics."""
+        menu, bw, ab = self.comm_spec("a2a", group or 0, tp)
         return min(ab.time(rounds=c.rounds, dests=c.dests, m_coeff=c.m_coeff,
-                           m_bytes=m_bytes, bandwidth=self.link_bw)
+                           m_bytes=m_bytes, bandwidth=bw)
                    for c in menu.values())
 
-    def ar_time(self, m_bytes: float, group: Optional[int] = None) -> float:
-        n = group or self.n_xpus
-        menu = coll.ar_menu(self.topology, n, self.dims)
-        ab = self._ab()
+    def ar_time(self, m_bytes: float, group: Optional[int] = None,
+                tp: int = 1) -> float:
+        menu, bw, ab = self.comm_spec("ar", group or 0, tp)
         return min(ab.time(rounds=c.rounds, dests=c.dests, m_coeff=c.m_coeff,
-                           m_bytes=m_bytes, bandwidth=self.link_bw)
+                           m_bytes=m_bytes, bandwidth=bw)
                    for c in menu.values())
 
     # ------------- inventory (for TCO) -------------

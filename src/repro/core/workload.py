@@ -29,9 +29,15 @@ BYTES = {"bf16": 2, "fp8": 1, "fp16": 2, "f32": 4}
 class ServingPoint:
     """One operating point of the serving cluster.
 
-    Parallelism follows the paper's mapping: attention runs data-parallel
-    over n/tp TP domains; MoE experts are EP over `ep` devices (tp=1 on the
-    MoE path, as in DeepSeek-V3 deployments). `n_devices` defaults to ep*tp.
+    Parallelism is the hybrid (tp, ep) mapping: the cluster is an
+    (n/tp) x tp grid. Attention runs data-parallel over the n/tp TP
+    domains, TP-sharded inside each. MoE experts are EP over the `ep`
+    expert groups (one group per TP domain when ep = n/tp) and TP-sharded
+    over the tp devices inside a group, so per-device expert weights and
+    flops are invariant along the ep = n/tp family. The paper's fixed
+    mapping is (tp=1, ep=n) — tp=1 on the MoE path, as in DeepSeek-V3
+    deployments — and all tp=1 op lists are byte-identical to it.
+    `n_devices` defaults to ep*tp.
     """
     batch_global: int            # requests in flight per iteration (decode)
     context: int                 # average context length (KV length)
@@ -107,7 +113,16 @@ def attention_ops(cfg: ModelConfig, p: ServingPoint) -> List[Op]:
 
 
 def moe_ops(cfg: ModelConfig, p: ServingPoint) -> List[Op]:
-    """MoE FFN sublayer of ONE layer: router + A2A dispatch + experts + A2A."""
+    """MoE FFN sublayer of ONE layer: router + A2A dispatch + experts + A2A.
+
+    With tp > 1 the experts are TP-sharded inside each expert group: the
+    dispatch/gather A2As carry each token's 1/tp feature shard, the expert
+    GEMMs run column/row-parallel over d_expert (weights and flops / tp),
+    and the sublayer ends with one `moe_ar` all-reduce of the combined
+    [rows, d] output over the tp shards (the row-parallel partial sums,
+    shared-expert included). At tp=1 every term reduces to the paper's
+    fixed mapping exactly.
+    """
     assert cfg.moe is not None
     m = cfg.moe
     d = cfg.d_model
@@ -116,27 +131,30 @@ def moe_ops(cfg: ModelConfig, p: ServingPoint) -> List[Op]:
     wb = _wb(p)
     ops: List[Op] = []
 
-    # router (tiny)
+    # router (tiny; replicated per domain device)
     ops.append(Op(name="router", kind="compute",
                   flops=2 * rows * d * m.num_experts,
                   bytes=d * m.num_experts * wb + rows * d * wb,
                   op_class="other"))
 
     # dispatch A2A: each token is sent to top-k expert owners.
-    # m = per-device payload = rows * topk * d (paper's A2A message convention)
-    a2a_bytes = rows * m.experts_per_token * d * wb
+    # m = per-device payload = rows * topk * d / tp (paper's A2A message
+    # convention; the domain's tp devices split the token features)
+    a2a_bytes = rows * m.experts_per_token * d * wb / p.tp
     if p.ep > 1:
         ops.append(Op(name="a2a_dispatch", kind="a2a", m_bytes=a2a_bytes,
                       group=p.ep))
 
-    # expert FFN: each device hosts E/ep experts and receives
-    # rows * topk tokens on average (load-balanced).
+    # expert FFN: each expert group hosts E/ep experts and receives
+    # rows * topk tokens on average (load-balanced); each of the group's tp
+    # devices holds a 1/tp shard of the expert weights and activations.
     tokens_in = rows * m.experts_per_token
     experts_local = max(m.num_experts // p.ep, 1)
     w_expert = 3 * d * m.d_expert            # SwiGLU gate/up/down
     ops.append(Op(name="expert_ffn", kind="compute",
-                  flops=2 * tokens_in * w_expert,
-                  bytes=experts_local * w_expert * wb + 2 * tokens_in * d * wb,
+                  flops=2 * tokens_in * w_expert / p.tp,
+                  bytes=(experts_local * w_expert * wb
+                         + 2 * tokens_in * d * wb) / p.tp,
                   op_class="gemm"))
 
     if m.num_shared_experts:
@@ -148,6 +166,12 @@ def moe_ops(cfg: ModelConfig, p: ServingPoint) -> List[Op]:
     if p.ep > 1:
         ops.append(Op(name="a2a_gather", kind="a2a", m_bytes=a2a_bytes,
                       group=p.ep))
+
+    if p.tp > 1:
+        # TP all-reduce of the combined MoE output [rows, d]: the
+        # row-parallel down-proj partial sums (routed + shared experts)
+        ops.append(Op(name="moe_ar", kind="ar", m_bytes=rows * d * wb,
+                      group=p.tp))
     return ops
 
 
@@ -273,8 +297,12 @@ def chunk_schedule(prompt_len: int, chunk: int) -> Tuple[List[int], List[int]]:
 
 
 def kv_cache_bytes_per_request(cfg: ModelConfig, context: int,
-                               kv_dtype: str = "bf16") -> float:
-    """KV-cache footprint of one request at `context` tokens (all layers)."""
+                               kv_dtype: str = "bf16", tp: int = 1) -> float:
+    """KV-cache footprint of one request at `context` tokens (all layers),
+    PER DEVICE of a tp-way TP domain: GQA KV shards over the kv heads
+    (mirroring the `attention_ops` streaming model), MLA's compressed
+    latent is replicated across the domain. tp=1 (the default) is the
+    whole-request footprint — what the disagg KV handoff moves."""
     kvb = BYTES[kv_dtype]
     total = 0.0
     for spec in cfg.layer_specs:
@@ -285,8 +313,8 @@ def kv_cache_bytes_per_request(cfg: ModelConfig, context: int,
             else:
                 w = cfg.sliding_window if (spec.mixer == "attn_local"
                                            and cfg.sliding_window) else context
-                total += min(w, context) * 2 * cfg.num_kv_heads \
-                    * cfg.head_dim * kvb
+                kh = cfg.num_kv_heads / min(tp, cfg.num_kv_heads)
+                total += min(w, context) * 2 * kh * cfg.head_dim * kvb
         elif spec.mixer == "mamba":
             mc = cfg.mamba
             di = mc.expand * cfg.d_model
@@ -299,7 +327,9 @@ def kv_cache_bytes_per_request(cfg: ModelConfig, context: int,
 
 def model_shard_bytes(cfg: ModelConfig, tp: int, ep: int,
                       dtype: str = "fp8") -> float:
-    """Per-device weight bytes: dense params / tp, expert params / ep."""
+    """Per-device weight bytes: dense params / tp, expert params / (ep*tp)
+    (experts are TP-sharded inside each expert group, see `moe_ops` — at
+    the paper mapping (tp=1, ep=n) this is expert params / n exactly)."""
     wb = BYTES[dtype]
     total_params = cfg.param_count()
     if cfg.moe is None:
@@ -308,11 +338,17 @@ def model_shard_bytes(cfg: ModelConfig, tp: int, ep: int,
     n_moe = sum(1 for s in cfg.layer_specs if s.ffn == "moe")
     expert_params = n_moe * m.num_experts * 3 * cfg.d_model * m.d_expert
     dense_params = total_params - expert_params
-    return (dense_params / tp + expert_params / ep) * wb
+    return (dense_params / tp + expert_params / (ep * tp)) * wb
+
+
+# HBM fraction reserved for activations/fragmentation — the single memory
+# headroom constant shared by the batch sizer and the (tp, ep) candidate
+# enumerator (sweep.parallelism_candidates)
+KV_RESERVE_FRAC = 0.10
 
 
 def single_request_fits(cfg: ModelConfig, p: ServingPoint, hbm_cap: float,
-                        reserve_frac: float = 0.10) -> bool:
+                        reserve_frac: float = KV_RESERVE_FRAC) -> bool:
     """True iff ONE request's KV cache at `p.context` fits beside the model
     shard — exactly `max_batch_by_memory(...) >= 1`, named so the
     operating-point searches can REJECT scenarios whose per-request KV
@@ -321,14 +357,16 @@ def single_request_fits(cfg: ModelConfig, p: ServingPoint, hbm_cap: float,
 
 
 def max_batch_by_memory(cfg: ModelConfig, p: ServingPoint, hbm_cap: float,
-                        reserve_frac: float = 0.10) -> int:
+                        reserve_frac: float = KV_RESERVE_FRAC) -> int:
     """Largest global batch whose KV cache fits beside the model shard
     (paper Table 4 last row). Batch is spread over the n/tp DP-attention
-    domains."""
+    domains; the per-device KV footprint follows the TP sharding of
+    `kv_cache_bytes_per_request` (GQA shards over kv heads, MLA latent is
+    replicated)."""
     shard = model_shard_bytes(cfg, p.tp, p.ep, p.dtype)
     free = hbm_cap * (1 - reserve_frac) - shard
     if free <= 0:
         return 0
-    per_req = kv_cache_bytes_per_request(cfg, p.context, p.kv_dtype)
+    per_req = kv_cache_bytes_per_request(cfg, p.context, p.kv_dtype, p.tp)
     per_dev = max(int(free / max(per_req, 1.0)), 0)
     return per_dev * p.n // p.tp

@@ -6,7 +6,6 @@ never materialize during a dry run (jax.eval_shape + AOT lower/compile).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax

@@ -14,7 +14,7 @@ train / prefill (tokens seq-sharded over `model`):
 decode (tokens replicated over `model`, KV cache sequence-sharded):
   every rank computes attention of the full-head query against its local KV
   chunk, partial results merged with the log-sum-exp trick
-  (pmax m, psum l*e^{m-M}, psum o*e^{m-M}).
+  (pmax m, psum lsum*e^{m-M}, psum o*e^{m-M}).
 
 Prefill writes the cache in exactly the decode layout:
   global layers  k,v: [B, KV, S_loc, hd]  (seq-sharded over `model`)
@@ -24,7 +24,7 @@ from __future__ import annotations
 
 import math
 import os
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -75,7 +75,7 @@ def flash_attn(q, k, v, *, causal: bool, window: int = 0,
     pos_q = q_offset + jnp.arange(Sq)
 
     def body(carry, inp):
-        m, l, acc = carry
+        m, lsum, acc = carry
         ci, kci, vci = inp
         pos_k = kv_offset + ci * ck + jnp.arange(ck)
         # bf16-native matmuls with f32 accumulation (MXU-style): never
@@ -95,7 +95,7 @@ def flash_attn(q, k, v, *, causal: bool, window: int = 0,
         m_new = jnp.maximum(m, jnp.max(s, axis=-1))
         p = jnp.exp(s - m_new[..., None])
         corr = jnp.exp(m - m_new)
-        l_new = l * corr + jnp.sum(p, axis=-1)
+        l_new = lsum * corr + jnp.sum(p, axis=-1)
         acc_new = acc * corr[..., None] + jnp.einsum(
             "bhgqk,bhkd->bhgqd", p.astype(vci.dtype), vci,
             preferred_element_type=jnp.float32)
@@ -104,20 +104,20 @@ def flash_attn(q, k, v, *, causal: bool, window: int = 0,
     m0 = jnp.full((B, KH, g, Sq), NEG_INF, jnp.float32)
     l0 = jnp.zeros((B, KH, g, Sq), jnp.float32)
     a0 = jnp.zeros((B, KH, g, Sq, hd), jnp.float32)
-    (m, l, acc), _ = jax.lax.scan(
+    (m, lsum, acc), _ = jax.lax.scan(
         body, (m0, l0, a0), (jnp.arange(n_chunks), kc, vc))
-    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = acc / jnp.maximum(lsum, 1e-30)[..., None]
     out = jnp.transpose(out, (0, 3, 1, 2, 4)).reshape(B, Sq, H, hd)
     return out.astype(q.dtype)
 
 
 def attn_chunk_lse(q, k, v, *, pos_k, max_pos):
-    """Single-chunk decode attention returning unnormalized (o, m, l) for the
+    """Single-chunk decode attention returning unnormalized (o, m, lsum) for the
     cross-rank log-sum-exp combine.
 
     q: [B, H, hd]; k, v: [B, KH, S_loc, hd]; pos_k: [S_loc] absolute
     positions; max_pos: highest attendable position (inclusive).
-    Returns o: [B, H, hd] f32 (sum of e^{s-m} v), m: [B, H], l: [B, H].
+    Returns o: [B, H, hd] f32 (sum of e^{s-m} v), m: [B, H], lsum: [B, H].
     """
     B, H, hd = q.shape
     KH = k.shape[1]
@@ -138,17 +138,17 @@ def attn_chunk_lse(q, k, v, *, pos_k, max_pos):
     p = jnp.where(mask, p, 0.0)
     o = jnp.einsum("bhgs,bhsd->bhgd", p.astype(v.dtype), v,
                    preferred_element_type=jnp.float32)
-    l = jnp.sum(p, axis=-1)
-    return o.reshape(B, H, hd), m.reshape(B, H), l.reshape(B, H)
+    lsum = jnp.sum(p, axis=-1)
+    return o.reshape(B, H, hd), m.reshape(B, H), lsum.reshape(B, H)
 
 
-def lse_combine(o, m, l, axis, dist: Dist):
-    """Merge per-rank partial attention (o, m, l) over a sharded KV axis."""
+def lse_combine(o, m, lsum, axis, dist: Dist):
+    """Merge per-rank partial attention (o, m, lsum) over a sharded KV axis."""
     if axis is None or dist.size(axis) == 1:
-        return o / jnp.maximum(l, 1e-30)[..., None]
+        return o / jnp.maximum(lsum, 1e-30)[..., None]
     m_g = dist.pmax(jax.lax.stop_gradient(m), axis)
     corr = jnp.exp(m - m_g)
-    l_g = dist.psum(l * corr, axis)
+    l_g = dist.psum(lsum * corr, axis)
     o_g = dist.psum(o * corr[..., None], axis)
     return o_g / jnp.maximum(l_g, 1e-30)[..., None]
 
@@ -181,7 +181,7 @@ def ring_attention(q, k, v, *, seq_ax, dist: Dist, causal: bool = True):
                        (0, 2, 3, 1, 4))                     # [B,KH,g,Sq,hd]
 
     def body(carry, step):
-        m, l, acc, kc, vc = carry
+        m, lsum, acc, kc, vc = carry
         src = jnp.mod(r - step, n)
         pos_k = src * sk + jnp.arange(sk)
         kt = jnp.transpose(kc, (0, 2, 1, 3))                # [B,KH,Sk,hd]
@@ -196,7 +196,7 @@ def ring_attention(q, k, v, *, seq_ax, dist: Dist, causal: bool = True):
         p = jnp.exp(s - m_new[..., None])
         p = jnp.where(mask[None, None, None], p, 0.0)
         corr = jnp.exp(m - m_new)
-        l_new = l * corr + jnp.sum(p, axis=-1)
+        l_new = lsum * corr + jnp.sum(p, axis=-1)
         acc_new = acc * corr[..., None] + jnp.einsum(
             "bhgqk,bhkd->bhgqd", p.astype(vt.dtype), vt,
             preferred_element_type=jnp.float32)
@@ -207,9 +207,9 @@ def ring_attention(q, k, v, *, seq_ax, dist: Dist, causal: bool = True):
     m0 = jnp.full((B, KH_loc, g, sq), NEG_INF, jnp.float32)
     l0 = jnp.zeros((B, KH_loc, g, sq), jnp.float32)
     a0 = jnp.zeros((B, KH_loc, g, sq, hd), jnp.float32)
-    (m, l, acc, _, _), _ = jax.lax.scan(
+    (m, lsum, acc, _, _), _ = jax.lax.scan(
         body, (m0, l0, a0, k, v), jnp.arange(n))
-    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = acc / jnp.maximum(lsum, 1e-30)[..., None]
     out = jnp.transpose(out, (0, 3, 1, 2, 4)).reshape(B, sq, H_loc * hd)
     return out.astype(q.dtype)
 
@@ -262,7 +262,6 @@ def attention_fwd(params, x, cfg, plan: ShardingPlan, dist: Dist, *,
     """x: [B, S_loc, D] seq-sharded (or full under NullDist).
     Returns (y [B, S_loc, D], cache | None)."""
     H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
-    tp = dist.size(plan.tp_axis)
     seq_ax = plan.seq_axis
     B, s_loc, _ = x.shape
     r_seq = dist.index(seq_ax)
@@ -394,8 +393,8 @@ def attention_decode(params, x, cache, pos, cfg, plan: ShardingPlan,
         slot_pos = pos - jnp.mod(pos - slots, w)              # abs pos per slot
         # unwritten slots (early decode, pos < window) -> mask out
         slot_pos = jnp.where(slot_pos < 0, jnp.int32(2 ** 30), slot_pos)
-        o, m, l = attn_chunk_lse(q, k_c, v_c, pos_k=slot_pos, max_pos=pos)
-        o = o / jnp.maximum(l, 1e-30)[..., None]
+        o, m, lsum = attn_chunk_lse(q, k_c, v_c, pos_k=slot_pos, max_pos=pos)
+        o = o / jnp.maximum(lsum, 1e-30)[..., None]
     else:
         s_loc = cache["k"].shape[2]
         kv_ax = plan.kv_axis
@@ -426,8 +425,8 @@ def attention_decode(params, x, cache, pos, cfg, plan: ShardingPlan,
             v_c = jax.lax.dynamic_update_slice(cache["v"], u_v,
                                                (0, 0, lc, 0))
         pos_k = r * s_loc + jnp.arange(s_loc)
-        o, m, l = attn_chunk_lse(q, k_c, v_c, pos_k=pos_k, max_pos=pos)
-        o = lse_combine(o, m, l, kv_ax, dist)
+        o, m, lsum = attn_chunk_lse(q, k_c, v_c, pos_k=pos_k, max_pos=pos)
+        o = lse_combine(o, m, lsum, kv_ax, dist)
         cache = {"k": k_c, "v": v_c}
         y = _decode_out_proj(o, params, plan, dist, B)
         return y, cache
@@ -498,9 +497,9 @@ def cross_attention_decode(params, x, enc_kv, enc_len, cfg,
     s_loc = enc_kv["k"].shape[2]
     r = dist.index(plan.kv_axis)
     pos_k = r * s_loc + jnp.arange(s_loc)
-    o, m, l = attn_chunk_lse(q, enc_kv["k"], enc_kv["v"], pos_k=pos_k,
+    o, m, lsum = attn_chunk_lse(q, enc_kv["k"], enc_kv["v"], pos_k=pos_k,
                              max_pos=enc_len - 1)
-    o = lse_combine(o, m, l, plan.kv_axis, dist)
+    o = lse_combine(o, m, lsum, plan.kv_axis, dist)
     return _decode_out_proj(o, params, plan, dist, B)
 
 

@@ -10,7 +10,6 @@ Decode keeps per-rank states (conv ring [B, d_conv-1, di_loc], ssm state
 """
 from __future__ import annotations
 
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -139,7 +138,6 @@ def mamba_decode(params, x, cache, cfg, plan: ShardingPlan, dist: Dist):
     """x: [B, 1, D] replicated over tp; cache: conv [B, dc-1, di_loc],
     ssm [B, di_loc, ds]."""
     di, dtr, ds, dc = _dims(cfg)
-    B = x.shape[0]
     xt = x[:, 0]
     u = xt @ params["w_x"]                                     # [B, di_loc]
     z = xt @ params["w_z"]

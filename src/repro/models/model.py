@@ -6,7 +6,6 @@ launch layer wraps them in shard_map (real mesh) or calls them directly
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax

@@ -13,7 +13,7 @@ is the runnable counterpart whose lowered HLO exhibits the interleaving
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -19,7 +19,6 @@ Leaf classes (leaf key -> class):
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Dict, Tuple
 
 import jax
@@ -38,7 +37,6 @@ def _layer_spec_for_path(cfg: ModelConfig, path) -> LayerSpec:
     Paths look like ("periods", i, <stack keys...>) or ("rem", i, ...);
     index i is the position within cfg.period.
     """
-    kind = path[0].key if hasattr(path[0], "key") else path[0]
     idx = path[1].idx if hasattr(path[1], "idx") else path[1]
     return cfg.period[idx % len(cfg.period)]
 

@@ -19,8 +19,7 @@ tokens one iteration yields (spec_p), never what they are.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -146,7 +145,6 @@ class SDDecoder:
         """Produce [B, spec_m-1] draft tokens."""
         if self.draft_fn is not None:
             return self.draft_fn(self.params, caches, cur_tok, pos)
-        B = cur_tok.shape[0]
         # heads path needs the last hidden state; approximate with the
         # embedding of the current token (untrained heads anyway)
         h = common.embed(self.params["embed"], cur_tok, self.cfg, self.plan,
@@ -156,7 +154,6 @@ class SDDecoder:
     def generate(self, caches, first_tok, start_pos: int, n_tokens: int):
         """Greedy-equivalent generation of ~n_tokens (may emit a few more,
         then truncates). Returns (tokens [B, n_tokens], caches, stats)."""
-        B = first_tok.shape[0]
         out: List[jnp.ndarray] = []
         cur = first_tok
         pos = start_pos

@@ -1,6 +1,5 @@
 """Table 3 ground truth: our A2A cost formulas must reproduce the paper's
 coefficients exactly, and the alpha-beta model must behave sanely."""
-import math
 
 import numpy as np
 import pytest

@@ -1,0 +1,58 @@
+"""TPU v5e through the operating-point search (closes the ROADMAP note:
+'TPU v5e in core/hardware.py is still unswept').
+
+v5e is the JAX half's execution target: a 3D-torus-native part with 16 GB
+HBM, so the full DeepSeek-V3 weight shard cannot fit — the sweep must say
+so (None / no candidates) rather than return a bogus point — while a
+small MoE (olmoe-1b-7b) must produce a feasible operating point on the
+Table-3 topologies.
+"""
+import pytest
+
+from repro.configs import get_arch
+from repro.core import TPU_V5E, Scenario, make_cluster
+from repro.core import sweep
+
+
+@pytest.mark.parametrize("topo", ["torus", "scale-up"])
+def test_v5e_sweeps_small_moe(topo):
+    cfg = get_arch("olmoe-1b-7b")
+    cl = make_cluster(topo, 64, TPU_V5E)
+    ops = sweep.sweep_max_throughput([cl], cfg, [Scenario(40.0, 512)])
+    op = ops[0][0]
+    assert op is not None, f"v5e {topo} found no operating point"
+    assert op.throughput > 0 and op.batch >= 1
+    assert op.tpot <= 40.0 * 1e-3
+
+    auto = sweep.sweep_max_throughput([cl], cfg, [Scenario(40.0, 512)],
+                                      tp="auto")[0][0]
+    assert auto is not None and auto.throughput >= op.throughput
+
+
+def test_v5e_candidates_respect_16gb_hbm():
+    """DeepSeek-V3's dense shard alone exceeds v5e's HBM at tp=1; the
+    candidate enumerator must prune those mappings instead of sweeping
+    them."""
+    dsv3 = get_arch("deepseek-v3")
+    cl = make_cluster("torus", 64, TPU_V5E)
+    cands = sweep.parallelism_candidates(dsv3, cl)
+    assert (1, 64) not in cands
+    olmoe = get_arch("olmoe-1b-7b")
+    assert (1, 64) in sweep.parallelism_candidates(olmoe, cl)
+
+
+def test_mixed_xpu_auto_keeps_per_cluster_candidates():
+    """In a mixed-XPU sweep the candidate set is the per-cluster UNION:
+    a mapping v5e's HBM prunes must still reach the H100 cluster, so
+    auto never returns less than the H100's own fixed tp=1 sweep."""
+    from repro.core import H100
+
+    dsv3 = get_arch("deepseek-v3")
+    pair = [make_cluster("torus", 64, TPU_V5E),
+            make_cluster("torus", 64, H100)]
+    sc = Scenario(40.0, 512)
+    auto = sweep.sweep_max_throughput(pair, dsv3, [sc], tp="auto")
+    fixed_h100 = sweep.sweep_max_throughput([pair[1]], dsv3, [sc])[0][0]
+    assert auto[1][0] is not None
+    assert auto[1][0].throughput >= fixed_h100.throughput
+    assert auto[0][0] is None or auto[0][0].tp > 1   # v5e can't run tp=1

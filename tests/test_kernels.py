@@ -2,7 +2,6 @@
 oracle, swept over shapes and dtypes. The hypothesis property tests live in
 test_kernels_props.py behind pytest.importorskip, so a missing `hypothesis`
 degrades to a skip instead of killing collection."""
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -5,7 +5,7 @@ pytest.importorskip, so a missing `hypothesis` degrades to a skip instead of
 killing collection."""
 import pytest
 
-from repro.core.overlap import ScheduleResult, TimedOp, simulate_two_lane
+from repro.core.overlap import TimedOp, simulate_two_lane
 
 
 def mk(names_lanes_durs, mb):

@@ -1,6 +1,5 @@
 """Serving runtime tests: engine continuous batching, DBO step equivalence,
 and the speculative-decoding greedy-equivalence property."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -29,7 +28,6 @@ def greedy_reference(cfg, params, prompt, n_tokens, max_seq):
     """Plain sequential greedy decode (the oracle for SD equivalence)."""
     plan, dist = null_plan("decode"), NullDist()
     pplan = null_plan("prefill")
-    B = prompt.shape[0]
     tok, caches = M.prefill(params, {"tokens": prompt}, cfg, pplan, dist)
     caches = kvcache.pad_to_capacity(cfg, caches, prompt.shape[1], max_seq)
     toks = [tok]
@@ -81,7 +79,7 @@ def test_engine_isolation():
     alone = eng1.run()[r1]
     eng2 = Engine(cfg, params, max_batch=2, max_seq=48, eos_id=-1)
     ra = eng2.submit(p1, max_new_tokens=5)
-    rb = eng2.submit(p2, max_new_tokens=5)
+    eng2.submit(p2, max_new_tokens=5)
     both = eng2.run()
     assert both[ra] == alone
 

@@ -174,3 +174,177 @@ def test_mixed_cluster_sizes_rejected():
                 make_cluster("scale-up", 256, H100)]
     with pytest.raises(ValueError, match="uniform device count"):
         sweep.sweep_max_throughput(clusters, cfg, [Scenario(40.0, 512)])
+
+
+# ---------------------------------------------------------------------------
+# 4. hybrid-parallelism (tp, ep) axis
+# ---------------------------------------------------------------------------
+
+def test_parallelism_candidates_structure():
+    cl = make_cluster("scale-up", 64, H100)
+    dsv3 = get_arch("deepseek-v3")
+    cands = sweep.parallelism_candidates(dsv3, cl)
+    assert cands[0] == (1, 64)                       # fixed mapping first
+    assert cands == sorted(cands)                    # tp ascending
+    for tp, ep in cands:
+        assert tp * ep == 64
+        assert dsv3.moe.num_experts % ep == 0
+        assert dsv3.num_heads % tp == 0              # MLA: shard num_heads
+    # GQA model: tp capped by kv heads (olmoe has 16)
+    olmoe = get_arch("olmoe-1b-7b")
+    assert all(tp <= olmoe.num_kv_heads
+               for tp, _ in sweep.parallelism_candidates(olmoe, cl))
+    # dense model: ep stays 1 on every candidate
+    dense = get_arch("starcoder2-3b")
+    assert all(ep == 1 for _, ep in sweep.parallelism_candidates(dense, cl))
+
+
+def test_moe_ops_tp_sharded():
+    """tp=1 op list is byte-identical to the seed; tp>1 adds the moe_ar
+    and shards expert weights/flops so the per-device expert load is
+    invariant along the ep = n/tp family."""
+    cfg = get_arch("deepseek-v3")
+    p1 = ServingPoint(batch_global=512, context=512, tp=1, ep=64,
+                      n_devices=64)
+    p2 = ServingPoint(batch_global=512, context=512, tp=2, ep=32,
+                      n_devices=64)
+    names1 = [o.name for o in workload.decode_iteration(cfg, p1)]
+    assert not any(n.endswith("moe_ar") for n in names1)
+    ops2 = workload.decode_iteration(cfg, p2)
+    assert any(o.name.endswith("moe_ar") for o in ops2)
+
+    def expert(ops):
+        return next(o for o in ops if o.name == "L10.expert_ffn")
+
+    e1 = expert(workload.decode_iteration(cfg, p1))
+    e2 = expert(ops2)
+    assert e2.flops == pytest.approx(e1.flops)       # invariant per device
+    # and the weight shard is invariant too: E/(ep*tp) == E/n
+    assert workload.model_shard_bytes(cfg, 2, 32) < \
+        workload.model_shard_bytes(cfg, 1, 64)       # dense part shrinks
+
+
+def test_kv_cache_tp_sharding_matches_streaming_model():
+    """Per-device KV STORAGE must follow the same TP sharding the
+    attention streaming model uses: GQA shards over kv heads, MLA's
+    compressed latent is replicated across the domain."""
+    gqa = get_arch("olmoe-1b-7b")                    # 16 kv heads
+    full = workload.kv_cache_bytes_per_request(gqa, 4096)
+    assert workload.kv_cache_bytes_per_request(gqa, 4096, tp=8) == \
+        pytest.approx(full / 8)
+    # beyond the head count the shard stops shrinking
+    assert workload.kv_cache_bytes_per_request(gqa, 4096, tp=64) == \
+        pytest.approx(full / 16)
+    mla = get_arch("deepseek-v3")
+    assert workload.kv_cache_bytes_per_request(mla, 4096, tp=8) == \
+        workload.kv_cache_bytes_per_request(mla, 4096)
+
+
+def test_comm_spec_seed_identity_at_tp1():
+    """tp=1 placement must reproduce the seed whole-cluster collectives
+    exactly, for every topology and any group argument."""
+    m = 64 * 1024 * 1024
+    for topo in TABLE3_TOPOS:
+        cl = make_cluster(topo, 64, H100)
+        assert cl.a2a_time(m) == cl.a2a_time(m, group=64, tp=1)
+        assert cl.a2a_time(m) == cl.a2a_time(m, group=32, tp=1)
+        assert cl.ar_time(m, group=8) == cl.ar_time(m, group=8, tp=1)
+
+
+def test_comm_spec_places_tp_neighborhood():
+    m = 8 * 1024 * 1024
+    # scale-out: a tp<=8 all-reduce rides the NVLink island, far cheaper
+    # than the same group over the NIC fabric
+    so = make_cluster("scale-out", 64, H100)
+    assert so.ar_time(m, group=8, tp=8) < 0.25 * so.ar_time(m, group=8)
+    # mesh: the TP sub-mesh sees only its neighborhood's share of the
+    # links, so the placed AR is SLOWER than the naive whole-dims menu
+    for topo in ("torus", "fullmesh"):
+        cl = make_cluster(topo, 64, H100)
+        assert cl.ar_time(m, group=4, tp=4) > cl.ar_time(m, group=4)
+        # and the quotient A2A of ep = n/tp spans fewer peers
+        assert cl.a2a_time(m, group=16, tp=4) != cl.a2a_time(m)
+
+
+def test_batched_tpot_matches_scalar_tp_axis():
+    """The 1e-9 batched-vs-scalar property extended to tp > 1: the new
+    moe_ar ops and placed collectives must agree between the engine and
+    the scalar timers on every topology."""
+    cfg = get_arch("deepseek-v3")
+    batches = np.array([64, 512, 4096, 20000])
+    sc = Scenario(40.0, 4096)
+    for topo in TABLE3_TOPOS:
+        cl = make_cluster(topo, 64, H100)
+        for tp in (2, 8, 64):
+            ep = 64 // tp
+            table = optable.op_table(cfg, tp, ep, 64)
+            got = sweep.batched_tpot(table, [cl], batches, [sc])[0, 0]
+            p0 = ServingPoint(batch_global=1, context=sc.context, tp=tp,
+                              ep=ep, n_devices=64)
+            want = np.array([
+                optimizer.tpot_at(cfg, replace(p0, batch_global=int(b)), cl,
+                                  dbo=False, sd=None)[0] for b in batches])
+            np.testing.assert_allclose(got, want, rtol=1e-9)
+
+
+def test_auto_never_worse_and_strictly_better():
+    """tp='auto' must dominate the fixed mapping on every Table-3
+    topology x scenario, and strictly improve somewhere (the axis's
+    reason to exist)."""
+    cfg = get_arch("deepseek-v3")
+    clusters = [make_cluster(t, 64, H100) for t in TABLE3_TOPOS]
+    scenarios = [Scenario(15.0, 512), Scenario(40.0, 512)]
+    fixed = sweep.sweep_max_throughput(clusters, cfg, scenarios)
+    auto = sweep.sweep_max_throughput(clusters, cfg, scenarios, tp="auto")
+    strict = False
+    for ci in range(len(clusters)):
+        for si in range(len(scenarios)):
+            f, a = fixed[ci][si], auto[ci][si]
+            ft = f.throughput if f else 0.0
+            at = a.throughput if a else 0.0
+            assert at >= ft, (TABLE3_TOPOS[ci], scenarios[si].name)
+            strict |= at > ft
+            if a is not None:
+                assert a.tp * a.ep == 64
+    assert strict
+
+
+def test_auto_equals_best_fixed_candidate():
+    """The auto merge is exactly the per-candidate argmax with ties to
+    the smallest tp."""
+    cfg = get_arch("deepseek-v3")
+    cl = make_cluster("scale-out", 64, H100)
+    sc = Scenario(40.0, 512)
+    auto = optimizer.max_throughput(cl, cfg, sc, tp="auto")
+    per_cand = [optimizer.max_throughput(cl, cfg, sc, tp=t, ep=e)
+                for t, e in sweep.parallelism_candidates(cfg, cl)]
+    best = max((p for p in per_cand if p is not None),
+               key=lambda p: p.throughput)
+    assert auto == best
+    assert auto.tp > 1                               # scale-out: TP wins
+
+
+def test_auto_rejects_explicit_ep():
+    cfg = get_arch("deepseek-v3")
+    cl = make_cluster("scale-up", 64, H100)
+    with pytest.raises(ValueError, match="auto"):
+        sweep.sweep_max_throughput([cl], cfg, [Scenario(40.0, 512)],
+                                   tp="auto", ep=64)
+
+
+def test_prefill_modes_accept_auto():
+    """All three serving modes search the mapping axis: auto dominates
+    the fixed mapping per cell and records the chosen (tp, ep)."""
+    cfg = get_arch("deepseek-v3")
+    cl = make_cluster("scale-out", 64, H100)
+    sc = Scenario(40.0, 4096, prompt_len=2048, ttft_ms=2000.0)
+    for mode in ("decode", "chunked", "disagg"):
+        fixed = sweep.sweep_prefill([cl], cfg, [sc], mode=mode)[0][0]
+        auto = sweep.sweep_prefill([cl], cfg, [sc], mode=mode,
+                                   tp="auto")[0][0]
+        ft = fixed.throughput if fixed else 0.0
+        at = auto.throughput if auto else 0.0
+        assert at >= ft, mode
+        if auto is not None:
+            assert auto.tp >= 1 and auto.mode == (mode if mode != "decode"
+                                                  else "decode")
