@@ -1,19 +1,31 @@
-"""CI gate: fail when the sweep-heavy benchmark timings regress > MAX_RATIO
-over the committed baseline.
+"""CI gate: fail when the sweep-heavy benchmark timings regress.
 
   python benchmarks/check_timing.py --baseline <committed BENCH_sweep_timing.json> \
       --current bench_results/BENCH_sweep_timing.json [--max-ratio 2.0]
 
-Only modules freshly timed in the current run are compared (the harness
-merges prior timings for modules a filtered run skipped — those carry the
-baseline values verbatim and would trivially pass). An absolute noise
-floor keeps sub-second modules from tripping the ratio on a cold CI
-runner: a module fails only if now > max(ratio * baseline, baseline + FLOOR_S).
+Two gates per module, both enforced on every module freshly timed in the
+current run (the harness merges prior timings for modules a filtered run
+skipped — those carry the baseline values verbatim and would trivially
+pass):
+
+  ratio    now <= max(max_ratio * baseline, baseline + FLOOR_S) against the
+           committed baseline timing. The absolute noise floor keeps
+           sub-second modules from tripping the ratio on a cold CI runner.
+  budget   now <= the module's own `budget_s` (written by benchmarks/run.py
+           from BUDGETS_S) — an absolute per-benchmark ceiling, so modules
+           that post-date the seed timings (fig_parallelism, fig_pipeline)
+           are gated too, and a legitimate baseline refresh cannot smuggle
+           in an unbounded slowdown.
+
+  --update-baseline rewrites the baseline file with the current run's
+  timings (use after a change that legitimately grows the grid — e.g. the
+  pp axis enlarging the candidate set — then commit the refreshed JSON).
 """
 from __future__ import annotations
 
 import argparse
 import json
+import shutil
 import sys
 
 FLOOR_S = 5.0
@@ -24,7 +36,15 @@ def main(argv=None) -> int:
     ap.add_argument("--baseline", required=True)
     ap.add_argument("--current", required=True)
     ap.add_argument("--max-ratio", type=float, default=2.0)
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite --baseline with the current timings "
+                         "instead of gating (commit the result)")
     args = ap.parse_args(argv)
+
+    if args.update_baseline:
+        shutil.copyfile(args.current, args.baseline)
+        print(f"baseline rewritten: {args.current} -> {args.baseline}")
+        return 0
 
     with open(args.baseline) as f:
         base = json.load(f)["modules"]
@@ -35,17 +55,28 @@ def main(argv=None) -> int:
     for name, row in cur.items():
         now = row.get("now_s")
         was = base.get(name, {}).get("now_s")
-        if now is None or was is None or now == was:
+        budget = row.get("budget_s")
+        if now is None or now == was:
             continue        # not timed this run (merged from baseline)
-        limit = max(args.max_ratio * was, was + FLOOR_S)
-        status = "FAIL" if now > limit else "ok"
-        print(f"[{status}] {name}: baseline {was:.2f}s -> now {now:.2f}s "
-              f"(limit {limit:.2f}s)")
-        if now > limit:
-            failures.append(name)
+        limits = []
+        if was is not None:
+            limits.append(("ratio", max(args.max_ratio * was,
+                                        was + FLOOR_S)))
+        if budget is not None:
+            limits.append(("budget", float(budget)))
+        if not limits:
+            continue
+        bad = [f"{what} {lim:.2f}s" for what, lim in limits if now > lim]
+        status = "FAIL" if bad else "ok"
+        base_str = f"baseline {was:.2f}s -> " if was is not None else ""
+        print(f"[{status}] {name}: {base_str}now {now:.2f}s "
+              f"(limits: {', '.join(f'{w} {v:.2f}s' for w, v in limits)})")
+        if bad:
+            failures.append(f"{name} ({'; '.join(bad)})")
     if failures:
-        print(f"\nsweep timing regressed >{args.max_ratio}x (+{FLOOR_S}s "
-              f"floor) in: {', '.join(failures)}", file=sys.stderr)
+        print(f"\nsweep timing regressed (>{args.max_ratio}x + {FLOOR_S}s "
+              f"floor, or over budget) in: {', '.join(failures)}",
+              file=sys.stderr)
         return 1
     print("\nsweep timings within budget")
     return 0

@@ -60,6 +60,25 @@ ties to the smallest tp so fixed-mapping results are byte-identical.
 mapping: switchless fabrics keep their cost-effectiveness win at
 relaxed SLOs, while tight-TPOT scenarios only the mapping search can
 serve flip the winner to the switched fabrics.
+
+Pipeline-parallel axis
+----------------------
+pp="auto" (alone or with tp="auto") extends the mapping search to
+(tp, pp, ep = n/(tp*pp)) triples: pp splits the layer stack into
+balanced contiguous stages (`workload.stage_layer_counts`; uneven
+splits carry the `stage_imbalance` bottleneck factor), divides the
+per-stage dense weight shard by tp*pp while the expert shard stays
+experts/n, and adds pp-1 per-token `pp_sendrecv` hidden-state hops
+placed by the topology (one mesh link on torus/full-mesh, the NIC
+across scale-out islands, the switch on scale-up). Candidates require
+tp*pp | n, pp <= layer count, and the per-stage HBM fit; ties resolve
+to the smallest (tp, pp), so every pp=1 result is byte-identical to
+the PR-3 search. Disaggregated prefill resolves the mapping PER POOL
+(tp_prefill/pp_prefill recorded on the operating point). `fig_pipeline`
+compares the fixed-(tp, ep) search against the full triple search on
+H100 (where pp trades KV headroom against hop latency) and on 16 GB
+TPU v5e, where pp flips DeepSeek-V3's low-tp mappings from HBM-pruned
+to feasible and wins the cost-per-throughput ranking.
 """
 from __future__ import annotations
 
@@ -85,6 +104,7 @@ MODULES = [
     "benchmarks.fig18_future",
     "benchmarks.fig_prefill_scenarios",
     "benchmarks.fig_parallelism",
+    "benchmarks.fig_pipeline",
     "benchmarks.roofline",
 ]
 
@@ -100,6 +120,25 @@ SEED_TIMINGS_S = {
     "benchmarks.fig16_scale": 23.05,
     "benchmarks.fig17_pareto": 283.79,
     "benchmarks.fig18_future": 185.44,
+}
+
+# Per-benchmark wall-clock budgets (seconds): absolute ceilings enforced by
+# benchmarks/check_timing.py next to the 2x-vs-baseline ratio gate, sized
+# ~20-40x the local runtimes so a cold CI runner passes but a quadratic
+# candidate-grid blowup does not. Modules without a seed timing
+# (fig_parallelism / fig_pipeline post-date the seed) are gated by their
+# budget alone.
+BUDGETS_S = {
+    "benchmarks.fig9_batch_sweep": 10,
+    "benchmarks.fig10_scenarios": 15,
+    "benchmarks.fig11_sw_opts": 30,
+    "benchmarks.fig12_linkbw": 60,
+    "benchmarks.fig14_topology": 45,
+    "benchmarks.fig16_scale": 45,
+    "benchmarks.fig17_pareto": 180,
+    "benchmarks.fig18_future": 120,
+    "benchmarks.fig_parallelism": 60,
+    "benchmarks.fig_pipeline": 120,
 }
 
 
@@ -120,13 +159,18 @@ def _save_sweep_timing(timings: dict) -> None:
     rows = {}
     seed_total = now_total = 0.0
     complete = True
-    for name, seed_s in SEED_TIMINGS_S.items():
+    tracked = dict.fromkeys(list(SEED_TIMINGS_S) + list(BUDGETS_S))
+    for name in tracked:
+        seed_s = SEED_TIMINGS_S.get(name)
         short = name.split(".")[-1]
         now_s = timings.get(name, prior.get(short, {}).get("now_s"))
-        rows[short] = {"seed_s": seed_s, "now_s": now_s}
-        if seed_s is None or now_s is None:
+        rows[short] = {"seed_s": seed_s, "now_s": now_s,
+                       "budget_s": BUDGETS_S.get(name)}
+        if now_s is None:
             complete = False
             continue
+        if seed_s is None:
+            continue                 # budget-only module (no seed record)
         seed_total += seed_s
         now_total += now_s
     payload = {
@@ -161,7 +205,8 @@ def main(argv):
             failures.append(name)
         print(f"[{name}: {time.time() - t0:.1f}s]", flush=True)
 
-    if any(name in SEED_TIMINGS_S for name in timings):
+    if any(name in SEED_TIMINGS_S or name in BUDGETS_S
+           for name in timings):
         _save_sweep_timing(timings)
 
     print(f"\n{'=' * 72}\n== CLAIM SUMMARY\n{'=' * 72}")

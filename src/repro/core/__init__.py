@@ -12,7 +12,8 @@ methodology for MoE LLM serving networks.
   tco          CapEx/OpEx cluster cost model (+ adjustment factor c)
   optable      decode/prefill op lists lowered to coefficient arrays
   sweep        batched operating-point search (vectorized alpha-beta + DBO,
-               chunked / disaggregated prefill serving modes)
+               chunked / disaggregated prefill serving modes, hybrid
+               (tp, pp, ep) parallelism-mapping search)
   optimizer    max-throughput-under-SLO sweep
   pareto       performance-vs-cost sweep + Pareto frontier (Fig 17)
   future       Blackwell/Rubin saturating-bandwidth projection (Fig 18/19)

@@ -82,6 +82,18 @@ def a2a_torus_p2p(dims: Tuple[int, ...]) -> CollCost:
 
 
 # ---------------------------------------------------------------------------
+# point-to-point (pipeline-parallel stage boundary)
+# ---------------------------------------------------------------------------
+
+def pp_sendrecv() -> CollCost:
+    """One send/recv between corresponding devices of adjacent pipeline
+    stages: a single round to a single destination moving the full payload.
+    The topology decides the bandwidth the hop rides (one mesh link, the
+    NIC, or the scale-up switch — see `Cluster.comm_spec`)."""
+    return CollCost(rounds=1, dests=1, m_coeff=1.0, name="sendrecv")
+
+
+# ---------------------------------------------------------------------------
 # all-reduce (coefficient of m is the classic 2(N-1)/N for BW-optimal algos;
 # topology-specific effective-bandwidth derating folds into m_coeff)
 # ---------------------------------------------------------------------------

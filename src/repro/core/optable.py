@@ -43,8 +43,9 @@ from repro.core.compute_model import EFF_COMPUTE
 from repro.core.workload import ServingPoint
 
 # integer codes for Op.kind
-KIND_COMPUTE, KIND_A2A, KIND_AR = 0, 1, 2
-KIND_CODES = {"compute": KIND_COMPUTE, "a2a": KIND_A2A, "ar": KIND_AR}
+KIND_COMPUTE, KIND_A2A, KIND_AR, KIND_PP = 0, 1, 2, 3
+KIND_CODES = {"compute": KIND_COMPUTE, "a2a": KIND_A2A, "ar": KIND_AR,
+              "pp_sendrecv": KIND_PP}
 
 
 @dataclass(frozen=True)
@@ -61,10 +62,12 @@ class OpTable:
     n: int
     dtype: str
     kv_dtype: str
+    pp: int
 
     names: Tuple[str, ...]
     kind: np.ndarray           # int8, KIND_* codes
-    group: np.ndarray          # AR group size (0 for non-AR ops)
+    group: np.ndarray          # AR group / pp-hop stage count (0 otherwise)
+    stage_scale: np.ndarray    # per-op pipeline bottleneck factor (1.0 at pp|L)
     eff: np.ndarray            # compute efficiency at rows >= GEMM_SMALL_TOKENS
     eff_small: np.ndarray      # compute efficiency below the thin-GEMM cutoff
 
@@ -106,11 +109,22 @@ class OpTable:
         return self.m_row[:, None] * self.rows(batches, q_len)
 
 
+def _stage_scale(names, n_layers: int, pp: int) -> np.ndarray:
+    """Per-op pipeline bottleneck multiplier: per-layer ops
+    (`workload.is_per_layer_op`) repeat on the largest stage
+    `stage_imbalance` times per round; the lm head and the pp hops ride
+    the round once. All ones at pp=1 and whenever pp divides the layer
+    count."""
+    imb = workload.stage_imbalance(n_layers, pp)
+    return np.array([imb if workload.is_per_layer_op(nm) else 1.0
+                     for nm in names])
+
+
 def _probe(cfg: ModelConfig, *, batch_global: int, context: int, q_len: int,
-           tp: int, ep: int, n: int, dtype: str, kv_dtype: str):
+           tp: int, ep: int, n: int, dtype: str, kv_dtype: str, pp: int = 1):
     p = ServingPoint(batch_global=batch_global, context=context, tp=tp,
                      ep=ep, n_devices=n, dtype=dtype, kv_dtype=kv_dtype,
-                     q_len=q_len)
+                     q_len=q_len, pp=pp)
     ops = workload.decode_iteration(cfg, p)
     return (tuple(o.name for o in ops),
             np.array([o.flops for o in ops]),
@@ -121,15 +135,17 @@ def _probe(cfg: ModelConfig, *, batch_global: int, context: int, q_len: int,
 
 def build_op_table(cfg: ModelConfig, *, tp: int = 1, ep: int = 1,
                    n_devices: int = 0, dtype: str = "fp8",
-                   kv_dtype: str = "bf16") -> OpTable:
+                   kv_dtype: str = "bf16", pp: int = 1) -> OpTable:
     """Lower one decode iteration to an OpTable via linear probes.
 
     Probe points: b=0 isolates constant (weight) bytes; b=tp (i.e.
     batch_global=n, which makes batch_per_device exactly tp) isolates the
-    per-row terms; ctx 0 vs 1 isolates the context terms.
+    per-row terms; ctx 0 vs 1 isolates the context terms. pp > 1 adds the
+    pp-1 `pp_sendrecv` hop rows (payload linear in rows, so the same
+    probes recover them) and the `stage_scale` bottleneck column.
     """
-    n = n_devices or (ep * tp)
-    kw = dict(tp=tp, ep=ep, n=n, dtype=dtype, kv_dtype=kv_dtype)
+    n = n_devices or (ep * tp * pp)
+    kw = dict(tp=tp, ep=ep, n=n, dtype=dtype, kv_dtype=kv_dtype, pp=pp)
     names0, f0, by0, m0, ops = _probe(cfg, batch_global=0, context=0,
                                       q_len=1, **kw)
     names1, f1, by1, m1, _ = _probe(cfg, batch_global=n, context=0,
@@ -157,9 +173,10 @@ def build_op_table(cfg: ModelConfig, *, tp: int = 1, ep: int = 1,
 
     table = OpTable(
         cfg_name=cfg.name, tp=tp, ep=ep, n=n, dtype=dtype, kv_dtype=kv_dtype,
-        names=names0,
+        pp=pp, names=names0,
         kind=np.array([KIND_CODES[o.kind] for o in ops], np.int8),
         group=np.array([o.group for o in ops], np.int64),
+        stage_scale=_stage_scale(names0, cfg.num_layers, pp),
         eff=eff, eff_small=eff_small,
         flop_row=flop_row, flop_row_ctx=flop_row_ctx,
         bytes_const=bytes_const, bytes_row=bytes_row, bytes_ctx=bytes_ctx,
@@ -169,13 +186,13 @@ def build_op_table(cfg: ModelConfig, *, tp: int = 1, ep: int = 1,
 
 
 def _validate(cfg: ModelConfig, table: OpTable, *, tp, ep, n, dtype,
-              kv_dtype, rtol: float = 1e-9):
+              kv_dtype, pp=1, rtol: float = 1e-9):
     """Cross-check the closed forms against a generic probe point. Guards
     against future nonlinearity creeping into `workload.decode_iteration`."""
     bg, ctx, q = 3 * n, 37, 2
     _, f, by, m, _ = _probe(cfg, batch_global=bg, context=ctx, q_len=q,
                             tp=tp, ep=ep, n=n, dtype=dtype,
-                            kv_dtype=kv_dtype)
+                            kv_dtype=kv_dtype, pp=pp)
     batches = np.array([bg], float)
     got_f = table.flops(batches, q, ctx)[:, 0]
     got_by = table.op_bytes(batches, q, ctx)[:, 0]
@@ -193,12 +210,14 @@ def _validate(cfg: ModelConfig, table: OpTable, *, tp, ep, n, dtype,
 
 @lru_cache(maxsize=64)
 def op_table(cfg: ModelConfig, tp: int, ep: int, n_devices: int,
-             dtype: str = "fp8", kv_dtype: str = "bf16") -> OpTable:
-    """LRU-cached table builder — the sweep engine's entry point. ModelConfig
-    is a frozen dataclass, so it hashes by value and config edits miss the
-    cache as they should."""
+             dtype: str = "fp8", kv_dtype: str = "bf16",
+             pp: int = 1) -> OpTable:
+    """LRU-cached table builder — the sweep engine's entry point, keyed on
+    the full (model, tp, pp, ep, n, dtype) mapping. ModelConfig is a frozen
+    dataclass, so it hashes by value and config edits miss the cache as
+    they should."""
     return build_op_table(cfg, tp=tp, ep=ep, n_devices=n_devices,
-                          dtype=dtype, kv_dtype=kv_dtype)
+                          dtype=dtype, kv_dtype=kv_dtype, pp=pp)
 
 
 # ---------------------------------------------------------------------------
@@ -231,10 +250,12 @@ class PrefillOpTable:
     n: int
     dtype: str
     kv_dtype: str
+    pp: int
 
     names: Tuple[str, ...]
     kind: np.ndarray
     group: np.ndarray
+    stage_scale: np.ndarray
     eff: np.ndarray
     eff_small: np.ndarray
 
@@ -287,9 +308,10 @@ class PrefillOpTable:
 
 def _probe_prefill(cfg: ModelConfig, *, batch_global: int, context: int,
                    chunk: int, tp: int, ep: int, n: int, dtype: str,
-                   kv_dtype: str):
+                   kv_dtype: str, pp: int = 1):
     p = ServingPoint(batch_global=batch_global, context=context, tp=tp,
-                     ep=ep, n_devices=n, dtype=dtype, kv_dtype=kv_dtype)
+                     ep=ep, n_devices=n, dtype=dtype, kv_dtype=kv_dtype,
+                     pp=pp)
     ops = workload.prefill_iteration(cfg, p, chunk)
     return (tuple(o.name for o in ops),
             np.array([o.flops for o in ops]),
@@ -300,15 +322,16 @@ def _probe_prefill(cfg: ModelConfig, *, batch_global: int, context: int,
 
 def build_prefill_op_table(cfg: ModelConfig, *, tp: int = 1, ep: int = 1,
                            n_devices: int = 0, dtype: str = "fp8",
-                           kv_dtype: str = "bf16") -> PrefillOpTable:
+                           kv_dtype: str = "bf16",
+                           pp: int = 1) -> PrefillOpTable:
     """Lower one prefill iteration to a PrefillOpTable via polynomial probes.
 
     Probe points: b=0 isolates constant (weight) bytes; at b=tp, chunk 1 vs
     2 (ctx=0) separates the rows and rows*chunk flop terms; ctx 0 vs 1 at
     chunk=1 isolates the context terms.
     """
-    n = n_devices or (ep * tp)
-    kw = dict(tp=tp, ep=ep, n=n, dtype=dtype, kv_dtype=kv_dtype)
+    n = n_devices or (ep * tp * pp)
+    kw = dict(tp=tp, ep=ep, n=n, dtype=dtype, kv_dtype=kv_dtype, pp=pp)
     names0, f0, by0, m0, ops = _probe_prefill(cfg, batch_global=0, context=0,
                                               chunk=1, **kw)
     names1, f1, by1, m1, _ = _probe_prefill(cfg, batch_global=n, context=0,
@@ -340,9 +363,10 @@ def build_prefill_op_table(cfg: ModelConfig, *, tp: int = 1, ep: int = 1,
 
     table = PrefillOpTable(
         cfg_name=cfg.name, tp=tp, ep=ep, n=n, dtype=dtype, kv_dtype=kv_dtype,
-        names=names0,
+        pp=pp, names=names0,
         kind=np.array([KIND_CODES[o.kind] for o in ops], np.int8),
         group=np.array([o.group for o in ops], np.int64),
+        stage_scale=_stage_scale(names0, cfg.num_layers, pp),
         eff=eff, eff_small=eff_small,
         flop_row=flop_row, flop_row_ctx=flop_row_ctx,
         flop_row_chunk=flop_row_chunk,
@@ -353,14 +377,14 @@ def build_prefill_op_table(cfg: ModelConfig, *, tp: int = 1, ep: int = 1,
 
 
 def _validate_prefill(cfg: ModelConfig, table: PrefillOpTable, *, tp, ep, n,
-                      dtype, kv_dtype, rtol: float = 1e-9):
+                      dtype, kv_dtype, pp=1, rtol: float = 1e-9):
     """Cross-check the closed forms against a generic probe point (the
     chunk=7 probe would expose e.g. a cubic-in-chunk term the chunk={1,2}
     fit could not see)."""
     bg, chunk, ctx = 3 * n, 7, 37
     _, f, by, m, _ = _probe_prefill(cfg, batch_global=bg, context=ctx,
                                     chunk=chunk, tp=tp, ep=ep, n=n,
-                                    dtype=dtype, kv_dtype=kv_dtype)
+                                    dtype=dtype, kv_dtype=kv_dtype, pp=pp)
     c_arr = np.array([chunk], float)
     o_arr = np.array([ctx], float)
     got_f = table.flops(bg, c_arr, o_arr)[:, 0]
@@ -380,8 +404,8 @@ def _validate_prefill(cfg: ModelConfig, table: PrefillOpTable, *, tp, ep, n,
 
 @lru_cache(maxsize=64)
 def prefill_op_table(cfg: ModelConfig, tp: int, ep: int, n_devices: int,
-                     dtype: str = "fp8",
-                     kv_dtype: str = "bf16") -> PrefillOpTable:
+                     dtype: str = "fp8", kv_dtype: str = "bf16",
+                     pp: int = 1) -> PrefillOpTable:
     """LRU-cached prefill table builder — the prefill sweep's entry point."""
     return build_prefill_op_table(cfg, tp=tp, ep=ep, n_devices=n_devices,
-                                  dtype=dtype, kv_dtype=kv_dtype)
+                                  dtype=dtype, kv_dtype=kv_dtype, pp=pp)

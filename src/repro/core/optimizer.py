@@ -79,8 +79,9 @@ class OperatingPoint:
     exposed_comm: float            # seconds (under the schedule actually used)
     t_compute: float
     t_comm: float
-    tp: int = 1                    # the (tp, ep) mapping the point runs at
+    tp: int = 1                    # the (tp, pp, ep) mapping of the point
     ep: int = 0                    # resolved EP degree (1 for dense models)
+    pp: int = 1                    # pipeline-parallel degree (layer stages)
 
     @property
     def throughput_per_xpu(self):  # filled by caller via cluster.n_xpus
@@ -104,8 +105,12 @@ class PrefillOperatingPoint:
     chunk: int = 0             # chunked: chunk size; disagg: prompt tokens/pass
     n_prefill_xpus: int = 0    # disagg: prefill-pool device count
     n_decode_xpus: int = 0     # disagg: decode-pool device count
-    tp: int = 1                # the (tp, ep) mapping (disagg: ep is the
-    ep: int = 0                # decode pool's; each pool resolves its own)
+    tp: int = 1                # the (tp, pp, ep) mapping (disagg: the
+    ep: int = 0                # DECODE pool's; each pool resolves its own)
+    pp: int = 1
+    tp_prefill: int = 0        # disagg: the prefill pool's own mapping
+    pp_prefill: int = 0        # (0 outside disagg mode)
+    ep_prefill: int = 0
 
 
 # ---------------------------------------------------------------------------
@@ -122,10 +127,33 @@ def _timers(cluster: Cluster, p: ServingPoint):
     def t_comm(op: Op) -> float:
         if op.kind == "a2a":
             return cluster.a2a_time(op.m_bytes, group=op.group or None,
-                                    tp=p.tp)
-        return cluster.ar_time(op.m_bytes, group=op.group or None, tp=p.tp)
+                                    tp=p.tp, pp=p.pp)
+        if op.kind == "pp_sendrecv":
+            return cluster.pp_hop_time(op.m_bytes, pp=p.pp, tp=p.tp)
+        return cluster.ar_time(op.m_bytes, group=op.group or None, tp=p.tp,
+                               pp=p.pp)
 
     return t_comp, t_comm
+
+
+def _scaled_timers(cfg: ModelConfig, cluster: Cluster, p: ServingPoint):
+    """`_timers` with the pipeline bottleneck factor applied: per-layer
+    ops (`workload.is_per_layer_op`) repeat `workload.stage_imbalance`
+    times per steady-state round on the largest stage; the lm head and pp
+    hops ride the round once. Identity at pp=1 — the timers are returned
+    unwrapped, keeping the seed path byte-identical."""
+    t_comp, t_comm = _timers(cluster, p)
+    if p.pp <= 1:
+        return t_comp, t_comm
+    imb = workload.stage_imbalance(cfg.num_layers, p.pp)
+
+    def scaled(f):
+        def g(op: Op) -> float:
+            return f(op) * (imb if workload.is_per_layer_op(op.name)
+                            else 1.0)
+        return g
+
+    return scaled(t_comp), scaled(t_comm)
 
 
 def iteration_time(cfg: ModelConfig, p: ServingPoint, cluster: Cluster,
@@ -137,14 +165,14 @@ def iteration_time(cfg: ModelConfig, p: ServingPoint, cluster: Cluster,
     """
     if not dbo:
         ops = workload.decode_iteration(cfg, p)
-        t_comp, t_comm = _timers(cluster, p)
+        t_comp, t_comm = _scaled_timers(cfg, cluster, p)
         tc = sum(t_comp(o) for o in ops if o.kind == "compute")
         tm = sum(t_comm(o) for o in ops if o.kind != "compute")
         return tc + tm, tm, tc, tm
 
     half = replace(p, batch_global=max(p.batch_global // 2, 1))
     ops_half = workload.decode_iteration(cfg, half)
-    t_comp, t_comm = _timers(cluster, half)
+    t_comp, t_comm = _scaled_timers(cfg, cluster, half)
     makespan, exposed = overlap.dbo_tpot(ops_half, t_comp, t_comm)
     tc = 2 * sum(t_comp(o) for o in ops_half if o.kind == "compute")
     tm = 2 * sum(t_comm(o) for o in ops_half if o.kind != "compute")
@@ -159,7 +187,7 @@ def prefill_iteration_time(cfg: ModelConfig, p: ServingPoint,
     cutoff sees rows = batch_per_device * chunk, mirroring the decode
     timers at q_len = chunk."""
     ops = workload.prefill_iteration(cfg, p, chunk)
-    t_comp, t_comm = _timers(cluster, replace(p, q_len=chunk))
+    t_comp, t_comm = _scaled_timers(cfg, cluster, replace(p, q_len=chunk))
     tc = sum(t_comp(o) for o in ops if o.kind == "compute")
     tm = sum(t_comm(o) for o in ops if o.kind != "compute")
     return tc + tm, tc, tm
@@ -189,8 +217,8 @@ def chunked_prefill_tpot(cfg: ModelConfig, p: ServingPoint, cluster: Cluster,
     """
     t_dec = iteration_time(cfg, p, cluster, dbo=False)[0]
     sizes, offsets = workload.chunk_schedule(scenario.prompt_len, chunk)
-    pp = replace(p, batch_global=max(p.n // p.tp, 1))   # one chunk / domain
-    t_pre = [prefill_iteration_time(cfg, replace(pp, context=off), cluster,
+    p_ch = replace(p, batch_global=max(p.n // p.tp, 1))  # one chunk / domain
+    t_pre = [prefill_iteration_time(cfg, replace(p_ch, context=off), cluster,
                                     s)[0]
              for s, off in zip(sizes, offsets)]
     m = len(t_pre)
@@ -255,7 +283,8 @@ def _batch_grid(b_max: int, ep: int) -> List[int]:
 
 def max_throughput(cluster: Cluster, cfg: ModelConfig, scenario: Scenario,
                    *, dbo: bool = False, sd: Optional[SpecDecConfig] = None,
-                   tp: Union[int, str] = 1, ep: Optional[int] = None,
+                   tp: Union[int, str] = 1, pp: Union[int, str] = 1,
+                   ep: Optional[int] = None,
                    dtype: str = "fp8") -> Optional[OperatingPoint]:
     """Best operating point under the TPOT SLO, or None if the SLO is
     unreachable at every feasible batch size.
@@ -267,21 +296,22 @@ def max_throughput(cluster: Cluster, cfg: ModelConfig, scenario: Scenario,
     `sweep.sweep_max_throughput` directly to amortize one grid evaluation
     across a whole figure.
 
-    tp="auto" searches the joint (tp, ep = n/tp) hybrid-parallelism axis
-    (`sweep.parallelism_candidates`) and returns the best mapping's point
-    (ties prefer the smaller tp, so the fixed mapping wins exact draws);
-    the chosen mapping is recorded on `OperatingPoint.tp` / `.ep`.
+    tp="auto" / pp="auto" search the joint (tp, pp, ep = n/(tp*pp))
+    hybrid-parallelism axes (`sweep.parallelism_candidates`) and return the
+    best mapping's point (ties prefer the smaller tp, then the smaller pp,
+    so the fixed mapping wins exact draws); the chosen mapping is recorded
+    on `OperatingPoint.tp` / `.pp` / `.ep`.
     """
     from repro.core import sweep
     return sweep.sweep_max_throughput([cluster], cfg, [scenario], dbo=dbo,
-                                      sd=sd, tp=tp, ep=ep,
+                                      sd=sd, tp=tp, pp=pp, ep=ep,
                                       dtype=dtype)[0][0]
 
 
 def max_throughput_scalar(cluster: Cluster, cfg: ModelConfig,
                           scenario: Scenario, *, dbo: bool = False,
                           sd: Optional[SpecDecConfig] = None, tp: int = 1,
-                          ep: Optional[int] = None,
+                          pp: int = 1, ep: Optional[int] = None,
                           dtype: str = "fp8") -> Optional[OperatingPoint]:
     """Reference scalar sweep (the seed implementation, one `tpot_at` call
     per grid point). Kept as the ground truth the batched engine is tested
@@ -289,13 +319,13 @@ def max_throughput_scalar(cluster: Cluster, cfg: ModelConfig,
     SLO boundary."""
     n = cluster.n_xpus
     if cfg.moe is not None:
-        ep = ep or max(n // tp, 1)
+        ep = ep or max(n // (tp * pp), 1)
     else:
         ep = 1
     tpot_budget = scenario.tpot_ms * 1e-3
 
     p0 = ServingPoint(batch_global=1, context=scenario.context, tp=tp, ep=ep,
-                      n_devices=n, dtype=dtype)
+                      n_devices=n, dtype=dtype, pp=pp)
     # reject scenarios where ONE request's prompt + decode context cannot
     # be held at all (degenerate empty grids otherwise); batch sizing
     # keeps the seed convention of KV at the average context
@@ -315,7 +345,7 @@ def max_throughput_scalar(cluster: Cluster, cfg: ModelConfig,
             best = OperatingPoint(batch=b, tpot=tpot, throughput=thr,
                                   used_dbo=dbo, used_sd=sd is not None,
                                   exposed_comm=ect, t_compute=tc, t_comm=tm,
-                                  tp=tp, ep=ep)
+                                  tp=tp, ep=ep, pp=pp)
     return best
 
 
@@ -326,7 +356,8 @@ def best_of_opts(cluster: Cluster, cfg: ModelConfig, scenario: Scenario,
 
     Runs on the batched sweep engine; `sweep.best_of_opts_grid` is the
     many-clusters/many-scenarios entry point the benchmarks use. Accepts
-    tp="auto" to co-optimize the (tp, ep) mapping per cluster."""
+    tp="auto" / pp="auto" to co-optimize the (tp, pp, ep) mapping per
+    cluster."""
     from repro.core import sweep
     return sweep.best_of_opts_grid([cluster], cfg, [scenario], opts,
                                    **kw)[0][0]
@@ -339,9 +370,10 @@ def max_throughput_prefill(cluster: Cluster, cfg: ModelConfig,
 
     mode: 'decode' (seed behavior, prefill unmodeled) | 'chunked' (prefill
     chunks interleaved into decode iterations) | 'disagg' (cluster split
-    into prefill/decode pools, split ratio swept). Runs on the batched
-    prefill sweep; see `sweep.sweep_prefill` for the grid entry point.
-    All three modes accept tp="auto" to search the (tp, ep) mapping."""
+    into prefill/decode pools, split ratio swept — each pool resolves its
+    OWN (tp, pp, ep) mapping under "auto"). Runs on the batched prefill
+    sweep; see `sweep.sweep_prefill` for the grid entry point. All three
+    modes accept tp="auto" / pp="auto" to search the mapping axes."""
     from repro.core import sweep
     return sweep.sweep_prefill([cluster], cfg, [scenario], mode=mode,
                                **kw)[0][0]

@@ -22,14 +22,17 @@ module evaluates the whole grid with NumPy broadcasts over a precomputed
 is then re-evaluated through the exact scalar path so the returned
 `OperatingPoint` is byte-identical to the seed implementation.
 
-Hybrid parallelism (tp="auto"): the search grows a joint (tp, ep = n/tp)
-mapping axis. `parallelism_candidates` enumerates the valid mappings
-(head/expert divisibility + weight-shard feasibility), each candidate runs
-the same batched engine against its own op table with the collectives
-PLACED by the topology (`Cluster.comm_spec`: AR(tp) over the scale-up /
-mesh neighborhood, expert A2A over the quotient), and each (cluster,
-scenario) cell keeps the highest-throughput mapping — ties to the smallest
-tp, so fixed-mapping (tp=1) results are byte-identical to the seed.
+Hybrid parallelism (tp="auto" / pp="auto"): the search grows a joint
+(tp, pp, ep = n/(tp*pp)) mapping axis. `parallelism_candidates` enumerates
+the valid mappings (head/expert divisibility, device- and layer-count
+constraints on (tp, pp), weight-shard feasibility with the per-stage shard
+divided by tp*pp), each candidate runs the same batched engine against its
+own op table with the collectives PLACED by the topology
+(`Cluster.comm_spec`: AR(tp) over the scale-up / mesh neighborhood, expert
+A2A over the stage's quotient, pp hops on the stage-boundary link), and
+each (cluster, scenario) cell keeps the highest-throughput mapping — ties
+to the smallest (tp, pp) lexicographically, so fixed-mapping (tp=1, pp=1)
+results are byte-identical to the seed.
 """
 from __future__ import annotations
 
@@ -52,19 +55,22 @@ from repro.core.workload import ServingPoint
 # per-cluster alpha-beta lowering
 # ---------------------------------------------------------------------------
 
+_KIND_NAMES = {optable.KIND_A2A: "a2a", optable.KIND_AR: "ar",
+               optable.KIND_PP: "pp_sendrecv"}
+
+
 def _comm_menu_coeffs(cluster: Cluster, kind: int, group: int,
-                      tp: int = 1) -> List[Tuple[float, float]]:
+                      tp: int = 1, pp: int = 1) -> List[Tuple[float, float]]:
     """Lower one collective menu to (A, B) pairs: t(m) = min_alg(A + B*m).
 
     A carries the alpha terms exactly as `AlphaBeta.time` associates them;
     B*m keeps the scalar's (m_coeff * m) * beta association elementwise, so
     the batched time equals the scalar time to the rounding of the shared
     subexpressions. The menu, bandwidth, and alpha set come from the
-    cluster's `comm_spec` placement under the (tp, ep) mapping — identical
-    to the seed whole-cluster lowering at tp=1.
+    cluster's `comm_spec` placement under the (tp, pp, ep) mapping —
+    identical to the seed whole-cluster lowering at tp=1, pp=1.
     """
-    menu, bw, ab = cluster.comm_spec(
-        "a2a" if kind == optable.KIND_A2A else "ar", group, tp)
+    menu, bw, ab = cluster.comm_spec(_KIND_NAMES[kind], group, tp, pp)
     beta = 1.0 / (ab.link_utilization * bw)
     return [(ab.alpha0 + c.rounds * ab.alpha_r + c.dests * ab.alpha_d,
              c.m_coeff, beta) for c in menu.values()]
@@ -74,12 +80,13 @@ def _comm_times(table: OpTable, cluster: Cluster,
                 m: np.ndarray) -> np.ndarray:
     """Comm time per op, shape of `m` (n_ops, ...); 0 for compute ops."""
     out = np.zeros_like(m)
-    for kind in (optable.KIND_A2A, optable.KIND_AR):
+    for kind in (optable.KIND_A2A, optable.KIND_AR, optable.KIND_PP):
         for group in np.unique(table.group[table.kind == kind]):
             sel = (table.kind == kind) & (table.group == group)
             if not sel.any():
                 continue
-            algs = _comm_menu_coeffs(cluster, kind, int(group), table.tp)
+            algs = _comm_menu_coeffs(cluster, kind, int(group), table.tp,
+                                     table.pp)
             best = None
             for a, m_coeff, beta in algs:
                 t = a + (m_coeff * m[sel]) * beta
@@ -154,7 +161,11 @@ class GridEval:
             comm[:, ci] = _comm_times(t, cl, m)[:, None, :]
         comm = np.where(is_comp, 0.0, comm)
 
-        self._dur[key] = (comp, comm)
+        # pipeline bottleneck: the largest stage's layer ops repeat
+        # stage_imbalance times per round (all-ones at pp=1 and pp | L, so
+        # the multiply is an exact identity on the seed path)
+        scale = t.stage_scale[:, None, None, None]
+        self._dur[key] = (comp * scale, comm * scale)
         return self._dur[key]
 
     # ------------- no-overlap iteration -------------
@@ -253,17 +264,28 @@ def batched_iteration_components(op_table: OpTable,
 # ---------------------------------------------------------------------------
 
 def parallelism_candidates(cfg: ModelConfig, cluster: Cluster, *,
-                           dtype: str = "fp8"
-                           ) -> List[Tuple[int, int]]:
-    """All valid (tp, ep) hybrid mappings of `cfg` on `cluster`, tp
-    ascending (so exact throughput ties resolve to the fixed mapping).
+                           dtype: str = "fp8",
+                           pp: Union[int, str] = 1,
+                           strict_experts: bool = True
+                           ) -> List[Tuple[int, int, int]]:
+    """All valid (tp, pp, ep) hybrid mappings of `cfg` on `cluster`,
+    (tp, pp) lexicographically ascending (so exact throughput ties resolve
+    to the fixed mapping, then to the shallower pipeline).
 
     A tp is valid when it divides the device count AND the attention heads
     shard evenly (num_kv_heads for GQA, num_heads for MLA; head-free
-    mixers only need the device-count divisibility); ep = n/tp must divide
-    the expert count (MoE) and the resulting weight shard must leave room
-    on the device (per-scenario KV feasibility is checked by the batch
-    grids, exactly as for the fixed mapping)."""
+    mixers only need the device-count divisibility). pp (all valid stage
+    counts when pp="auto", the requested degree otherwise) is capped by
+    the layer count — every stage owns at least one layer — and tp*pp must
+    divide the device count. ep = n/(tp*pp) must divide the expert count
+    (MoE) and the resulting per-stage weight shard (dense / (tp*pp),
+    experts / (ep*tp*pp), largest stage of the balanced partition — see
+    `workload.model_shard_bytes`) must leave room on the device
+    (per-scenario KV feasibility is checked by the batch grids, exactly as
+    for the fixed mapping). strict_experts=False drops the expert-count
+    divisibility requirement (experts pad to the EP group, `workload` uses
+    max(E//ep, 1)) — the convention the disaggregated prefill pools
+    inherited from the fixed-mapping search."""
     n = cluster.n_xpus
     if cfg.attn_kind == "mla":
         heads = cfg.num_heads
@@ -271,31 +293,37 @@ def parallelism_candidates(cfg: ModelConfig, cluster: Cluster, *,
         heads = cfg.num_kv_heads
     else:
         heads = 0
-    out: List[Tuple[int, int]] = []
+    pp_opts = (range(1, min(n, cfg.num_layers) + 1) if pp == "auto"
+               else (int(pp),))
+    out: List[Tuple[int, int, int]] = []
     for tp in range(1, n + 1):
         if n % tp:
             continue
         if heads and (tp > heads or heads % tp):
             continue
-        if cfg.moe is not None:
-            ep = n // tp
-            if cfg.moe.num_experts % ep:
+        for q in pp_opts:
+            if q < 1 or q > cfg.num_layers or n % (tp * q):
                 continue
-        else:
-            ep = 1
-        shard = workload.model_shard_bytes(cfg, tp, ep, dtype)
-        if shard >= cluster.xpu.hbm_cap * (1 - workload.KV_RESERVE_FRAC):
-            continue
-        out.append((tp, ep))
+            if cfg.moe is not None:
+                ep = n // (tp * q)
+                if strict_experts and cfg.moe.num_experts % ep:
+                    continue
+            else:
+                ep = 1
+            shard = workload.model_shard_bytes(cfg, tp, ep, dtype, q)
+            if shard >= cluster.xpu.hbm_cap * (1 - workload.KV_RESERVE_FRAC):
+                continue
+            out.append((tp, q, ep))
     return out
 
 
-def _resolve_parallelism(cfg: ModelConfig, n: int, tp: int,
+def _resolve_parallelism(cfg: ModelConfig, n: int, tp: int, pp: int,
                          ep: Optional[int]) -> int:
-    """Resolved EP degree of one FIXED mapping: ep defaults to n/tp for
-    MoE models (the hybrid family; n at the paper's tp=1), 1 for dense."""
+    """Resolved EP degree of one FIXED mapping: ep defaults to n/(tp*pp)
+    for MoE models (the hybrid family; n at the paper's tp=1, pp=1), 1 for
+    dense."""
     if cfg.moe is not None:
-        return ep or max(n // tp, 1)
+        return ep or max(n // (tp * pp), 1)
     return 1
 
 
@@ -320,22 +348,28 @@ def _merge_best(grids: Sequence[List[List]]) -> List[List]:
 
 
 def _auto_candidates(clusters: Sequence[Cluster], cfg: ModelConfig,
-                     dtype: str) -> List[Tuple[int, int]]:
+                     dtype: str, tp: Union[int, str] = "auto",
+                     pp: Union[int, str] = 1
+                     ) -> List[Tuple[int, int, int]]:
     """Union of each cluster's valid mappings (clusters share a device
     count but may differ in XPU, so a mapping one cluster's HBM prunes can
     still be another's best — the per-cluster batch grids reject it where
-    the shard genuinely does not fit)."""
+    the shard genuinely does not fit). A fixed value on either axis
+    restricts the enumeration to it."""
     cands = sorted({c for cl in clusters
-                    for c in parallelism_candidates(cfg, cl, dtype=dtype)})
+                    for c in parallelism_candidates(cfg, cl, dtype=dtype,
+                                                    pp=pp)})
+    if tp != "auto":
+        cands = [c for c in cands if c[0] == tp]
     if not cands:
         raise ValueError(
-            f"no feasible (tp, ep) mapping for {cfg.name!r} on "
-            f"{clusters[0].n_xpus} XPUs — model shard exceeds HBM at "
-            "every tensor-parallel degree")
+            f"no feasible (tp, pp, ep) mapping for {cfg.name!r} on "
+            f"{clusters[0].n_xpus} XPUs under (tp={tp!r}, pp={pp!r}) — "
+            "model shard exceeds HBM at every searched degree")
     return cands
 
 
-def _prepare_grid(clusters, cfg, scenarios, tp, ep_r, dtype):
+def _prepare_grid(clusters, cfg, scenarios, tp, pp, ep_r, dtype):
     """Per-(cluster, scenario) seed batch grids + their sorted union."""
     from repro.core.optimizer import _batch_grid
     n = clusters[0].n_xpus
@@ -349,9 +383,9 @@ def _prepare_grid(clusters, cfg, scenarios, tp, ep_r, dtype):
             # average context
             mem_ctx = getattr(sc, "mem_context", sc.context)
             p0 = ServingPoint(batch_global=1, context=sc.context, tp=tp,
-                              ep=ep_r, n_devices=n, dtype=dtype)
+                              ep=ep_r, n_devices=n, dtype=dtype, pp=pp)
             p_mem = ServingPoint(batch_global=1, context=mem_ctx, tp=tp,
-                                 ep=ep_r, n_devices=n, dtype=dtype)
+                                 ep=ep_r, n_devices=n, dtype=dtype, pp=pp)
             if not workload.single_request_fits(cfg, p_mem, cl.xpu.hbm_cap):
                 grids[ci, si] = []
                 continue
@@ -362,8 +396,8 @@ def _prepare_grid(clusters, cfg, scenarios, tp, ep_r, dtype):
     return grids, batches
 
 
-def _select_and_finalize(ev: GridEval, grids, cfg, *, dbo, sd, tp, ep_r,
-                         dtype):
+def _select_and_finalize(ev: GridEval, grids, cfg, *, dbo, sd, tp, pp,
+                         ep_r, dtype):
     """Feasibility + argmax on the batched TPOTs, then re-evaluate the
     winner through the exact scalar path (byte-identical OperatingPoint)."""
     from repro.core import optimizer
@@ -392,40 +426,42 @@ def _select_and_finalize(ev: GridEval, grids, cfg, *, dbo, sd, tp, ep_r,
                     best_b, best_thr = b, thr
             if knife_edge:
                 row.append(optimizer.max_throughput_scalar(
-                    cl, cfg, ev.scenarios[si], dbo=dbo, sd=sd, tp=tp,
+                    cl, cfg, ev.scenarios[si], dbo=dbo, sd=sd, tp=tp, pp=pp,
                     ep=ep_r, dtype=dtype))
                 continue
             if best_b is None:
                 row.append(None)
                 continue
             p = ServingPoint(batch_global=best_b, context=sc.context, tp=tp,
-                             ep=ep_r, n_devices=n, dtype=dtype)
+                             ep=ep_r, n_devices=n, dtype=dtype, pp=pp)
             tpot_s, ect, tc, tm = optimizer.tpot_at(cfg, p, cl, dbo=dbo,
                                                     sd=sd)
             if tpot_s > budget:
                 # the batched value sat exactly on the SLO boundary and the
                 # scalar rounding disagrees — defer to the exact search
                 row.append(optimizer.max_throughput_scalar(
-                    cl, cfg, sc, dbo=dbo, sd=sd, tp=tp, ep=ep_r,
+                    cl, cfg, sc, dbo=dbo, sd=sd, tp=tp, pp=pp, ep=ep_r,
                     dtype=dtype))
                 continue
             row.append(optimizer.OperatingPoint(
                 batch=best_b, tpot=tpot_s, throughput=best_b / tpot_s,
                 used_dbo=dbo, used_sd=sd is not None, exposed_comm=ect,
-                t_compute=tc, t_comm=tm, tp=tp, ep=ep_r))
+                t_compute=tc, t_comm=tm, tp=tp, ep=ep_r, pp=pp))
         out.append(row)
     return out
 
 
-def _sweep_fixed(clusters, cfg, scenarios, *, dbo, sd, tp, ep_r, dtype):
+def _sweep_fixed(clusters, cfg, scenarios, *, dbo, sd, tp, pp, ep_r,
+                 dtype):
     """One FIXED-mapping batched search (the pre-hybrid sweep body)."""
     n = clusters[0].n_xpus
-    grids, batches = _prepare_grid(clusters, cfg, scenarios, tp, ep_r, dtype)
+    grids, batches = _prepare_grid(clusters, cfg, scenarios, tp, pp, ep_r,
+                                   dtype)
     if batches.size == 0:
         return [[None] * len(scenarios) for _ in clusters]
-    table = optable.op_table(cfg, tp, ep_r, n, dtype)
+    table = optable.op_table(cfg, tp, ep_r, n, dtype, pp=pp)
     ev = GridEval(table, clusters, scenarios, batches)
-    return _select_and_finalize(ev, grids, cfg, dbo=dbo, sd=sd, tp=tp,
+    return _select_and_finalize(ev, grids, cfg, dbo=dbo, sd=sd, tp=tp, pp=pp,
                                 ep_r=ep_r, dtype=dtype)
 
 
@@ -433,6 +469,7 @@ def sweep_max_throughput(clusters: Sequence[Cluster], cfg: ModelConfig,
                          scenarios: Sequence, *, dbo: bool = False,
                          sd: Optional[SpecDecConfig] = None,
                          tp: Union[int, str] = 1,
+                         pp: Union[int, str] = 1,
                          ep: Optional[int] = None, dtype: str = "fp8"
                          ) -> List[List[Optional["OperatingPoint"]]]:
     """Batched optimizer.max_throughput over clusters x scenarios.
@@ -441,28 +478,29 @@ def sweep_max_throughput(clusters: Sequence[Cluster], cfg: ModelConfig,
     bandwidth, and alpha sets). Returns [cluster][scenario] OperatingPoints
     (None where the SLO is unreachable), byte-identical to the scalar path.
 
-    tp="auto" sweeps the joint (tp, ep = n/tp) axis: every mapping from
+    tp="auto" / pp="auto" sweep the joint (tp, pp, ep = n/(tp*pp)) axes
+    (either one alone holds the other fixed): every mapping from
     `parallelism_candidates` runs the same batched search (its own op
     table, batch grids, and topology-placed collectives) and each
     (cluster, scenario) cell keeps the highest-throughput mapping, ties to
-    the smallest tp. The chosen mapping is recorded on the point's
-    `tp` / `ep` fields.
+    the smallest (tp, pp). The chosen mapping is recorded on the point's
+    `tp` / `pp` / `ep` fields.
     """
     n = clusters[0].n_xpus
     if any(cl.n_xpus != n for cl in clusters):
         raise ValueError("sweep_max_throughput requires a uniform device "
                          "count; group clusters by n_xpus")
-    if tp == "auto":
+    if tp == "auto" or pp == "auto":
         if ep is not None:
-            raise ValueError("tp='auto' resolves ep = n/tp per candidate; "
-                             "pass ep=None")
+            raise ValueError("auto mapping search resolves ep = n/(tp*pp) "
+                             "per candidate; pass ep=None")
         return _merge_best([
             _sweep_fixed(clusters, cfg, scenarios, dbo=dbo, sd=sd, tp=t,
-                         ep_r=e, dtype=dtype)
-            for t, e in _auto_candidates(clusters, cfg, dtype)])
-    ep_r = _resolve_parallelism(cfg, n, tp, ep)
+                         pp=q, ep_r=e, dtype=dtype)
+            for t, q, e in _auto_candidates(clusters, cfg, dtype, tp, pp)])
+    ep_r = _resolve_parallelism(cfg, n, tp, pp, ep)
     return _sweep_fixed(clusters, cfg, scenarios, dbo=dbo, sd=sd, tp=tp,
-                        ep_r=ep_r, dtype=dtype)
+                        pp=pp, ep_r=ep_r, dtype=dtype)
 
 
 def _variants_for(opts: str) -> List[Tuple[bool, Optional[SpecDecConfig]]]:
@@ -481,7 +519,8 @@ def best_of_opts_multi(clusters: Sequence[Cluster], cfg: ModelConfig,
                        scenarios: Sequence,
                        opts_levels: Sequence[str] = ("noopt", "dbo",
                                                      "dbo+sd"), *,
-                       tp: Union[int, str] = 1, ep: Optional[int] = None,
+                       tp: Union[int, str] = 1, pp: Union[int, str] = 1,
+                       ep: Optional[int] = None,
                        dtype: str = "fp8"
                        ) -> Dict[str, List[List[Optional["OperatingPoint"]]]]:
     """Batched optimizer.best_of_opts for SEVERAL opts levels at once.
@@ -489,28 +528,30 @@ def best_of_opts_multi(clusters: Sequence[Cluster], cfg: ModelConfig,
     One GridEval and one result per (dbo, sd) variant are shared across the
     levels ('dbo+sd' already evaluates everything 'noopt' and 'dbo' need),
     so e.g. fig11's three curves cost one engine pass, not three.
-    tp="auto" additionally sweeps the (tp, ep = n/tp) mapping axis per
-    level (one engine pass per candidate mapping).
+    tp="auto" / pp="auto" additionally sweep the (tp, pp, ep = n/(tp*pp))
+    mapping axes per level (one engine pass per candidate mapping).
     """
     n = clusters[0].n_xpus
     if any(cl.n_xpus != n for cl in clusters):
         raise ValueError("best_of_opts_multi requires a uniform device "
                          "count")
-    if tp == "auto":
+    if tp == "auto" or pp == "auto":
         if ep is not None:
-            raise ValueError("tp='auto' resolves ep = n/tp per candidate; "
-                             "pass ep=None")
+            raise ValueError("auto mapping search resolves ep = n/(tp*pp) "
+                             "per candidate; pass ep=None")
         per_cand = [best_of_opts_multi(clusters, cfg, scenarios, opts_levels,
-                                       tp=t, ep=e, dtype=dtype)
-                    for t, e in _auto_candidates(clusters, cfg, dtype)]
+                                       tp=t, pp=q, ep=e, dtype=dtype)
+                    for t, q, e in _auto_candidates(clusters, cfg, dtype,
+                                                    tp, pp)]
         return {opts: _merge_best([pc[opts] for pc in per_cand])
                 for opts in opts_levels}
-    ep_r = _resolve_parallelism(cfg, n, tp, ep)
-    grids, batches = _prepare_grid(clusters, cfg, scenarios, tp, ep_r, dtype)
+    ep_r = _resolve_parallelism(cfg, n, tp, pp, ep)
+    grids, batches = _prepare_grid(clusters, cfg, scenarios, tp, pp, ep_r,
+                                   dtype)
     if batches.size == 0:
         empty = [[None] * len(scenarios) for _ in clusters]
         return {opts: [list(row) for row in empty] for opts in opts_levels}
-    table = optable.op_table(cfg, tp, ep_r, n, dtype)
+    table = optable.op_table(cfg, tp, ep_r, n, dtype, pp=pp)
     ev = GridEval(table, clusters, scenarios, batches)
 
     by_variant: Dict[Tuple, List[List[Optional["OperatingPoint"]]]] = {}
@@ -521,7 +562,7 @@ def best_of_opts_multi(clusters: Sequence[Cluster], cfg: ModelConfig,
             key = (d, s)
             if key not in by_variant:
                 by_variant[key] = _select_and_finalize(
-                    ev, grids, cfg, dbo=d, sd=s, tp=tp, ep_r=ep_r,
+                    ev, grids, cfg, dbo=d, sd=s, tp=tp, pp=pp, ep_r=ep_r,
                     dtype=dtype)
             per_variant.append(by_variant[key])
         level = []
@@ -542,12 +583,13 @@ def best_of_opts_multi(clusters: Sequence[Cluster], cfg: ModelConfig,
 
 def best_of_opts_grid(clusters: Sequence[Cluster], cfg: ModelConfig,
                       scenarios: Sequence, opts: str = "dbo+sd", *,
-                      tp: Union[int, str] = 1, ep: Optional[int] = None,
+                      tp: Union[int, str] = 1, pp: Union[int, str] = 1,
+                      ep: Optional[int] = None,
                       dtype: str = "fp8"
                       ) -> List[List[Optional["OperatingPoint"]]]:
     """Batched optimizer.best_of_opts over clusters x scenarios."""
     return best_of_opts_multi(clusters, cfg, scenarios, [opts], tp=tp,
-                              ep=ep, dtype=dtype)[opts]
+                              pp=pp, ep=ep, dtype=dtype)[opts]
 
 
 # ---------------------------------------------------------------------------
@@ -580,8 +622,9 @@ def _prefill_chunk_times(ptable: "optable.PrefillOpTable", cluster: Cluster,
     t_m = byts / (cluster.xpu.hbm_bw * EFF_MEMORY)
     comp = np.maximum(t_c, t_m) + T_LAUNCH
     is_comp = ptable.is_compute[:, None]
-    comp = np.where(is_comp, comp, 0.0)
-    comm = np.where(is_comp, 0.0, _comm_times(ptable, cluster, m))
+    scale = ptable.stage_scale[:, None]
+    comp = np.where(is_comp, comp, 0.0) * scale
+    comm = np.where(is_comp, 0.0, _comm_times(ptable, cluster, m)) * scale
     return comp.sum(axis=0) + comm.sum(axis=0)
 
 
@@ -610,6 +653,8 @@ def batched_chunked_tpot_ttft(op_table: OpTable,
     ev = GridEval(op_table, clusters, [scenario], batches)
     t_dec = ev.seq_components(1)[0][:, 0, :]               # (n_cl, n_b)
     sizes, offsets = workload.chunk_schedule(scenario.prompt_len, chunk)
+    # chunk-carrying DP lanes across all pipeline stages: n/(tp*pp) per
+    # stage times pp microbatches in flight = n/tp, pp-invariant
     domains = max(op_table.n // op_table.tp, 1)
     s_pre = np.stack([_prefill_chunk_times(ptable, cl, domains, sizes,
                                            offsets).sum()
@@ -626,14 +671,15 @@ def _as_decode_point(op) -> Optional["optimizer.PrefillOperatingPoint"]:
         return None
     return optimizer.PrefillOperatingPoint(
         mode="decode", batch=op.batch, tpot=op.tpot, ttft=0.0,
-        throughput=op.throughput, tp=op.tp, ep=op.ep)
+        throughput=op.throughput, tp=op.tp, ep=op.ep, pp=op.pp)
 
 
 def _chunk_candidates(prompt_len: int, chunk_grid: Sequence[int]) -> List[int]:
     return sorted({min(int(c), prompt_len) for c in chunk_grid if c >= 1})
 
 
-def _sweep_chunked(clusters, cfg, scenarios, tp, ep_r, dtype, chunk_grid):
+def _sweep_chunked(clusters, cfg, scenarios, tp, pp, ep_r, dtype,
+                   chunk_grid):
     """Joint (batch, chunk) search of the chunked-prefill mode.
 
     For each (cluster, scenario): TPOT/TTFT over the batch grid x chunk
@@ -648,9 +694,10 @@ def _sweep_chunked(clusters, cfg, scenarios, tp, ep_r, dtype, chunk_grid):
     from repro.core import optimizer
 
     n = clusters[0].n_xpus
-    table = optable.op_table(cfg, tp, ep_r, n, dtype)
-    ptable = optable.prefill_op_table(cfg, tp, ep_r, n, dtype)
-    grids, batches = _prepare_grid(clusters, cfg, scenarios, tp, ep_r, dtype)
+    table = optable.op_table(cfg, tp, ep_r, n, dtype, pp=pp)
+    ptable = optable.prefill_op_table(cfg, tp, ep_r, n, dtype, pp=pp)
+    grids, batches = _prepare_grid(clusters, cfg, scenarios, tp, pp, ep_r,
+                                   dtype)
     if batches.size == 0:
         return [[None] * len(scenarios) for _ in clusters]
     ev = GridEval(table, clusters, scenarios, batches)
@@ -685,12 +732,12 @@ def _sweep_chunked(clusters, cfg, scenarios, tp, ep_r, dtype, chunk_grid):
                 continue
             _, b, c, b_eff = best
             p = ServingPoint(batch_global=b, context=sc.context, tp=tp,
-                             ep=ep_r, n_devices=n, dtype=dtype)
+                             ep=ep_r, n_devices=n, dtype=dtype, pp=pp)
             tpot_s, ttft_s = optimizer.chunked_prefill_tpot(cfg, p, cl, sc,
                                                             c)
             row.append(optimizer.PrefillOperatingPoint(
                 mode="chunked", batch=b, tpot=tpot_s, ttft=ttft_s,
-                throughput=b_eff / tpot_s, chunk=c, tp=tp, ep=ep_r))
+                throughput=b_eff / tpot_s, chunk=c, tp=tp, ep=ep_r, pp=pp))
         out.append(row)
     return out
 
@@ -732,14 +779,37 @@ def _split_candidates(n: int, tp: int, fracs: Sequence[float]) -> List[int]:
     return sorted(cands)
 
 
-def _sweep_disagg(clusters, cfg, scenarios, tp, dtype, split_fracs):
-    """Disaggregated-prefill search: sweep the prefill/decode split ratio.
+def _disagg_pool_candidates(clusters, cfg, n_pool, tp, pp, dtype):
+    """(tp, pp, ep) mappings for an n_pool-device pool: enumerated (and
+    HBM-pruned) over the pool's sub-clusters when an axis is "auto"; the
+    single requested mapping otherwise — unpruned, matching the seed,
+    whose per-scenario prompt-KV guard does the rejecting."""
+    if tp == "auto" or pp == "auto":
+        pools = [_subcluster(cl, n_pool) for cl in clusters]
+        cands = sorted({c for cl in pools
+                        for c in parallelism_candidates(
+                            cfg, cl, dtype=dtype, pp=pp,
+                            strict_experts=False)})
+        return [c for c in cands if tp == "auto" or c[0] == tp]
+    if n_pool % (tp * pp):
+        return []
+    ep = max(n_pool // (tp * pp), 1) if cfg.moe is not None else 1
+    return [(tp, pp, ep)]
+
+
+def _sweep_disagg(clusters, cfg, scenarios, tp, pp, dtype, split_fracs):
+    """Disaggregated-prefill search: sweep the prefill/decode split ratio,
+    each pool resolving its OWN (tp, pp, ep) mapping.
 
     The decode pool runs the ordinary decode-only search on its sub-cluster
-    (EP spans the pool); the prefill pool runs whole-prompt prefill, one
-    prompt per DP domain per pass. TTFT = prefill pass + KV-cache handoff
-    to the decode pool (alpha-beta over one XPU's link, at the cluster's
-    link utilization); throughput is the balanced pipeline rate
+    (EP spans the pool; tp="auto"/pp="auto" search the mapping axes within
+    the pool); the prefill pool independently enumerates ITS candidate
+    mappings — the pools need not share one (the prefill pass is
+    latency-bound and wants large tp, decode is throughput-bound and wants
+    small tp). The prefill pool runs whole-prompt prefill, one prompt per
+    DP domain per pipeline slot. TTFT = prefill pass + KV-cache handoff to
+    the decode pool (alpha-beta over one XPU's link, at the cluster's link
+    utilization); throughput is the balanced pipeline rate
     min(decode tokens/s, prefill request rate * gen_len).
     """
     from repro.core import optimizer
@@ -747,54 +817,80 @@ def _sweep_disagg(clusters, cfg, scenarios, tp, dtype, split_fracs):
     n = clusters[0].n_xpus
     out: List[List[Optional[optimizer.PrefillOperatingPoint]]] = \
         [[None] * len(scenarios) for _ in clusters]
-    for n_p in _split_candidates(n, tp, split_fracs):
+    auto = tp == "auto" or pp == "auto"
+    align = 1 if auto else tp * pp
+    for n_p in _split_candidates(n, align, split_fracs):
         n_d = n - n_p
+        pre_cands = _disagg_pool_candidates(clusters, cfg, n_p, tp, pp,
+                                            dtype)
+        if not pre_cands:
+            continue            # dead split: skip the decode sweep too
         # clusters share n_xpus, so their decode pools share n_d: one
-        # vectorized decode search covers ALL clusters x scenarios per split
-        dec_grid = sweep_max_throughput([_subcluster(cl, n_d)
-                                         for cl in clusters], cfg,
-                                        scenarios, tp=tp, dtype=dtype)
-        ep_p = max(n_p // tp, 1) if cfg.moe is not None else 1
-        domains_p = max(n_p // tp, 1)
-        ptable = optable.prefill_op_table(cfg, tp, ep_p, n_p, dtype)
-        for ci, cl in enumerate(clusters):
-            cl_p = _subcluster(cl, n_p)
-            ab = cl._ab()
-            for si, sc in enumerate(scenarios):
-                dec = dec_grid[ci][si]
-                if dec is None:
-                    continue
-                L = sc.prompt_len
-                p_pre = ServingPoint(batch_global=domains_p, context=L,
-                                     tp=tp, ep=ep_p, n_devices=n_p,
-                                     dtype=dtype)
-                # each domain must hold one full prompt's KV beside its shard
-                if not workload.single_request_fits(cfg, p_pre,
-                                                    cl.xpu.hbm_cap):
-                    continue
-                t_p = float(_prefill_chunk_times(ptable, cl_p, domains_p,
-                                                 [L], [0])[0])
-                t_xfer = (ab.alpha0
-                          + workload.kv_cache_bytes_per_request(cfg, L)
-                          / (ab.link_utilization * cl.link_bw))
-                ttft = t_p + t_xfer
-                if sc.ttft_ms and ttft > sc.ttft_ms * 1e-3:
-                    continue
-                lam_p = domains_p / t_p                  # prompts / s
-                thr = min(dec.throughput, lam_p * sc.gen_len)
-                prev = out[ci][si]
-                if prev is None or thr > prev.throughput:
-                    out[ci][si] = optimizer.PrefillOperatingPoint(
-                        mode="disagg", batch=dec.batch, tpot=dec.tpot,
-                        ttft=ttft, throughput=thr, chunk=L,
-                        n_prefill_xpus=n_p, n_decode_xpus=n_d,
-                        tp=tp, ep=dec.ep)
+        # vectorized decode search covers ALL clusters x scenarios per split.
+        # Pool mappings use the seed's padded-expert convention (ep need
+        # not divide the expert count — pool sizes like 48 have no such
+        # divisor), so the decode pool enumerates its own candidates
+        # rather than going through the strict whole-cluster auto search.
+        dec_pools = [_subcluster(cl, n_d) for cl in clusters]
+        if auto:
+            dec_cands = _disagg_pool_candidates(clusters, cfg, n_d, tp, pp,
+                                                dtype)
+            if not dec_cands:
+                continue
+            dec_grid = _merge_best([
+                _sweep_fixed(dec_pools, cfg, scenarios, dbo=False, sd=None,
+                             tp=t, pp=q, ep_r=e, dtype=dtype)
+                for t, q, e in dec_cands])
+        else:
+            dec_grid = sweep_max_throughput(dec_pools, cfg, scenarios,
+                                            tp=tp, pp=pp, dtype=dtype)
+        for tp_p, pp_p, ep_p in pre_cands:
+            domains_p = max(n_p // tp_p, 1)   # prompts in flight (all stages)
+            ptable = optable.prefill_op_table(cfg, tp_p, ep_p, n_p, dtype,
+                                              pp=pp_p)
+            for ci, cl in enumerate(clusters):
+                cl_p = _subcluster(cl, n_p)
+                ab = cl._ab()
+                for si, sc in enumerate(scenarios):
+                    dec = dec_grid[ci][si]
+                    if dec is None:
+                        continue
+                    L = sc.prompt_len
+                    p_pre = ServingPoint(batch_global=domains_p, context=L,
+                                         tp=tp_p, ep=ep_p, n_devices=n_p,
+                                         dtype=dtype, pp=pp_p)
+                    # every domain must hold its in-flight prompts' KV
+                    # beside the shard (one prompt per domain per stage;
+                    # at pp=1 this is exactly the seed single-request fit)
+                    if workload.max_batch_by_memory(
+                            cfg, p_pre, cl.xpu.hbm_cap) < domains_p:
+                        continue
+                    t_p = float(_prefill_chunk_times(ptable, cl_p, domains_p,
+                                                     [L], [0])[0])
+                    t_xfer = (ab.alpha0
+                              + workload.kv_cache_bytes_per_request(cfg, L)
+                              / (ab.link_utilization * cl.link_bw))
+                    ttft = t_p + t_xfer
+                    if sc.ttft_ms and ttft > sc.ttft_ms * 1e-3:
+                        continue
+                    lam_p = domains_p / t_p              # prompts / s
+                    thr = min(dec.throughput, lam_p * sc.gen_len)
+                    prev = out[ci][si]
+                    if prev is None or thr > prev.throughput:
+                        out[ci][si] = optimizer.PrefillOperatingPoint(
+                            mode="disagg", batch=dec.batch, tpot=dec.tpot,
+                            ttft=ttft, throughput=thr, chunk=L,
+                            n_prefill_xpus=n_p, n_decode_xpus=n_d,
+                            tp=dec.tp, ep=dec.ep, pp=dec.pp,
+                            tp_prefill=tp_p, pp_prefill=pp_p,
+                            ep_prefill=ep_p)
     return out
 
 
 def sweep_prefill(clusters: Sequence[Cluster], cfg: ModelConfig,
                   scenarios: Sequence, mode: str = "chunked", *,
-                  tp: Union[int, str] = 1, ep: Optional[int] = None,
+                  tp: Union[int, str] = 1, pp: Union[int, str] = 1,
+                  ep: Optional[int] = None,
                   dtype: str = "fp8",
                   chunk_grid: Sequence[int] = CHUNK_GRID,
                   split_fracs: Sequence[float] = SPLIT_FRACS
@@ -809,19 +905,21 @@ def sweep_prefill(clusters: Sequence[Cluster], cfg: ModelConfig,
       'disagg'   cluster split into prefill/decode pools (split ratio
                  swept; throughput capped by the balanced pipeline rate).
 
-    All three modes accept tp="auto": the (tp, ep = n/tp) mapping axis is
-    searched per (cluster, scenario) cell alongside the mode's own grid
-    (batch x chunk for chunked, split ratio for disagg), ties to the
-    smallest tp. Prefill modes require `scenario.prompt_len >= 1`.
-    Clusters must share a device count, as in `sweep_max_throughput`.
+    All three modes accept tp="auto" / pp="auto": the (tp, pp, ep =
+    n/(tp*pp)) mapping axes are searched per (cluster, scenario) cell
+    alongside the mode's own grid (batch x chunk for chunked, split ratio
+    for disagg), ties to the smallest (tp, pp). Disagg searches the
+    mapping PER POOL — the prefill and decode pools need not agree.
+    Prefill modes require `scenario.prompt_len >= 1`. Clusters must share
+    a device count, as in `sweep_max_throughput`.
     """
     n = clusters[0].n_xpus
     if any(cl.n_xpus != n for cl in clusters):
         raise ValueError("sweep_prefill requires a uniform device count; "
                          "group clusters by n_xpus")
     if mode == "decode":
-        grid = sweep_max_throughput(clusters, cfg, scenarios, tp=tp, ep=ep,
-                                    dtype=dtype)
+        grid = sweep_max_throughput(clusters, cfg, scenarios, tp=tp, pp=pp,
+                                    ep=ep, dtype=dtype)
         return [[_as_decode_point(op) for op in row] for row in grid]
     if mode not in ("chunked", "disagg"):
         raise ValueError(f"unknown prefill mode {mode!r}; expected "
@@ -836,19 +934,20 @@ def sweep_prefill(clusters: Sequence[Cluster], cfg: ModelConfig,
                 f"scenario {sc.name!r}: context ({sc.context}) must exceed "
                 f"prompt_len ({sc.prompt_len}) — context is the AVERAGE "
                 "decode KV length, prompt_len + gen_len / 2")
-    if tp == "auto":
+    if mode == "disagg":
         if ep is not None:
-            raise ValueError("tp='auto' resolves ep = n/tp per candidate; "
-                             "pass ep=None")
+            raise ValueError("disagg mode resolves EP per pool; pass "
+                             "ep=None")
+        return _sweep_disagg(clusters, cfg, scenarios, tp, pp, dtype,
+                             split_fracs)
+    if tp == "auto" or pp == "auto":
+        if ep is not None:
+            raise ValueError("auto mapping search resolves ep = n/(tp*pp) "
+                             "per candidate; pass ep=None")
         return _merge_best([
-            sweep_prefill(clusters, cfg, scenarios, mode, tp=t,
-                          ep=e if mode == "chunked" else None, dtype=dtype,
-                          chunk_grid=chunk_grid, split_fracs=split_fracs)
-            for t, e in _auto_candidates(clusters, cfg, dtype)])
-    if mode == "chunked":
-        ep_r = _resolve_parallelism(cfg, n, tp, ep)
-        return _sweep_chunked(clusters, cfg, scenarios, tp, ep_r, dtype,
-                              chunk_grid)
-    if ep is not None:
-        raise ValueError("disagg mode resolves EP per pool; pass ep=None")
-    return _sweep_disagg(clusters, cfg, scenarios, tp, dtype, split_fracs)
+            _sweep_chunked(clusters, cfg, scenarios, t, q, e, dtype,
+                           chunk_grid)
+            for t, q, e in _auto_candidates(clusters, cfg, dtype, tp, pp)])
+    ep_r = _resolve_parallelism(cfg, n, tp, pp, ep)
+    return _sweep_chunked(clusters, cfg, scenarios, tp, pp, ep_r, dtype,
+                          chunk_grid)

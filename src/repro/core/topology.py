@@ -72,37 +72,69 @@ class Cluster:
     def _ab(self) -> AlphaBeta:
         return CLUSTER if self.n_xpus > 8 else INTRA_NODE
 
-    def comm_spec(self, kind: str, group: int = 0, tp: int = 1):
+    def comm_spec(self, kind: str, group: int = 0, tp: int = 1,
+                  pp: int = 1):
         """(algorithm menu, bandwidth, AlphaBeta) of one collective PLACED
-        under the hybrid (tp, ep) mapping — the topology-aware half of the
-        parallelism search.
+        under the hybrid (tp, pp, ep) mapping — the topology-aware half of
+        the parallelism search.
 
         kind 'ar' with group == tp is the TP all-reduce: it runs over the
         scale-up / mesh NEIGHBORHOOD (a tp-sized sub-mesh of torus /
         full-mesh dims, the intra-node island of a scale-out cluster), so
-        it sees only the link bandwidth that points into that neighborhood.
+        it sees only the link bandwidth that points into that neighborhood
+        — the placement is the same contiguous block on every pipeline
+        stage, so it is pp-independent.
         kind 'a2a' with group == ep < n is the expert dispatch/gather over
-        the REMAINDER: the quotient of the cluster by the TP neighborhood
-        (stride-tp peers on meshes, with torus hops dilated by the stride).
+        the REMAINDER of the STAGE: the quotient of the stage's n/pp-device
+        block by the TP neighborhood (stride-tp peers on meshes, with torus
+        hops dilated by the stride).
+        kind 'pp_sendrecv' is the per-token hidden-state hop between
+        corresponding devices of adjacent stages: a neighbor hop riding
+        ONE mesh link on torus / full-mesh, a NIC hop on multi-island
+        scale-out (scale-up switching only when the whole cluster fits
+        one island), a switch hop at full provision on scale-up.
 
-        tp <= 1, group in (0, n): the seed whole-cluster placement,
-        byte-identical to the pre-hybrid model.
+        tp <= 1, pp <= 1, group in (0, n): the seed whole-cluster
+        placement, byte-identical to the pre-hybrid model.
         """
         n_grp = group or self.n_xpus
         ab = self._ab()
+        if kind == "pp_sendrecv":
+            hop = {"sendrecv": coll.pp_sendrecv()}
+            if self.topology == "scale-up":
+                return hop, self.link_bw, ab
+            if self.topology == "scale-out":
+                if self.n_xpus <= NODE_XPUS:
+                    # whole cluster inside one NVLink island: every
+                    # boundary rides the scale-up switch
+                    return hop, self.xpu.scale_up_bw, INTRA_NODE
+                # multi-island cluster: island-crossing stage boundaries
+                # exist at every pp (stages >= island: all of them; stages
+                # < island: the island-edge ones), and one menu prices all
+                # pp-1 hops — charge the NIC, the conservative bound
+                return hop, self.link_bw, CLUSTER
+            # mesh: the hop crosses the single link that leaves the stage
+            # block, one of the 2*ndim (torus) / sum(d-1) (full-mesh)
+            # links the per-XPU aggregate provision is spread across
+            active = [d for d in (self.dims or (self.n_xpus,)) if d > 1]
+            n_links = (2 * len(active) if self.topology == "torus"
+                       else sum(d - 1 for d in active))
+            return hop, self.link_bw / max(n_links, 1), ab
         if kind == "a2a":
-            if tp <= 1 or n_grp >= self.n_xpus:
+            if tp * max(pp, 1) <= 1 or n_grp >= self.n_xpus:
                 return (coll.a2a_menu(self.topology, self.n_xpus, self.dims),
                         self.link_bw, ab)
             if self.topology in ("scale-up", "scale-out"):
                 # any ep subset of the switched fabric at full provision
                 return coll.a2a_menu(self.topology, n_grp, None), \
                     self.link_bw, ab
-            sub = _tp_subdims(self.dims, tp)
+            stage = (_tp_subdims(self.dims, self.n_xpus // pp)
+                     if pp > 1 else self.dims)
+            sub = _tp_subdims(stage, tp) if stage is not None else None
             if sub is None:
                 return (coll.a2a_menu(self.topology, self.n_xpus, self.dims),
                         self.link_bw, ab)
-            qdims = tuple(d // t for d, t in zip(self.dims, sub))
+            qdims = tuple(d // t for d, t in zip(stage, sub))
             menu = coll.a2a_menu(self.topology, n_grp, _strip_ones(qdims))
             active = [i for i, d in enumerate(self.dims) if d > 1]
             if self.topology == "fullmesh":
@@ -138,22 +170,31 @@ class Cluster:
         menu = coll.ar_menu(self.topology, n_grp, self.dims)
         return menu, self.link_bw, ab
 
-    def a2a_time(self, m_bytes: float, group: Optional[int] = None,
-                 tp: int = 1) -> float:
-        """Best all-to-all algorithm for this topology; m = per-XPU payload.
-        `group`/`tp` place the collective under the hybrid mapping (see
-        `comm_spec`); the defaults are the seed whole-cluster semantics."""
-        menu, bw, ab = self.comm_spec("a2a", group or 0, tp)
+    def _best_time(self, kind: str, m_bytes: float, group: int, tp: int,
+                   pp: int) -> float:
+        """min over the placed menu's algorithms — the one timing formula
+        behind a2a_time / ar_time / pp_hop_time."""
+        menu, bw, ab = self.comm_spec(kind, group, tp, pp)
         return min(ab.time(rounds=c.rounds, dests=c.dests, m_coeff=c.m_coeff,
                            m_bytes=m_bytes, bandwidth=bw)
                    for c in menu.values())
 
+    def a2a_time(self, m_bytes: float, group: Optional[int] = None,
+                 tp: int = 1, pp: int = 1) -> float:
+        """Best all-to-all algorithm for this topology; m = per-XPU payload.
+        `group`/`tp`/`pp` place the collective under the hybrid mapping
+        (see `comm_spec`); the defaults are the seed whole-cluster
+        semantics."""
+        return self._best_time("a2a", m_bytes, group or 0, tp, pp)
+
     def ar_time(self, m_bytes: float, group: Optional[int] = None,
-                tp: int = 1) -> float:
-        menu, bw, ab = self.comm_spec("ar", group or 0, tp)
-        return min(ab.time(rounds=c.rounds, dests=c.dests, m_coeff=c.m_coeff,
-                           m_bytes=m_bytes, bandwidth=bw)
-                   for c in menu.values())
+                tp: int = 1, pp: int = 1) -> float:
+        return self._best_time("ar", m_bytes, group or 0, tp, pp)
+
+    def pp_hop_time(self, m_bytes: float, pp: int = 2, tp: int = 1) -> float:
+        """One inter-stage hidden-state hop (see `comm_spec` kind
+        'pp_sendrecv'); m = per-XPU payload of the microbatch slice."""
+        return self._best_time("pp_sendrecv", m_bytes, pp, tp, pp)
 
     # ------------- inventory (for TCO) -------------
     def switch_capacity_total(self) -> float:

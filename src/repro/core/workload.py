@@ -16,6 +16,7 @@ All sizes below are PER DEVICE unless suffixed `_global`.
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, field, replace
 from typing import List, Optional, Tuple
 
@@ -29,32 +30,39 @@ BYTES = {"bf16": 2, "fp8": 1, "fp16": 2, "f32": 4}
 class ServingPoint:
     """One operating point of the serving cluster.
 
-    Parallelism is the hybrid (tp, ep) mapping: the cluster is an
-    (n/tp) x tp grid. Attention runs data-parallel over the n/tp TP
-    domains, TP-sharded inside each. MoE experts are EP over the `ep`
-    expert groups (one group per TP domain when ep = n/tp) and TP-sharded
-    over the tp devices inside a group, so per-device expert weights and
-    flops are invariant along the ep = n/tp family. The paper's fixed
-    mapping is (tp=1, ep=n) — tp=1 on the MoE path, as in DeepSeek-V3
-    deployments — and all tp=1 op lists are byte-identical to it.
-    `n_devices` defaults to ep*tp.
+    Parallelism is the hybrid (tp, pp, ep) mapping: the cluster splits
+    into `pp` pipeline stages of n/pp devices, each stage an
+    (n/(tp*pp)) x tp grid over its share of the layer stack. Attention
+    runs data-parallel over the stage's n/(tp*pp) TP domains, TP-sharded
+    inside each. MoE experts are EP over the `ep` expert groups of the
+    stage (one group per TP domain when ep = n/(tp*pp)) and TP-sharded
+    over the tp devices inside a group. With pp > 1 the batch circulates
+    as pp microbatches (one per stage), so the per-device row count
+    stays batch_global * tp / n and TPOT is the latency sum over all
+    stages plus the pp-1 inter-stage hidden-state hops (see
+    `decode_iteration`). The paper's fixed mapping is (tp=1, pp=1,
+    ep=n) — and all (tp=1, pp=1) op lists are byte-identical to it.
+    `n_devices` defaults to ep*tp*pp.
     """
     batch_global: int            # requests in flight per iteration (decode)
     context: int                 # average context length (KV length)
     tp: int = 1                  # tensor parallel degree
     ep: int = 1                  # expert parallel degree
-    n_devices: int = 0           # 0 -> ep * tp
+    n_devices: int = 0           # 0 -> ep * tp * pp
     dtype: str = "fp8"           # weights/activations wire format
     kv_dtype: str = "bf16"
     q_len: int = 1               # >1 during SD verification
+    pp: int = 1                  # pipeline-parallel degree (layer stages)
 
     @property
     def n(self) -> int:
-        return self.n_devices or (self.ep * self.tp)
+        return self.n_devices or (self.ep * self.tp * self.pp)
 
     @property
     def batch_per_device(self) -> float:
-        # requests each device is responsible for (DP-attention domains)
+        # requests each device is responsible for (DP-attention domains);
+        # pp-invariant: the stage's microbatch B/pp spreads over the
+        # stage's n/(tp*pp) domains, so rows per device stay B*tp/n
         return self.batch_global * self.tp / self.n
 
 
@@ -189,6 +197,43 @@ def dense_ffn_ops(cfg: ModelConfig, p: ServingPoint) -> List[Op]:
 
 
 # ---------------------------------------------------------------------------
+# pipeline-parallel stage partition
+# ---------------------------------------------------------------------------
+
+def stage_layer_counts(n_layers: int, pp: int) -> List[int]:
+    """Balanced contiguous stage partition of the layer stack: stage sizes
+    differ by at most one layer (the leading n_layers % pp stages take the
+    extra). Raises when pp exceeds the layer count — a stage must own at
+    least one layer."""
+    if pp < 1:
+        raise ValueError(f"pp must be >= 1, got {pp}")
+    if pp > n_layers:
+        raise ValueError(f"pp ({pp}) exceeds the layer count ({n_layers}); "
+                         "every stage needs at least one layer")
+    base, rem = divmod(n_layers, pp)
+    return [base + (1 if s < rem else 0) for s in range(pp)]
+
+
+def is_per_layer_op(name: str) -> bool:
+    """True for ops that live on a pipeline stage's layer block — the
+    'L{li}.'-prefixed names `decode_iteration` emits (the only dotted
+    ones). The lm head and `pp_hop*` sends ride the round once and are
+    NOT per-layer. Single source of truth for the stage-bottleneck
+    scaling in `optable._stage_scale` and `optimizer._scaled_timers`."""
+    return "." in name
+
+
+def stage_imbalance(n_layers: int, pp: int) -> float:
+    """Pipeline bottleneck factor of the balanced partition: the steady-
+    state round period is pp * t_largest_stage, so per-layer op times
+    scale by ceil(L/pp) * pp / L (exactly 1.0 when pp divides the layer
+    count — there the latency-sum op list is the exact pipeline model)."""
+    if pp <= 1:
+        return 1.0
+    return math.ceil(n_layers / pp) * pp / n_layers
+
+
+# ---------------------------------------------------------------------------
 # whole-iteration builders
 # ---------------------------------------------------------------------------
 
@@ -197,9 +242,31 @@ def decode_iteration(cfg: ModelConfig, p: ServingPoint) -> List[Op]:
 
     Layers are emitted in execution order so the DBO scheduler can respect
     dependencies; `Op.name` carries a layer index prefix.
+
+    With pp > 1 the stack splits into `p.pp` contiguous stages
+    (`stage_layer_counts`); a `pp_sendrecv` hop op is emitted at each of
+    the pp-1 stage boundaries, carrying the microbatch's hidden state
+    [rows, d] split over the tp shards (each device forwards its 1/tp
+    feature slice to its counterpart on the next stage). Per-layer shapes
+    are pp-invariant — a stage device executes the same per-layer shard a
+    pp=1 device would — so the summed op list is the token's pipeline
+    latency; the bottleneck factor of an uneven partition is applied by
+    the timers via `stage_imbalance`, not baked into the shapes.
     """
+    boundaries = set()
+    if p.pp > 1:
+        acc = 0
+        for c in stage_layer_counts(cfg.num_layers, p.pp)[:-1]:
+            acc += c
+            boundaries.add(acc)
+    hop_bytes = p.batch_per_device * p.q_len * cfg.d_model * _wb(p) / p.tp
+    stage = 0
     ops: List[Op] = []
     for li, spec in enumerate(cfg.layer_specs):
+        if li in boundaries:
+            ops.append(Op(name=f"pp_hop{stage}", kind="pp_sendrecv",
+                          m_bytes=hop_bytes, group=p.pp))
+            stage += 1
         prefix = f"L{li}."
         layer_ops: List[Op] = []
         if spec.mixer in ("attn", "attn_local"):
@@ -326,19 +393,40 @@ def kv_cache_bytes_per_request(cfg: ModelConfig, context: int,
 
 
 def model_shard_bytes(cfg: ModelConfig, tp: int, ep: int,
-                      dtype: str = "fp8") -> float:
-    """Per-device weight bytes: dense params / tp, expert params / (ep*tp)
-    (experts are TP-sharded inside each expert group, see `moe_ops` — at
-    the paper mapping (tp=1, ep=n) this is expert params / n exactly)."""
+                      dtype: str = "fp8", pp: int = 1) -> float:
+    """Per-device weight bytes: per-layer dense params / (tp*pp), expert
+    params / (ep*tp*pp) (experts are TP-sharded inside each expert group,
+    see `moe_ops` — at the paper mapping (tp=1, pp=1, ep=n) this is expert
+    params / n exactly, and with ep = n/(tp*pp) it STAYS expert params / n
+    at every pp: pipeline stages shrink only the dense shard).
+
+    The pp split is checked against the WORST stage of the balanced
+    partition: per-layer params carry the ceil(L/pp)*pp/L bottleneck
+    factor (`stage_imbalance`), and the embedding / LM-head matrices —
+    which pipeline stages do NOT split — are charged in full (one
+    vocab x d matrix, TP-sharded) to the boundary stage, so an uneven
+    split or a fat vocabulary cannot sneak a stage past the HBM capacity
+    the uniform average would claim. pp=1 is the seed formula exactly."""
     wb = BYTES[dtype]
     total_params = cfg.param_count()
+    imb = stage_imbalance(cfg.num_layers, pp)
+    io_params = cfg.vocab_size * cfg.d_model  # per boundary stage (pp > 1)
     if cfg.moe is None:
-        return total_params * wb / tp
+        if pp == 1:
+            return total_params * wb / tp
+        layer_params = total_params - io_params * (1 if cfg.tie_embeddings
+                                                  else 2)
+        return (io_params + layer_params * imb / pp) * wb / tp
     m = cfg.moe
     n_moe = sum(1 for s in cfg.layer_specs if s.ffn == "moe")
     expert_params = n_moe * m.num_experts * 3 * cfg.d_model * m.d_expert
     dense_params = total_params - expert_params
-    return (dense_params / tp + expert_params / (ep * tp)) * wb
+    if pp == 1:
+        return (dense_params / tp + expert_params / (ep * tp)) * wb
+    layer_dense = dense_params - io_params * (1 if cfg.tie_embeddings
+                                              else 2)
+    return ((io_params + layer_dense * imb / pp) / tp
+            + expert_params * imb / (ep * tp * pp)) * wb
 
 
 # HBM fraction reserved for activations/fragmentation — the single memory
@@ -359,14 +447,22 @@ def single_request_fits(cfg: ModelConfig, p: ServingPoint, hbm_cap: float,
 def max_batch_by_memory(cfg: ModelConfig, p: ServingPoint, hbm_cap: float,
                         reserve_frac: float = KV_RESERVE_FRAC) -> int:
     """Largest global batch whose KV cache fits beside the model shard
-    (paper Table 4 last row). Batch is spread over the n/tp DP-attention
-    domains; the per-device KV footprint follows the TP sharding of
-    `kv_cache_bytes_per_request` (GQA shards over kv heads, MLA latent is
-    replicated)."""
-    shard = model_shard_bytes(cfg, p.tp, p.ep, p.dtype)
+    (paper Table 4 last row). Batch is spread over the n/(tp*pp)
+    DP-attention domains per stage; the per-device KV footprint follows
+    the TP sharding of `kv_cache_bytes_per_request` (GQA shards over kv
+    heads, MLA latent is replicated) and, under pp, each stage stores
+    only its own layers' KV (1/pp of a request) for the pp microbatches
+    it serves — per-device KV totals B*tp/n * kv_request either way, but
+    the request count each device can admit divides by tp*pp."""
+    shard = model_shard_bytes(cfg, p.tp, p.ep, p.dtype, p.pp)
     free = hbm_cap * (1 - reserve_frac) - shard
     if free <= 0:
         return 0
     per_req = kv_cache_bytes_per_request(cfg, p.context, p.kv_dtype, p.tp)
+    if p.pp > 1:
+        # largest stage holds ceil(L/pp)/L of a request's KV — the same
+        # bottleneck factor the shard check applies, so uneven splits
+        # cannot overcommit the fat stage's KV either
+        per_req *= stage_imbalance(cfg.num_layers, p.pp) / p.pp
     per_dev = max(int(free / max(per_req, 1.0)), 0)
-    return per_dev * p.n // p.tp
+    return per_dev * p.n // (p.tp * p.pp)

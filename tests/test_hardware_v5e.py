@@ -2,10 +2,15 @@
 'TPU v5e in core/hardware.py is still unswept').
 
 v5e is the JAX half's execution target: a 3D-torus-native part with 16 GB
-HBM, so the full DeepSeek-V3 weight shard cannot fit — the sweep must say
-so (None / no candidates) rather than return a bogus point — while a
-small MoE (olmoe-1b-7b) must produce a feasible operating point on the
-Table-3 topologies.
+HBM. DeepSeek-V3's dense shard exceeds that at low tensor-parallel degree,
+so at pp=1 every tp < 8 mapping is pruned and the model can only be served
+behind wide (and all-reduce-heavy) TP. The pipeline-parallel axis flips
+that: pp divides the dense shard by tp*pp while keeping the per-device
+expert shard at experts/n, so the low-tp mappings become feasible and the
+triple search must return a SERVED operating point — not just report the
+pruning — and never do worse than the (tp, ep) search. A small MoE
+(olmoe-1b-7b) must keep producing feasible points on the Table-3
+topologies.
 """
 import pytest
 
@@ -30,15 +35,38 @@ def test_v5e_sweeps_small_moe(topo):
 
 
 def test_v5e_candidates_respect_16gb_hbm():
-    """DeepSeek-V3's dense shard alone exceeds v5e's HBM at tp=1; the
+    """DeepSeek-V3's dense shard alone exceeds v5e's HBM at low tp; the
     candidate enumerator must prune those mappings instead of sweeping
-    them."""
+    them — and the pp axis must flip exactly those mappings to feasible
+    (dense / (tp*pp) shrinks, experts / n does not grow)."""
     dsv3 = get_arch("deepseek-v3")
     cl = make_cluster("torus", 64, TPU_V5E)
     cands = sweep.parallelism_candidates(dsv3, cl)
-    assert (1, 64) not in cands
+    assert (1, 1, 64) not in cands
+    assert all(tp >= 8 for tp, _, _ in cands)        # dense/tp must fit
+    triples = sweep.parallelism_candidates(dsv3, cl, pp="auto")
+    assert any(tp < 8 and pp > 1 for tp, pp, _ in triples)
+    assert set(cands) <= set(triples)
     olmoe = get_arch("olmoe-1b-7b")
-    assert (1, 64) in sweep.parallelism_candidates(olmoe, cl)
+    assert (1, 1, 64) in sweep.parallelism_candidates(olmoe, cl)
+
+
+@pytest.mark.parametrize("topo", ["torus", "scale-up"])
+def test_v5e_serves_dsv3_via_triple_search(topo):
+    """The acceptance bar: DeepSeek-V3 on 64 v5e chips returns a SERVED
+    operating point at some (tp, pp, ep) triple, meeting the SLO, and the
+    triple search never loses to the (tp, ep)-only search."""
+    dsv3 = get_arch("deepseek-v3")
+    cl = make_cluster(topo, 64, TPU_V5E)
+    sc = Scenario(100.0, 512)
+    pair = sweep.sweep_max_throughput([cl], dsv3, [sc], tp="auto")[0][0]
+    trip = sweep.sweep_max_throughput([cl], dsv3, [sc], tp="auto",
+                                      pp="auto")[0][0]
+    assert trip is not None, f"v5e {topo}: no served (tp, pp, ep) point"
+    assert trip.tpot <= sc.tpot_ms * 1e-3
+    assert trip.batch >= 1 and trip.throughput > 0
+    assert trip.tp * trip.pp * trip.ep == 64
+    assert trip.throughput >= (pair.throughput if pair else 0.0)
 
 
 def test_mixed_xpu_auto_keeps_per_cluster_candidates():

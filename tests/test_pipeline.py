@@ -1,0 +1,301 @@
+"""Pipeline-parallel (tp x pp x ep) mapping-search validation.
+
+Mirrors the guarantee layers of tests/test_sweep.py for the pp axis:
+
+  1. op-list structure: pp-1 `pp_sendrecv` hops at the balanced stage
+     boundaries, per-layer shapes pp-invariant, pp=1 byte-identical to
+     the seed list;
+  2. memory model: the per-stage shard divides by tp*pp while the expert
+     shard stays experts/n along ep = n/(tp*pp), unlocking larger batches;
+  3. batched-vs-scalar agreement to 1e-9 at pp > 1 on all four Table-3
+     topologies (the acceptance bar), plus byte-identical OperatingPoints
+     through the fixed-(tp, pp) search;
+  4. triple-enumeration edge cases: indivisible tp*pp rejected, pp capped
+     by the layer count, expert divisibility along the quotient;
+  5. the three prefill serving modes on the axis, including the per-pool
+     disaggregated mappings.
+"""
+from dataclasses import replace
+
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.core import H100, Scenario, make_cluster
+from repro.core import optable, optimizer, sweep, workload
+from repro.core.specdec import SpecDecConfig
+from repro.core.workload import ServingPoint
+
+TABLE3_TOPOS = ("scale-up", "scale-out", "torus", "fullmesh")
+
+
+# ---------------------------------------------------------------------------
+# 1. op-list structure
+# ---------------------------------------------------------------------------
+
+def test_stage_partition_and_imbalance():
+    assert workload.stage_layer_counts(8, 4) == [2, 2, 2, 2]
+    assert workload.stage_layer_counts(61, 8) == [8, 8, 8, 8, 8, 7, 7, 7]
+    assert workload.stage_imbalance(8, 4) == 1.0
+    assert workload.stage_imbalance(61, 8) == pytest.approx(64 / 61)
+    with pytest.raises(ValueError, match="exceeds the layer count"):
+        workload.stage_layer_counts(4, 8)
+    with pytest.raises(ValueError, match="pp must be"):
+        workload.stage_layer_counts(8, 0)
+
+
+def test_decode_iteration_pp_hops():
+    """pp-1 hops at the stage boundaries; every other op byte-identical to
+    the pp=1 list (per-layer shapes are pp-invariant)."""
+    cfg = get_arch("deepseek-v3").replace(num_layers=8)
+    p1 = ServingPoint(batch_global=512, context=512, tp=2, ep=32,
+                      n_devices=64)
+    p4 = ServingPoint(batch_global=512, context=512, tp=2, ep=8,
+                      n_devices=64, pp=4)
+    ops1 = workload.decode_iteration(cfg, p1)
+    ops4 = workload.decode_iteration(cfg, p4)
+    hops = [o for o in ops4 if o.kind == "pp_sendrecv"]
+    assert len(hops) == 3
+    assert [o.name for o in hops] == ["pp_hop0", "pp_hop1", "pp_hop2"]
+    # hop payload: the microbatch's [rows, d] hidden state, tp-sliced
+    rows = p4.batch_per_device * p4.q_len
+    assert hops[0].m_bytes == pytest.approx(rows * cfg.d_model / p4.tp)
+    assert all(o.group == 4 for o in hops)
+    # boundary placement: hops sit between the stages' layer blocks
+    names4 = [o.name for o in ops4]
+    assert names4.index("pp_hop0") == names4.index("L2.mla_down") - 1
+    # non-hop ops: at the SAME (tp, ep) the per-layer shapes are
+    # pp-invariant — pp only inserts the hops (the stage's devices execute
+    # the same per-layer shard a pp=1 device at that ep would)
+    same_ep = workload.decode_iteration(cfg, replace(p4, pp=1))
+    rest = [o for o in ops4 if o.kind != "pp_sendrecv"]
+    assert rest == same_ep
+    # and against the ep = n/tp mapping only the expert sharding moves
+    assert [o.name for o in rest] == [o.name for o in ops1]
+    for a, b in zip(rest, ops1):
+        assert a.flops == b.flops, a.name
+        if a.kind == "compute" and "expert" not in a.name:
+            assert a.bytes == b.bytes, a.name
+
+
+def test_pp1_oplist_byte_identical():
+    cfg = get_arch("deepseek-v3")
+    p = ServingPoint(batch_global=256, context=512, ep=64, n_devices=64)
+    assert workload.decode_iteration(cfg, p) \
+        == workload.decode_iteration(cfg, replace(p, pp=1))
+    table = optable.op_table(cfg, 1, 64, 64)
+    assert (table.stage_scale == 1.0).all()
+    assert not (table.kind == optable.KIND_PP).any()
+
+
+def test_prefill_iteration_keeps_hops():
+    cfg = get_arch("deepseek-v3").replace(num_layers=8)
+    p = ServingPoint(batch_global=64, context=0, tp=1, ep=16, n_devices=64,
+                     pp=4)
+    pre = workload.prefill_iteration(cfg, p, 128)
+    assert sum(o.kind == "pp_sendrecv" for o in pre) == 3
+    assert not any(o.name == "lm_head" for o in pre)
+
+
+# ---------------------------------------------------------------------------
+# 2. memory model
+# ---------------------------------------------------------------------------
+
+def test_shard_divides_dense_not_experts():
+    cfg = get_arch("deepseek-v3")
+    s11 = workload.model_shard_bytes(cfg, 1, 64)
+    # pp=1 path byte-identical to the pre-pp signature
+    assert s11 == workload.model_shard_bytes(cfg, 1, 64, "fp8", 1)
+    # along ep = n/(tp*pp): experts/n invariant, per-layer dense divides
+    # by tp*pp, and the boundary stage keeps one UNSPLIT vocab x d matrix
+    io = cfg.vocab_size * cfg.d_model
+    cfg64 = cfg.replace(num_layers=64)   # uniform: no imbalance factor
+    n_moe64 = 64
+    experts64 = n_moe64 * cfg.moe.num_experts * 3 * cfg.d_model * \
+        cfg.moe.d_expert
+    layer64 = cfg64.param_count() - experts64 - 2 * io
+    got = workload.model_shard_bytes(cfg64, 2, 8, pp=4)
+    assert got == pytest.approx((io + layer64 / 4) / 2 + experts64 / 64)
+    # uneven split (61 layers, pp=8) carries the largest-stage factor
+    n_moe = sum(1 for s in cfg.layer_specs if s.ffn == "moe")
+    experts = n_moe * cfg.moe.num_experts * 3 * cfg.d_model * \
+        cfg.moe.d_expert
+    layer = cfg.param_count() - experts - 2 * io
+    s_pp8 = workload.model_shard_bytes(cfg, 1, 8, pp=8)
+    want = io + (layer / 8 + experts / 64) * 64 / 61
+    assert s_pp8 == pytest.approx(want)
+    # an io-dominated stack cannot dodge the vocab matrix by deep pp
+    assert workload.model_shard_bytes(cfg, 1, 2, pp=32) > io * 0.999
+
+
+def test_pp_unlocks_batches():
+    """Smaller dense shard -> more KV headroom -> larger feasible batch."""
+    cfg = get_arch("deepseek-v3")
+    b1 = workload.max_batch_by_memory(
+        cfg, ServingPoint(batch_global=1, context=4096, ep=64,
+                          n_devices=64), H100.hbm_cap)
+    b2 = workload.max_batch_by_memory(
+        cfg, ServingPoint(batch_global=1, context=4096, ep=32,
+                          n_devices=64, pp=2), H100.hbm_cap)
+    assert b2 > b1
+
+
+# ---------------------------------------------------------------------------
+# 3. batched vs scalar at pp > 1
+# ---------------------------------------------------------------------------
+
+def test_batched_tpot_matches_scalar_pp_axis():
+    """The 1e-9 batched-vs-scalar property at pp > 1 on every Table-3
+    topology: hop placement, stage-imbalance scaling, and the stage-scoped
+    A2A quotient must agree between the engine and the scalar timers."""
+    cfg = get_arch("deepseek-v3")
+    batches = np.array([64, 512, 4096, 20000])
+    sc = Scenario(40.0, 4096)
+    for topo in TABLE3_TOPOS:
+        cl = make_cluster(topo, 64, H100)
+        for tp, pp in ((1, 2), (1, 8), (2, 4), (4, 2)):
+            ep = 64 // (tp * pp)
+            table = optable.op_table(cfg, tp, ep, 64, pp=pp)
+            for dbo, sd in ((False, None), (True, SpecDecConfig())):
+                got = sweep.batched_tpot(table, [cl], batches, [sc],
+                                         dbo=dbo, sd=sd)[0, 0]
+                p0 = ServingPoint(batch_global=1, context=sc.context,
+                                  tp=tp, ep=ep, n_devices=64, pp=pp)
+                want = np.array([
+                    optimizer.tpot_at(cfg, replace(p0, batch_global=int(b)),
+                                      cl, dbo=dbo, sd=sd)[0]
+                    for b in batches])
+                np.testing.assert_allclose(got, want, rtol=1e-9,
+                                           err_msg=f"{topo} tp{tp} pp{pp}")
+
+
+def test_fixed_pp_operating_point_byte_identical():
+    cfg = get_arch("deepseek-v3")
+    sc = Scenario(40.0, 512)
+    for topo in ("scale-up", "torus"):
+        cl = make_cluster(topo, 64, H100)
+        fast = optimizer.max_throughput(cl, cfg, sc, tp=2, pp=2)
+        ref = optimizer.max_throughput_scalar(cl, cfg, sc, tp=2, pp=2)
+        assert fast == ref, topo
+        assert fast is not None and fast.pp == 2 and fast.ep == 16
+
+
+def test_dense_pp_is_seed_plus_hops():
+    """Dense model, tp=1, pp | L: no collectives change, so the pp
+    iteration is EXACTLY the pp=1 iteration plus pp-1 hop times."""
+    cfg = get_arch("starcoder2-3b")                  # 30 layers, no MoE
+    cl = make_cluster("torus", 64, H100)
+    p1 = ServingPoint(batch_global=4096, context=512, n_devices=64, ep=1)
+    p2 = replace(p1, pp=2)
+    t1 = optimizer.iteration_time(cfg, p1, cl, dbo=False)[0]
+    t2 = optimizer.iteration_time(cfg, p2, cl, dbo=False)[0]
+    hop = cl.pp_hop_time(p2.batch_per_device * cfg.d_model
+                         * workload.BYTES["fp8"], pp=2, tp=1)
+    assert t2 == pytest.approx(t1 + hop, rel=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# 4. triple enumeration edge cases
+# ---------------------------------------------------------------------------
+
+def test_triples_reject_indivisible_and_cap_pp():
+    cl = make_cluster("scale-up", 64, H100)
+    olmoe = get_arch("olmoe-1b-7b")                  # 16 layers, 64 experts
+    triples = sweep.parallelism_candidates(olmoe, cl, pp="auto")
+    assert all(64 % (tp * pp) == 0 for tp, pp, _ in triples)
+    assert all(pp <= olmoe.num_layers for _, pp, _ in triples)
+    assert all(olmoe.moe.num_experts % ep == 0 for _, _, ep in triples)
+    assert all(tp * pp * ep == 64 for tp, pp, ep in triples)
+    # pp=32 > 16 layers must be absent even though 32 | 64
+    assert not any(pp == 32 for _, pp, _ in triples)
+    # a 61-layer stack still pipelines (balanced +-1 stages)
+    dsv3 = get_arch("deepseek-v3")
+    assert any(pp == 8 for _, pp, _ in
+               sweep.parallelism_candidates(dsv3, cl, pp="auto"))
+    # fixed pp is honored verbatim
+    only2 = sweep.parallelism_candidates(dsv3, cl, pp=2)
+    assert only2 and all(pp == 2 for _, pp, _ in only2)
+
+
+def test_triple_auto_never_worse_than_pair_auto():
+    cfg = get_arch("deepseek-v3")
+    clusters = [make_cluster(t, 64, H100) for t in TABLE3_TOPOS]
+    scenarios = [Scenario(15.0, 512), Scenario(100.0, 4096)]
+    pair = sweep.sweep_max_throughput(clusters, cfg, scenarios, tp="auto")
+    trip = sweep.sweep_max_throughput(clusters, cfg, scenarios, tp="auto",
+                                      pp="auto")
+    for ci in range(len(clusters)):
+        for si in range(len(scenarios)):
+            pt = pair[ci][si].throughput if pair[ci][si] else 0.0
+            tt = trip[ci][si].throughput if trip[ci][si] else 0.0
+            assert tt >= pt, (TABLE3_TOPOS[ci], scenarios[si].name)
+            if trip[ci][si] is not None:
+                op = trip[ci][si]
+                assert op.tp * op.pp * op.ep == 64
+
+
+def test_auto_rejects_explicit_ep_with_pp():
+    cfg = get_arch("deepseek-v3")
+    cl = make_cluster("scale-up", 64, H100)
+    with pytest.raises(ValueError, match="auto"):
+        sweep.sweep_max_throughput([cl], cfg, [Scenario(40.0, 512)],
+                                   pp="auto", ep=64)
+
+
+# ---------------------------------------------------------------------------
+# 5. prefill serving modes on the pp axis
+# ---------------------------------------------------------------------------
+
+def test_prefill_modes_accept_pp_auto():
+    cfg = get_arch("deepseek-v3").replace(num_layers=8)
+    cl = make_cluster("scale-out", 64, H100)
+    sc = Scenario(40.0, 4096, prompt_len=2048, ttft_ms=2000.0)
+    for mode in ("decode", "chunked", "disagg"):
+        fixed = sweep.sweep_prefill([cl], cfg, [sc], mode=mode)[0][0]
+        auto = sweep.sweep_prefill([cl], cfg, [sc], mode=mode, tp="auto",
+                                   pp="auto")[0][0]
+        ft = fixed.throughput if fixed else 0.0
+        at = auto.throughput if auto else 0.0
+        assert at >= ft, mode
+        if auto is not None:
+            assert auto.pp >= 1
+
+
+def test_chunked_batched_matches_scalar_at_pp():
+    cfg = get_arch("deepseek-v3").replace(num_layers=8)
+    cl = make_cluster("torus", 64, H100)
+    sc = Scenario(40.0, 2048 + 512, prompt_len=2048, ttft_ms=2000.0)
+    tp, pp = 2, 2
+    ep = 64 // (tp * pp)
+    table = optable.op_table(cfg, tp, ep, 64, pp=pp)
+    ptable = optable.prefill_op_table(cfg, tp, ep, 64, pp=pp)
+    batches = np.array([64, 1024, 8192])
+    got_tpot, got_ttft = sweep.batched_chunked_tpot_ttft(
+        table, ptable, [cl], batches, sc, 512)
+    for bi, b in enumerate(batches):
+        p = ServingPoint(batch_global=int(b), context=sc.context, tp=tp,
+                         ep=ep, n_devices=64, pp=pp)
+        want_tpot, want_ttft = optimizer.chunked_prefill_tpot(cfg, p, cl,
+                                                              sc, 512)
+        np.testing.assert_allclose(got_tpot[0, bi], want_tpot, rtol=1e-9)
+        np.testing.assert_allclose(got_ttft[0, bi], want_ttft, rtol=1e-9)
+
+
+def test_disagg_resolves_per_pool_mappings():
+    """The ROADMAP bugfix: pools resolve their own (tp, pp, ep) — the
+    record carries both mappings and the search may pick different ones."""
+    cfg = get_arch("deepseek-v3")
+    cl = make_cluster("scale-out", 64, H100)
+    sc = Scenario(40.0, 4096, prompt_len=2048, ttft_ms=500.0)
+    op = sweep.sweep_prefill([cl], cfg, [sc], mode="disagg", tp="auto",
+                             pp="auto")[0][0]
+    assert op is not None
+    assert op.mode == "disagg"
+    # decode-pool mapping spans the decode pool, prefill's the prefill pool
+    assert op.tp * op.pp * op.ep == op.n_decode_xpus
+    assert op.tp_prefill >= 1 and op.pp_prefill >= 1
+    assert op.n_prefill_xpus % (op.tp_prefill * op.pp_prefill) == 0
+    # chunked / decode points leave the prefill-pool fields zeroed
+    chk = sweep.sweep_prefill([cl], cfg, [sc], mode="chunked")[0][0]
+    if chk is not None:
+        assert chk.tp_prefill == 0 and chk.pp_prefill == 0

@@ -184,19 +184,26 @@ def test_parallelism_candidates_structure():
     cl = make_cluster("scale-up", 64, H100)
     dsv3 = get_arch("deepseek-v3")
     cands = sweep.parallelism_candidates(dsv3, cl)
-    assert cands[0] == (1, 64)                       # fixed mapping first
-    assert cands == sorted(cands)                    # tp ascending
-    for tp, ep in cands:
-        assert tp * ep == 64
+    assert cands[0] == (1, 1, 64)                    # fixed mapping first
+    assert cands == sorted(cands)                    # (tp, pp) ascending
+    assert all(pp == 1 for _, pp, _ in cands)        # pp=1 is the default
+    for tp, pp, ep in cands:
+        assert tp * pp * ep == 64
         assert dsv3.moe.num_experts % ep == 0
         assert dsv3.num_heads % tp == 0              # MLA: shard num_heads
+    # the pp axis is opt-in: pp="auto" grows the candidate set as triples
+    triples = sweep.parallelism_candidates(dsv3, cl, pp="auto")
+    assert set(cands) <= set(triples)
+    assert any(pp > 1 for _, pp, _ in triples)
+    assert all(tp * pp * ep == 64 for tp, pp, ep in triples)
     # GQA model: tp capped by kv heads (olmoe has 16)
     olmoe = get_arch("olmoe-1b-7b")
     assert all(tp <= olmoe.num_kv_heads
-               for tp, _ in sweep.parallelism_candidates(olmoe, cl))
+               for tp, _, _ in sweep.parallelism_candidates(olmoe, cl))
     # dense model: ep stays 1 on every candidate
     dense = get_arch("starcoder2-3b")
-    assert all(ep == 1 for _, ep in sweep.parallelism_candidates(dense, cl))
+    assert all(ep == 1
+               for _, _, ep in sweep.parallelism_candidates(dense, cl))
 
 
 def test_moe_ops_tp_sharded():
@@ -316,8 +323,8 @@ def test_auto_equals_best_fixed_candidate():
     cl = make_cluster("scale-out", 64, H100)
     sc = Scenario(40.0, 512)
     auto = optimizer.max_throughput(cl, cfg, sc, tp="auto")
-    per_cand = [optimizer.max_throughput(cl, cfg, sc, tp=t, ep=e)
-                for t, e in sweep.parallelism_candidates(cfg, cl)]
+    per_cand = [optimizer.max_throughput(cl, cfg, sc, tp=t, pp=q, ep=e)
+                for t, q, e in sweep.parallelism_candidates(cfg, cl)]
     best = max((p for p in per_cand if p is not None),
                key=lambda p: p.throughput)
     assert auto == best
