@@ -13,9 +13,9 @@ pass):
            sub-second modules from tripping the ratio on a cold CI runner.
   budget   now <= the module's own `budget_s` (written by benchmarks/run.py
            from BUDGETS_S) — an absolute per-benchmark ceiling, so modules
-           that post-date the seed timings (fig_parallelism, fig_pipeline)
-           are gated too, and a legitimate baseline refresh cannot smuggle
-           in an unbounded slowdown.
+           that post-date the seed timings (fig_parallelism, fig_pipeline,
+           fig_prefill_overlap) are gated too, and a legitimate baseline
+           refresh cannot smuggle in an unbounded slowdown.
 
   --update-baseline rewrites the baseline file with the current run's
   timings (use after a change that legitimately grows the grid — e.g. the

@@ -37,10 +37,15 @@ SCENARIOS_V5E = [Scenario(t, 512) for t in (40.0, 100.0)]
 def _cell(op, n, cost):
     if op is None:
         return {"thpt_per_xpu": 0.0, "thpt_per_cost": 0.0, "batch": 0,
-                "tp": 0, "pp": 0, "ep": 0}
+                "tp": 0, "pp": 0, "ep": 0, "exposed_comm_frac": 0.0}
     return {"thpt_per_xpu": op.throughput / n,
             "thpt_per_cost": op.throughput / n / cost,
-            "batch": op.batch, "tp": op.tp, "pp": op.pp, "ep": op.ep}
+            "batch": op.batch, "tp": op.tp, "pp": op.pp, "ep": op.ep,
+            # share of the iteration that is exposed communication under
+            # the no-overlap search — at pp > 1 this includes the pp-1
+            # hops a DBO'd schedule would ride on the send/recv lane
+            "exposed_comm_frac": (op.exposed_comm / op.tpot
+                                  if op.tpot else 0.0)}
 
 
 def _sweep_platform(cfg, xpu, scenarios, n):

@@ -1,0 +1,146 @@
+"""Overlap-aware prefill serving: DBO vs no-overlap topology rankings
+(new figure; extends fig_prefill_scenarios with the three-lane (max,+)
+schedule threaded through the prefill modes).
+
+Grid: prompt length x TTFT SLO x Table-3 topology, DeepSeek-V3, 64 XPUs,
+TPOT SLO 40 ms. Both prefill serving modes (chunked, disaggregated) are
+searched twice per cell — no-overlap (`dbo=False`, the committed
+fig_prefill_scenarios timing) and DBO (`dbo=True`: decode iterations split
+into B/2 microbatches, prefill chunks and the disagg whole-prompt pass
+into causal half-chunks; A2A/AR hide under the other microbatch's GEMMs,
+pp hops ride the dedicated send/recv lane).
+
+Expected trends (MixServe arXiv 2601.08800, MixNet/MFABRIC 2501.03905:
+overlap-aware scheduling is what makes lower-bandwidth fabrics
+competitive): DBO can only help (each component is best-of(no-overlap,
+monotone schedule)); the gains concentrate on the bandwidth-constrained
+fabrics whose exposed A2A the no-overlap timing overstates, while the
+fully-provisioned scale-up switch — already compute-bound — gains least,
+narrowing (and sometimes re-ordering) the topology ranking.
+"""
+from __future__ import annotations
+
+from benchmarks.common import save, table
+from repro.configs import get_arch
+from repro.core import H100, Scenario, make_cluster
+from repro.core.sweep import sweep_prefill
+
+TOPOS = ("scale-up", "scale-out", "torus", "fullmesh")
+PROMPTS = (512, 2048, 8192)
+TTFTS_MS = (500.0, 2000.0)
+TPOT_MS = 40.0
+GEN_LEN = 1024          # decode tokens per request; avg context = L + GEN/2
+MODES = ("chunked", "disagg")
+
+
+def run(verbose: bool = True):
+    cfg = get_arch("deepseek-v3")
+    clusters = [make_cluster(t, 64, H100) for t in TOPOS]
+    scenarios = [Scenario(TPOT_MS, L + GEN_LEN // 2, prompt_len=L,
+                          ttft_ms=T)
+                 for L in PROMPTS for T in TTFTS_MS]
+    grids = {(mode, dbo): sweep_prefill(clusters, cfg, scenarios, mode=mode,
+                                        dbo=dbo)
+             for mode in MODES for dbo in (False, True)}
+
+    results = {}
+    rows = []
+    gains = {t: [] for t in TOPOS}       # relative best-mode gains per topo
+    never_worse = True
+    strict_cells = []
+    ect_drops = []
+    for si, sc in enumerate(scenarios):
+        best_thpt = {False: {}, True: {}}
+        for ti, topo in enumerate(TOPOS):
+            n = clusters[ti].n_xpus
+            entry = {}
+            for mode in MODES:
+                for dbo in (False, True):
+                    op = grids[mode, dbo][ti][si]
+                    key = f"{mode}_dbo" if dbo else mode
+                    if op is None:
+                        entry[key] = None
+                        continue
+                    entry[key] = {
+                        "thpt_per_xpu": op.throughput / n,
+                        "tpot_ms": op.tpot * 1e3,
+                        "ttft_ms": op.ttft * 1e3,
+                        "batch": op.batch,
+                        "chunk": op.chunk,
+                        "n_prefill_xpus": op.n_prefill_xpus,
+                        "exposed_comm_frac": (op.exposed_comm / op.tpot
+                                              if op.tpot else 0.0),
+                    }
+                t0 = (entry[mode] or {"thpt_per_xpu": 0.0})["thpt_per_xpu"]
+                t1 = (entry[f"{mode}_dbo"]
+                      or {"thpt_per_xpu": 0.0})["thpt_per_xpu"]
+                never_worse &= t1 >= t0 * (1 - 1e-12)
+                if t1 > t0 * (1 + 1e-9):
+                    strict_cells.append([mode, topo, sc.name])
+                if entry[mode] and entry[f"{mode}_dbo"]:
+                    ect_drops.append(
+                        entry[mode]["exposed_comm_frac"]
+                        - entry[f"{mode}_dbo"]["exposed_comm_frac"])
+            for dbo in (False, True):
+                best_thpt[dbo][topo] = max(
+                    (entry[k]["thpt_per_xpu"]
+                     for k in (m + ("_dbo" if dbo else "") for m in MODES)
+                     if entry[k]), default=0.0)
+            if best_thpt[False][topo] > 0:
+                gains[topo].append(best_thpt[True][topo]
+                                   / best_thpt[False][topo] - 1.0)
+            results.setdefault(sc.name, {})[topo] = entry
+            rows.append([sc.prompt_len, int(sc.ttft_ms), topo]
+                        + [f"{best_thpt[d][topo]:.0f}" for d in (False, True)]
+                        + [(f"{(best_thpt[True][topo] / best_thpt[False][topo] - 1) * 100:+.1f}%"
+                            if best_thpt[False][topo] else "-")])
+        ranking = {("dbo" if d else "noopt"):
+                   sorted(TOPOS, key=lambda t: -best_thpt[d][t])
+                   for d in (False, True)}
+        results[sc.name]["ranking"] = ranking
+    out = table(["prompt", "TTFT ms", "topology", "best no-ovl tok/s/XPU",
+                 "best DBO", "gain"], rows,
+                title="Prefill overlap vs no-overlap (DeepSeek-V3, 64 XPU, "
+                      "TPOT 40 ms, best of chunked/disagg)")
+
+    mean_gain = {t: (sum(g) / len(g) if g else 0.0) for t, g in gains.items()}
+    ranking_shifts = [[sc, r["noopt"], r["dbo"]]
+                      for sc, r in ((s, results[s]["ranking"])
+                                    for s in results if s != "claims")
+                      if r["noopt"] != r["dbo"]]
+    results["claims"] = {
+        # the monotone (max,+) schedule can only help: every searched
+        # operating point with DBO is at least the no-overlap one
+        "overlap_never_worse": never_worse,
+        # and it must MATTER somewhere, else the lanes are dead weight
+        "overlap_strictly_helps_somewhere": bool(strict_cells),
+        # the paper-motivating trend: the fully-provisioned scale-up
+        # switch is already compute-bound, so every bandwidth-constrained
+        # fabric gains at least as much from overlap as scale-up does
+        "low_bw_fabrics_gain_most": all(
+            mean_gain[t] >= mean_gain["scale-up"] - 1e-12
+            for t in TOPOS),
+        # overlap hides communication: the exposed-comm fraction of the
+        # chosen operating points shrinks ON AVERAGE. (Not pointwise: at a
+        # FIXED point DBO only hides comm, but the search may move to a
+        # larger batch/chunk whose bigger collectives trade a higher
+        # exposure fraction for more throughput — that is the search
+        # working, not overlap failing.)
+        "exposed_comm_shrinks_on_average": (
+            bool(ect_drops) and sum(ect_drops) / len(ect_drops) > 0),
+        "mean_gain_by_topology": mean_gain,
+        "strict_cells": strict_cells,
+        "ranking_shifts": ranking_shifts,
+    }
+    if verbose:
+        print(out)
+        print("\nclaims:", {k: v for k, v in results["claims"].items()
+                            if isinstance(v, bool)})
+        print("mean gain by topology:",
+              {t: f"{g * 100:+.1f}%" for t, g in mean_gain.items()})
+    save("fig_prefill_overlap", results)
+    return results
+
+
+if __name__ == "__main__":
+    run()

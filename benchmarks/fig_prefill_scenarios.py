@@ -61,6 +61,12 @@ def run(verbose: bool = True):
                     "batch": op.batch,
                     "chunk": op.chunk,
                     "n_prefill_xpus": op.n_prefill_xpus,
+                    # fraction of the TPOT-side iteration that is exposed
+                    # communication; under the no-overlap timing this is
+                    # the comm share — i.e. the headroom DBO can attack
+                    # (benchmarks/fig_prefill_overlap.py quantifies it)
+                    "exposed_comm_frac": (op.exposed_comm / op.tpot
+                                          if op.tpot else 0.0),
                 }
                 extra = (f" c{op.chunk}" if mode == "chunked" else
                          f" p{op.n_prefill_xpus}" if mode == "disagg" else "")

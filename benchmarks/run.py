@@ -38,6 +38,14 @@ and `sweep.sweep_prefill` searches three modes per (cluster, scenario):
             is the balanced pipeline rate, TTFT one whole-prompt pass
             plus the KV-cache handoff
 
+All three modes accept `dbo=True`: the three-lane (max,+) DBO schedule
+(compute / collectives / pp send-recv — `repro.core.overlap`) times
+decode iterations as two B/2 microbatches and prefill work as two causal
+half-chunks, hiding A2A/AR under the other microbatch's GEMMs and pp
+hops under both. `fig_prefill_overlap` sweeps overlap vs no-overlap
+across prompt x TTFT x topology: gains concentrate on the
+bandwidth-constrained fabrics and re-order the topology ranking.
+
 Decode-only scenarios (`prompt_len == 0`) evaluate byte-identically to
 the seed search — the fig9-fig18 JSONs are regression-locked by
 tests/test_prefill.py and by the CI `bench-regression` job, which
@@ -103,6 +111,7 @@ MODULES = [
     "benchmarks.fig17_pareto",
     "benchmarks.fig18_future",
     "benchmarks.fig_prefill_scenarios",
+    "benchmarks.fig_prefill_overlap",
     "benchmarks.fig_parallelism",
     "benchmarks.fig_pipeline",
     "benchmarks.roofline",
@@ -139,6 +148,7 @@ BUDGETS_S = {
     "benchmarks.fig18_future": 120,
     "benchmarks.fig_parallelism": 60,
     "benchmarks.fig_pipeline": 120,
+    "benchmarks.fig_prefill_overlap": 120,
 }
 
 

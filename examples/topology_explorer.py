@@ -19,14 +19,14 @@ from repro.core.workload import ServingPoint
 
 def show_schedule(cfg, cluster, batch):
     from repro.core.optimizer import _timers
-    from repro.core.overlap import simulate_two_lane, to_timed
+    from repro.core.overlap import simulate_lanes, to_timed
     from repro.core.workload import decode_iteration
     half = ServingPoint(batch_global=batch // 2, context=512,
                         ep=cluster.n_xpus, n_devices=cluster.n_xpus)
     ops = decode_iteration(cfg, half)[:18]        # first ~2 layers
     t_comp, t_comm = _timers(cluster, half)
-    res = simulate_two_lane(to_timed(ops, t_comp, t_comm, 0),
-                            to_timed(ops, t_comp, t_comm, 1), stagger=3)
+    res = simulate_lanes(to_timed(ops, t_comp, t_comm, 0),
+                         to_timed(ops, t_comp, t_comm, 1), stagger=3)
     span = res.makespan
     width = 70
     print(f"\nDBO two-lane schedule (first 2 layers, batch {batch}, "

@@ -7,7 +7,8 @@ methodology for MoE LLM serving networks.
   hardware     XPU generations (H100, Blackwell, Rubin, TPU v5e; Table 5)
   compute_model roofline-with-efficiency per-layer compute times
   workload     MoE decode/prefill iterations -> ordered op lists (per-device)
-  overlap      DBO greedy two-lane scheduler -> exposed communication time
+  overlap      DBO three-lane (max,+) scheduler (compute / collectives /
+               pp send-recv) -> exposed communication time
   specdec      speculative decoding TPOT model
   tco          CapEx/OpEx cluster cost model (+ adjustment factor c)
   optable      decode/prefill op lists lowered to coefficient arrays

@@ -13,6 +13,10 @@ full hybrid-parallelism key, so the (tp, ep) mapping search reuses one
 lowering per candidate mapping. The tp > 1 op lists gain the `moe_ar`
 all-reduce and the TP-sharded expert terms (see `workload.moe_ops`); both
 stay inside the linear basis below, so the probes need no new points.
+Each table also carries a `lane` column (int codes into `overlap.LANES`)
+routing every op to its scheduler lane — compute, collective fabric, or
+the dedicated pp send/recv channel — for the vectorized three-lane (max,+)
+DBO schedule (`sweep._lane_makespan`).
 
 Every op emitted by `workload.decode_iteration` is exactly linear in the
 basis {1, rows, rows*ctx, b*ctx} where b = batch_per_device and
@@ -47,6 +51,16 @@ KIND_COMPUTE, KIND_A2A, KIND_AR, KIND_PP = 0, 1, 2, 3
 KIND_CODES = {"compute": KIND_COMPUTE, "a2a": KIND_A2A, "ar": KIND_AR,
               "pp_sendrecv": KIND_PP}
 
+def _lane_codes(ops) -> np.ndarray:
+    """int8 lane column: index into `overlap.LANES` ("compute", "comm",
+    "sendrecv" — collectives share the comm lane, pp hops get the
+    dedicated send/recv lane of the three-lane (max,+) DBO schedule),
+    derived from `workload.op_lane` (the scalar scheduler's tagging), so
+    the vectorized schedule cannot diverge."""
+    from repro.core.overlap import LANES
+    return np.array([LANES.index(workload.op_lane(o.kind))
+                     for o in ops], np.int8)
+
 
 @dataclass(frozen=True)
 class OpTable:
@@ -66,6 +80,7 @@ class OpTable:
 
     names: Tuple[str, ...]
     kind: np.ndarray           # int8, KIND_* codes
+    lane: np.ndarray           # int8, LANE_* codes (three-lane DBO schedule)
     group: np.ndarray          # AR group / pp-hop stage count (0 otherwise)
     stage_scale: np.ndarray    # per-op pipeline bottleneck factor (1.0 at pp|L)
     eff: np.ndarray            # compute efficiency at rows >= GEMM_SMALL_TOKENS
@@ -175,6 +190,7 @@ def build_op_table(cfg: ModelConfig, *, tp: int = 1, ep: int = 1,
         cfg_name=cfg.name, tp=tp, ep=ep, n=n, dtype=dtype, kv_dtype=kv_dtype,
         pp=pp, names=names0,
         kind=np.array([KIND_CODES[o.kind] for o in ops], np.int8),
+        lane=_lane_codes(ops),
         group=np.array([o.group for o in ops], np.int64),
         stage_scale=_stage_scale(names0, cfg.num_layers, pp),
         eff=eff, eff_small=eff_small,
@@ -254,6 +270,7 @@ class PrefillOpTable:
 
     names: Tuple[str, ...]
     kind: np.ndarray
+    lane: np.ndarray
     group: np.ndarray
     stage_scale: np.ndarray
     eff: np.ndarray
@@ -365,6 +382,7 @@ def build_prefill_op_table(cfg: ModelConfig, *, tp: int = 1, ep: int = 1,
         cfg_name=cfg.name, tp=tp, ep=ep, n=n, dtype=dtype, kv_dtype=kv_dtype,
         pp=pp, names=names0,
         kind=np.array([KIND_CODES[o.kind] for o in ops], np.int8),
+        lane=_lane_codes(ops),
         group=np.array([o.group for o in ops], np.int64),
         stage_scale=_stage_scale(names0, cfg.num_layers, pp),
         eff=eff, eff_small=eff_small,

@@ -111,6 +111,10 @@ class PrefillOperatingPoint:
     tp_prefill: int = 0        # disagg: the prefill pool's own mapping
     pp_prefill: int = 0        # (0 outside disagg mode)
     ep_prefill: int = 0
+    used_dbo: bool = False     # searched with the (max,+) DBO schedule
+    exposed_comm: float = 0.0  # TPOT-side comm not hidden under compute (s)
+    t_compute: float = 0.0     # TPOT-side busy times under the schedule
+    t_comm: float = 0.0        # actually used (chunked: load-weighted)
 
 
 # ---------------------------------------------------------------------------
@@ -161,7 +165,8 @@ def iteration_time(cfg: ModelConfig, p: ServingPoint, cluster: Cluster,
     """One decode iteration -> (t_iter, exposed_comm, t_compute, t_comm).
 
     dbo=True: the batch splits into two microbatches of B/2; TPOT is the
-    two-lane greedy schedule's makespan (paper section 3.3).
+    three-lane fixed-order (max,+) schedule's makespan (paper section 3.3;
+    pp hops ride the dedicated send/recv lane — see `repro.core.overlap`).
     """
     if not dbo:
         ops = workload.decode_iteration(cfg, p)
@@ -179,6 +184,19 @@ def iteration_time(cfg: ModelConfig, p: ServingPoint, cluster: Cluster,
     return makespan, exposed, tc, tm
 
 
+def _best_decode_iter(cfg: ModelConfig, p: ServingPoint, cluster: Cluster,
+                      dbo: bool) -> tuple[float, float, float, float]:
+    """best-of(no-overlap, DBO) decode iteration — "DBO on" means the
+    schedule is USED only where it helps (paper Fig. 11a); DBO needs two
+    microbatches, so batch 1 stays no-overlap."""
+    res = iteration_time(cfg, p, cluster, dbo=False)
+    if dbo and p.batch_global >= 2:
+        res_dbo = iteration_time(cfg, p, cluster, dbo=True)
+        if res_dbo[0] < res[0]:
+            return res_dbo
+    return res
+
+
 def prefill_iteration_time(cfg: ModelConfig, p: ServingPoint,
                            cluster: Cluster,
                            chunk: int) -> tuple[float, float, float]:
@@ -193,12 +211,57 @@ def prefill_iteration_time(cfg: ModelConfig, p: ServingPoint,
     return tc + tm, tc, tm
 
 
-def chunked_prefill_tpot(cfg: ModelConfig, p: ServingPoint, cluster: Cluster,
-                         scenario: Scenario,
-                         chunk: int) -> tuple[float, float]:
-    """(TPOT, TTFT) of the chunked-prefill model at decode batch
-    B = `p.batch_global` (Sarathi-style: chunks piggyback on decode
-    iterations, one chunk per DP-attention domain per carrying iteration).
+def prefill_iteration_dbo(cfg: ModelConfig, p: ServingPoint,
+                          cluster: Cluster,
+                          chunk: int) -> overlap.ScheduleResult:
+    """DBO'd prefill chunk: the chunk splits CAUSALLY into a leading
+    ceil(chunk/2)-token and a trailing floor(chunk/2)-token microbatch
+    (the trailing one starts `h1` tokens deeper into the KV cache), and
+    the two run the three-lane (max,+) schedule — the leading half's
+    A2A/AR hides under the trailing half's big GEMMs, pp hops under both.
+
+    The causal split is EXACT: the two halves' attention-core flops sum to
+    the full chunk's (h1*(h1+1)/2 + h2*(h2+1)/2 + h1*h2 = s*(s+1)/2), so
+    DBO re-schedules the same work rather than dropping any.
+    """
+    if chunk < 2:
+        raise ValueError(f"DBO needs two microbatches; chunk={chunk} < 2")
+    h2 = chunk // 2
+    h1 = chunk - h2
+    ops_a = workload.prefill_iteration(cfg, p, h1)
+    ops_b = workload.prefill_iteration(
+        cfg, replace(p, context=p.context + h1), h2)
+    ca, ma = _scaled_timers(cfg, cluster, replace(p, q_len=h1))
+    cb, mb = _scaled_timers(cfg, cluster, replace(p, q_len=h2))
+    return overlap.dbo_best(overlap.to_timed(ops_a, ca, ma, 0),
+                            overlap.to_timed(ops_b, cb, mb, 1))
+
+
+def prefill_chunk_components(cfg: ModelConfig, p: ServingPoint,
+                             cluster: Cluster, chunk: int, *,
+                             dbo: bool = False
+                             ) -> tuple[float, float, float, float]:
+    """(t_iter, exposed_comm, t_compute, t_comm) of one prefill chunk under
+    the schedule actually used: best-of(no-overlap, three-lane DBO) when
+    `dbo`, mirroring `_best_decode_iter`. Single-token chunks cannot split
+    into two microbatches and stay no-overlap."""
+    t, tc, tm = prefill_iteration_time(cfg, p, cluster, chunk)
+    if dbo and chunk >= 2:
+        res = prefill_iteration_dbo(cfg, p, cluster, chunk)
+        if res.makespan < t:
+            return (res.makespan, res.exposed_comm, res.compute_busy,
+                    res.comm_busy + res.sendrecv_busy)
+    return t, tm, tc, tm
+
+
+def chunked_prefill_components(cfg: ModelConfig, p: ServingPoint,
+                               cluster: Cluster, scenario: Scenario,
+                               chunk: int, *, dbo: bool = False
+                               ) -> tuple[float, float, float, float, float]:
+    """(TPOT, TTFT, exposed_comm, t_compute, t_comm) of the chunked-prefill
+    model at decode batch B = `p.batch_global` (Sarathi-style: chunks
+    piggyback on decode iterations, one chunk per DP-attention domain per
+    carrying iteration).
 
     Each decode slot turns over every `gen_len` iterations and its
     replacement prompt needs `n_chunks` chunk-iterations on one of the
@@ -212,24 +275,42 @@ def chunked_prefill_tpot(cfg: ModelConfig, p: ServingPoint, cluster: Cluster,
     TPOT is the load-weighted average iteration, t_dec + phi * mean_j
     t_chunk_j; TTFT is the sum over the prompt's chunk schedule of the
     iterations it rides, sum_j (t_dec + t_chunk_j) — those iterations DO
-    carry its chunks back to back. No-overlap timing; DBO for mixed
-    iterations is a ROADMAP follow-on.
+    carry its chunks back to back. `dbo` times BOTH parts with the
+    three-lane (max,+) schedule where it helps: the decode iteration
+    splits into two B/2 microbatches, each chunk into two causal
+    half-chunks (`prefill_iteration_dbo` — the chunk's A2A/AR hides under
+    the other half's big GEMMs). exposed/compute/comm components carry the
+    same load weighting as TPOT.
     """
-    t_dec = iteration_time(cfg, p, cluster, dbo=False)[0]
+    t_dec, e_dec, tc_dec, tm_dec = _best_decode_iter(cfg, p, cluster, dbo)
     sizes, offsets = workload.chunk_schedule(scenario.prompt_len, chunk)
     p_ch = replace(p, batch_global=max(p.n // p.tp, 1))  # one chunk / domain
-    t_pre = [prefill_iteration_time(cfg, replace(p_ch, context=off), cluster,
-                                    s)[0]
+    parts = [prefill_chunk_components(cfg, replace(p_ch, context=off),
+                                      cluster, s, dbo=dbo)
              for s, off in zip(sizes, offsets)]
-    m = len(t_pre)
+    m = len(parts)
     domains = max(p.n // p.tp, 1)
     g = scenario.gen_len
     b_eff = min(float(p.batch_global), domains * g / m)
     phi = b_eff * m / (g * domains)
-    s_pre = sum(t_pre)
+    s_pre = sum(t for t, _, _, _ in parts)
     tpot = t_dec + phi * (s_pre / m)
     ttft = m * t_dec + s_pre
-    return tpot, ttft
+    exposed = e_dec + phi * (sum(e for _, e, _, _ in parts) / m)
+    tc = tc_dec + phi * (sum(c for _, _, c, _ in parts) / m)
+    tm = tm_dec + phi * (sum(t for _, _, _, t in parts) / m)
+    return tpot, ttft, exposed, tc, tm
+
+
+def chunked_prefill_tpot(cfg: ModelConfig, p: ServingPoint, cluster: Cluster,
+                         scenario: Scenario, chunk: int, *,
+                         dbo: bool = False) -> tuple[float, float]:
+    """(TPOT, TTFT) of the chunked-prefill model — see
+    `chunked_prefill_components` for the derivation; this is the scalar
+    reference the batched `sweep.batched_chunked_tpot_ttft` is locked
+    against at 1e-9 relative (with and without DBO)."""
+    return chunked_prefill_components(cfg, p, cluster, scenario, chunk,
+                                      dbo=dbo)[:2]
 
 
 def tpot_at(cfg: ModelConfig, p: ServingPoint, cluster: Cluster, *,
@@ -240,13 +321,7 @@ def tpot_at(cfg: ModelConfig, p: ServingPoint, cluster: Cluster, *,
     draft + verify iterations.
     """
     def best_iter(q_len: int):
-        pq = replace(p, q_len=q_len)
-        res = iteration_time(cfg, pq, cluster, dbo=False)
-        if dbo and p.batch_global >= 2:
-            res_dbo = iteration_time(cfg, pq, cluster, dbo=True)
-            if res_dbo[0] < res[0]:
-                return res_dbo
-        return res
+        return _best_decode_iter(cfg, replace(p, q_len=q_len), cluster, dbo)
 
     if sd is None:
         return best_iter(1)
@@ -373,7 +448,9 @@ def max_throughput_prefill(cluster: Cluster, cfg: ModelConfig,
     into prefill/decode pools, split ratio swept — each pool resolves its
     OWN (tp, pp, ep) mapping under "auto"). Runs on the batched prefill
     sweep; see `sweep.sweep_prefill` for the grid entry point. All three
-    modes accept tp="auto" / pp="auto" to search the mapping axes."""
+    modes accept tp="auto" / pp="auto" to search the mapping axes, and
+    dbo=True to time iterations, chunks, and the disagg whole-prompt pass
+    with the three-lane (max,+) DBO schedule wherever it helps."""
     from repro.core import sweep
     return sweep.sweep_prefill([cluster], cfg, [scenario], mode=mode,
                                **kw)[0][0]

@@ -11,10 +11,12 @@ module evaluates the whole grid with NumPy broadcasts over a precomputed
   alpha-beta comm each cluster's collective-algorithm menu lowered to
                   (A, B) pairs so t = min_alg(A + B * m) broadcasts over the
                   payload grid
-  DBO             the two-lane fixed-order schedule is a (max,+) recurrence
-                  in the op order (see overlap.simulate_two_lane), so it
-                  vectorizes exactly over the grid: same max/add operations,
-                  batched over trailing axes
+  DBO             the three-lane fixed-order schedule (compute / comm /
+                  pp send-recv) is a (max,+) recurrence in the op order
+                  (see overlap.simulate_lanes), so it vectorizes exactly
+                  over the grid: same max/add operations, batched over
+                  trailing axes — for decode iterations, prefill chunks,
+                  and the disaggregated whole-prompt pass alike
 
 `batched_tpot` matches the scalar `optimizer.tpot_at` to float rounding
 (~1e-15 relative; asserted at 1e-9 in tests/test_sweep.py). Selection
@@ -45,7 +47,7 @@ from repro.core import optable, workload
 from repro.core.compute_model import (EFF_MEMORY, GEMM_SMALL_TOKENS,
                                       T_LAUNCH)
 from repro.core.optable import OpTable
-from repro.core.overlap import MAX_STAGGER
+from repro.core.overlap import LANES, MAX_STAGGER
 from repro.core.specdec import SpecDecConfig
 from repro.core.topology import Cluster
 from repro.core.workload import ServingPoint
@@ -93,6 +95,41 @@ def _comm_times(table: OpTable, cluster: Cluster,
                 best = t if best is None else np.minimum(best, t)
             out[sel] = best
     return out
+
+
+# ---------------------------------------------------------------------------
+# vectorized (max,+) lane schedule
+# ---------------------------------------------------------------------------
+
+def _lane_makespan(lanes: np.ndarray, dur_a: np.ndarray,
+                   dur_b: np.ndarray) -> np.ndarray:
+    """Best-stagger makespan of the fixed-order three-lane schedule, exact
+    vectorization of `overlap.dbo_best` with arbitrary trailing grid axes.
+
+    `lanes` is the (n_ops,) int lane column (overlap.LANES indices);
+    `dur_a` / `dur_b` are the two microbatches' per-op duration tensors,
+    (n_ops, ...). They may differ — DBO'd prefill chunks split causally
+    into unequal half-chunks — but must share the op structure (same lane
+    per index), which every caller guarantees by construction.
+    """
+    n = dur_a.shape[0]
+    tail = dur_a.shape[1:]
+    dur = (dur_a, dur_b)
+    best = None
+    for s in range(0, min(MAX_STAGGER, max(n - 1, 0)) + 1):
+        order = sorted(((k, mb) for mb in (0, 1) for k in range(n)),
+                       key=lambda km: (km[0] + (s if km[1] else 0),
+                                       km[1]))
+        ready = [np.zeros(tail), np.zeros(tail)]
+        free = [np.zeros(tail) for _ in LANES]
+        for k, mb in order:
+            lane = int(lanes[k])
+            end = np.maximum(ready[mb], free[lane]) + dur[mb][k]
+            ready[mb] = end
+            free[lane] = end
+        mk = np.maximum(ready[0], ready[1])
+        best = mk if best is None else np.minimum(best, mk)
+    return best if best is not None else np.zeros(tail)
 
 
 # ---------------------------------------------------------------------------
@@ -180,38 +217,25 @@ class GridEval:
             self._seq[key] = (tc + tm, tc, tm)
         return self._seq[key]
 
-    # ------------- DBO two-lane schedule -------------
+    # ------------- DBO three-lane schedule -------------
     def dbo_makespan(self, q: int) -> np.ndarray:
-        """Best-stagger two-lane makespan at HALF batch, (n_cl,n_sc,n_b).
+        """Best-stagger three-lane makespan at HALF batch, (n_cl,n_sc,n_b).
 
         Exact vectorization of overlap.dbo_tpot: with a fixed per-lane
         order, every start time is max(end of the microbatch's previous op,
         end of the lane's previous op) — a (max,+) recurrence evaluated here
-        in merged order with the batch grid as trailing axes.
+        in merged order with the batch grid as trailing axes. The lane
+        column (`OpTable.lane`) routes collectives to the comm lane and
+        `pp_sendrecv` hops to the dedicated send/recv lane, so pipeline
+        hops overlap BOTH compute and collectives; at pp = 1 the third
+        lane is empty and the schedule is the original two-lane one.
         """
         if q in self._mk:
             return self._mk[q]
         comp, comm = self._durations(q, half=True)
         dur = comp + comm                      # disjoint supports
-        lanes = (~self.table.is_compute).astype(np.int8)
-        n = dur.shape[0]
-        tail = dur.shape[1:]
-        best = None
-        for s in range(0, min(MAX_STAGGER, max(n - 1, 0)) + 1):
-            order = sorted(((k, mb) for mb in (0, 1) for k in range(n)),
-                           key=lambda km: (km[0] + (s if km[1] else 0),
-                                           km[1]))
-            ready = [np.zeros(tail), np.zeros(tail)]
-            free = [np.zeros(tail), np.zeros(tail)]
-            for k, mb in order:
-                lane = int(lanes[k])
-                end = np.maximum(ready[mb], free[lane]) + dur[k]
-                ready[mb] = end
-                free[lane] = end
-            mk = np.maximum(ready[0], ready[1])
-            best = mk if best is None else np.minimum(best, mk)
-        self._mk[q] = best
-        return best
+        self._mk[q] = _lane_makespan(self.table.lane, dur, dur)
+        return self._mk[q]
 
     # ------------- TPOT -------------
     def best_iteration(self, q: int, dbo: bool) -> np.ndarray:
@@ -602,11 +626,14 @@ CHUNK_GRID = (128, 256, 512, 1024, 2048)
 SPLIT_FRACS = (0.125, 0.25, 0.375, 0.5, 0.625, 0.75)
 
 
-def _prefill_chunk_times(ptable: "optable.PrefillOpTable", cluster: Cluster,
-                         batch_global: int, sizes: Sequence[int],
-                         offsets: Sequence[int]) -> np.ndarray:
-    """No-overlap prefill-iteration time per chunk of one schedule,
-    shape (n_chunks,) — the batched `optimizer.prefill_iteration_time`."""
+def _prefill_chunk_durations(ptable: "optable.PrefillOpTable",
+                             cluster: Cluster, batch_global: int,
+                             sizes: np.ndarray, offsets: np.ndarray
+                             ) -> Tuple[np.ndarray, np.ndarray]:
+    """(comp, comm) per-op per-chunk duration rows of one chunk schedule,
+    each (n_ops, n_chunks) with zeros off their own lane — the prefill
+    counterpart of `GridEval._durations` (stage scale applied), built from
+    the table's chunk-polynomial closed forms."""
     s = np.asarray(sizes, float)
     o = np.asarray(offsets, float)
     rows = ptable.rows(batch_global, s)                    # (n_chunks,)
@@ -625,7 +652,34 @@ def _prefill_chunk_times(ptable: "optable.PrefillOpTable", cluster: Cluster,
     scale = ptable.stage_scale[:, None]
     comp = np.where(is_comp, comp, 0.0) * scale
     comm = np.where(is_comp, 0.0, _comm_times(ptable, cluster, m)) * scale
-    return comp.sum(axis=0) + comm.sum(axis=0)
+    return comp, comm
+
+
+def _prefill_chunk_times(ptable: "optable.PrefillOpTable", cluster: Cluster,
+                         batch_global: int, sizes: Sequence[int],
+                         offsets: Sequence[int], *,
+                         dbo: bool = False) -> np.ndarray:
+    """Prefill-iteration time per chunk of one schedule, shape (n_chunks,)
+    — the batched `optimizer.prefill_chunk_components` time. dbo=False is
+    the no-overlap sum (`optimizer.prefill_iteration_time`); dbo=True takes
+    best-of(no-overlap, three-lane DBO) per chunk, where each chunk splits
+    CAUSALLY into a leading ceil- and trailing floor-half microbatch
+    (`optimizer.prefill_iteration_dbo`); 1-token chunks stay no-overlap."""
+    comp, comm = _prefill_chunk_durations(ptable, cluster, batch_global,
+                                          sizes, offsets)
+    seq = comp.sum(axis=0) + comm.sum(axis=0)
+    if not dbo:
+        return seq
+    s_arr = np.asarray(sizes, np.int64)
+    o_arr = np.asarray(offsets, np.int64)
+    h2 = s_arr // 2
+    h1 = s_arr - h2
+    comp_a, comm_a = _prefill_chunk_durations(ptable, cluster, batch_global,
+                                              h1, o_arr)
+    comp_b, comm_b = _prefill_chunk_durations(ptable, cluster, batch_global,
+                                              h2, o_arr + h1)
+    mk = _lane_makespan(ptable.lane, comp_a + comm_a, comp_b + comm_b)
+    return np.where(s_arr >= 2, np.minimum(seq, mk), seq)
 
 
 def _chunked_formulas(t_dec, s_pre, m: int, batches, gen_len: int,
@@ -646,18 +700,20 @@ def batched_chunked_tpot_ttft(op_table: OpTable,
                               ptable: "optable.PrefillOpTable",
                               clusters: Sequence[Cluster],
                               batches: np.ndarray, scenario,
-                              chunk: int) -> Tuple[np.ndarray, np.ndarray]:
+                              chunk: int, *, dbo: bool = False
+                              ) -> Tuple[np.ndarray, np.ndarray]:
     """(TPOT, TTFT) of the chunked-prefill model over a (cluster, batch)
     grid, each (n_clusters, n_batches) — the batched
-    `optimizer.chunked_prefill_tpot` (matches it to 1e-9 relative)."""
+    `optimizer.chunked_prefill_tpot` (matches it to 1e-9 relative, with
+    and without the three-lane DBO schedule)."""
     ev = GridEval(op_table, clusters, [scenario], batches)
-    t_dec = ev.seq_components(1)[0][:, 0, :]               # (n_cl, n_b)
+    t_dec = ev.best_iteration(1, dbo)[:, 0, :]             # (n_cl, n_b)
     sizes, offsets = workload.chunk_schedule(scenario.prompt_len, chunk)
     # chunk-carrying DP lanes across all pipeline stages: n/(tp*pp) per
     # stage times pp microbatches in flight = n/tp, pp-invariant
     domains = max(op_table.n // op_table.tp, 1)
     s_pre = np.stack([_prefill_chunk_times(ptable, cl, domains, sizes,
-                                           offsets).sum()
+                                           offsets, dbo=dbo).sum()
                       for cl in clusters])                 # (n_cl,)
     tpot, ttft, _ = _chunked_formulas(t_dec, s_pre[:, None], len(sizes),
                                       batches[None, :], scenario.gen_len,
@@ -671,7 +727,9 @@ def _as_decode_point(op) -> Optional["optimizer.PrefillOperatingPoint"]:
         return None
     return optimizer.PrefillOperatingPoint(
         mode="decode", batch=op.batch, tpot=op.tpot, ttft=0.0,
-        throughput=op.throughput, tp=op.tp, ep=op.ep, pp=op.pp)
+        throughput=op.throughput, tp=op.tp, ep=op.ep, pp=op.pp,
+        used_dbo=op.used_dbo, exposed_comm=op.exposed_comm,
+        t_compute=op.t_compute, t_comm=op.t_comm)
 
 
 def _chunk_candidates(prompt_len: int, chunk_grid: Sequence[int]) -> List[int]:
@@ -679,17 +737,20 @@ def _chunk_candidates(prompt_len: int, chunk_grid: Sequence[int]) -> List[int]:
 
 
 def _sweep_chunked(clusters, cfg, scenarios, tp, pp, ep_r, dtype,
-                   chunk_grid):
+                   chunk_grid, dbo=False):
     """Joint (batch, chunk) search of the chunked-prefill mode.
 
     For each (cluster, scenario): TPOT/TTFT over the batch grid x chunk
     candidates via the closed-form tables (see
-    `optimizer.chunked_prefill_tpot` for the load-weighted iteration
+    `optimizer.chunked_prefill_components` for the load-weighted iteration
     model). Throughput is B_eff / TPOT with B_eff = min(B, domains *
     gen_len / n_chunks) — past that batch the prefill lanes cannot refill
-    the decode batch and slots idle. The winner is re-derived through the
-    scalar path; knife-edge cells (batched feasibility within float
-    rounding of the SLO) may return a point within 1e-9 of the budget.
+    the decode batch and slots idle. dbo=True times decode iterations and
+    prefill chunks with the three-lane (max,+) schedule wherever it beats
+    no-overlap (chunk A2A/AR hides under the half-chunks' big GEMMs).
+    The winner is re-derived through the scalar path; knife-edge cells
+    (batched feasibility within float rounding of the SLO) may return a
+    point within 1e-9 of the budget.
     """
     from repro.core import optimizer
 
@@ -701,9 +762,22 @@ def _sweep_chunked(clusters, cfg, scenarios, tp, pp, ep_r, dtype,
     if batches.size == 0:
         return [[None] * len(scenarios) for _ in clusters]
     ev = GridEval(table, clusters, scenarios, batches)
-    t_dec_all = ev.seq_components(1)[0]                    # (n_cl, n_sc, n_b)
+    t_dec_all = ev.best_iteration(1, dbo)                  # (n_cl, n_sc, n_b)
     index = {int(b): i for i, b in enumerate(batches)}
     domains = max(n // tp, 1)
+    pre_cache: Dict[Tuple[int, int, int], float] = {}
+
+    def s_pre_of(ci, prompt_len, c):
+        """Summed per-chunk prefill time, cached per (cluster, prompt,
+        chunk) — scenarios sharing a prompt length (e.g. a TTFT sweep)
+        reuse one DBO makespan evaluation."""
+        key = (ci, prompt_len, c)
+        if key not in pre_cache:
+            sizes, offsets = workload.chunk_schedule(prompt_len, c)
+            pre_cache[key] = float(_prefill_chunk_times(
+                ptable, clusters[ci], domains, sizes, offsets,
+                dbo=dbo).sum())
+        return pre_cache[key]
 
     out: List[List[Optional[optimizer.PrefillOperatingPoint]]] = []
     for ci, cl in enumerate(clusters):
@@ -713,10 +787,8 @@ def _sweep_chunked(clusters, cfg, scenarios, tp, pp, ep_r, dtype,
             ttft_budget = sc.ttft_ms * 1e-3 if sc.ttft_ms else float("inf")
             best = None                     # (thr, b, chunk, b_eff)
             for c in _chunk_candidates(sc.prompt_len, chunk_grid):
-                sizes, offsets = workload.chunk_schedule(sc.prompt_len, c)
-                m = len(sizes)
-                s_pre = float(_prefill_chunk_times(ptable, cl, domains,
-                                                   sizes, offsets).sum())
+                m = len(workload.chunk_schedule(sc.prompt_len, c)[0])
+                s_pre = s_pre_of(ci, sc.prompt_len, c)
                 for b in grids[ci, si]:
                     t_dec = float(t_dec_all[ci, si, index[b]])
                     tpot, ttft, b_eff = (
@@ -733,11 +805,12 @@ def _sweep_chunked(clusters, cfg, scenarios, tp, pp, ep_r, dtype,
             _, b, c, b_eff = best
             p = ServingPoint(batch_global=b, context=sc.context, tp=tp,
                              ep=ep_r, n_devices=n, dtype=dtype, pp=pp)
-            tpot_s, ttft_s = optimizer.chunked_prefill_tpot(cfg, p, cl, sc,
-                                                            c)
+            tpot_s, ttft_s, ect, tc, tm = optimizer.chunked_prefill_components(
+                cfg, p, cl, sc, c, dbo=dbo)
             row.append(optimizer.PrefillOperatingPoint(
                 mode="chunked", batch=b, tpot=tpot_s, ttft=ttft_s,
-                throughput=b_eff / tpot_s, chunk=c, tp=tp, ep=ep_r, pp=pp))
+                throughput=b_eff / tpot_s, chunk=c, tp=tp, ep=ep_r, pp=pp,
+                used_dbo=dbo, exposed_comm=ect, t_compute=tc, t_comm=tm))
         out.append(row)
     return out
 
@@ -797,7 +870,8 @@ def _disagg_pool_candidates(clusters, cfg, n_pool, tp, pp, dtype):
     return [(tp, pp, ep)]
 
 
-def _sweep_disagg(clusters, cfg, scenarios, tp, pp, dtype, split_fracs):
+def _sweep_disagg(clusters, cfg, scenarios, tp, pp, dtype, split_fracs,
+                  dbo=False):
     """Disaggregated-prefill search: sweep the prefill/decode split ratio,
     each pool resolving its OWN (tp, pp, ep) mapping.
 
@@ -808,15 +882,23 @@ def _sweep_disagg(clusters, cfg, scenarios, tp, pp, dtype, split_fracs):
     latency-bound and wants large tp, decode is throughput-bound and wants
     small tp). The prefill pool runs whole-prompt prefill, one prompt per
     DP domain per pipeline slot. TTFT = prefill pass + KV-cache handoff to
-    the decode pool (alpha-beta over one XPU's link, at the cluster's link
-    utilization); throughput is the balanced pipeline rate
-    min(decode tokens/s, prefill request rate * gen_len).
+    the decode pool (alpha-beta at the PREFILL POOL's latency regime —
+    `cl_p._ab()`, so an intra-node-sized pool pays intra-node alphas —
+    over one XPU's link at the cluster's bandwidth); throughput is the
+    balanced pipeline rate min(decode tokens/s, prefill request rate *
+    gen_len). dbo=True applies the three-lane (max,+) schedule to BOTH
+    pools: the decode search overlaps its iterations, the whole-prompt
+    pass splits into two causal half-prompt microbatches.
     """
     from repro.core import optimizer
 
     n = clusters[0].n_xpus
     out: List[List[Optional[optimizer.PrefillOperatingPoint]]] = \
         [[None] * len(scenarios) for _ in clusters]
+    # whole-prompt pass times, keyed (pool mapping, cluster, prompt):
+    # scenarios sharing a prompt length (a TTFT sweep) reuse one pass —
+    # and, under dbo, one (max,+) half-prompt makespan evaluation
+    pass_cache: Dict[Tuple, float] = {}
     auto = tp == "auto" or pp == "auto"
     align = 1 if auto else tp * pp
     for n_p in _split_candidates(n, align, split_fracs):
@@ -838,19 +920,20 @@ def _sweep_disagg(clusters, cfg, scenarios, tp, pp, dtype, split_fracs):
             if not dec_cands:
                 continue
             dec_grid = _merge_best([
-                _sweep_fixed(dec_pools, cfg, scenarios, dbo=False, sd=None,
+                _sweep_fixed(dec_pools, cfg, scenarios, dbo=dbo, sd=None,
                              tp=t, pp=q, ep_r=e, dtype=dtype)
                 for t, q, e in dec_cands])
         else:
             dec_grid = sweep_max_throughput(dec_pools, cfg, scenarios,
-                                            tp=tp, pp=pp, dtype=dtype)
+                                            tp=tp, pp=pp, dtype=dtype,
+                                            dbo=dbo)
         for tp_p, pp_p, ep_p in pre_cands:
             domains_p = max(n_p // tp_p, 1)   # prompts in flight (all stages)
             ptable = optable.prefill_op_table(cfg, tp_p, ep_p, n_p, dtype,
                                               pp=pp_p)
             for ci, cl in enumerate(clusters):
                 cl_p = _subcluster(cl, n_p)
-                ab = cl._ab()
+                ab = cl_p._ab()
                 for si, sc in enumerate(scenarios):
                     dec = dec_grid[ci][si]
                     if dec is None:
@@ -865,8 +948,11 @@ def _sweep_disagg(clusters, cfg, scenarios, tp, pp, dtype, split_fracs):
                     if workload.max_batch_by_memory(
                             cfg, p_pre, cl.xpu.hbm_cap) < domains_p:
                         continue
-                    t_p = float(_prefill_chunk_times(ptable, cl_p, domains_p,
-                                                     [L], [0])[0])
+                    ck = (n_p, tp_p, pp_p, ep_p, ci, L)
+                    if ck not in pass_cache:
+                        pass_cache[ck] = float(_prefill_chunk_times(
+                            ptable, cl_p, domains_p, [L], [0], dbo=dbo)[0])
+                    t_p = pass_cache[ck]
                     t_xfer = (ab.alpha0
                               + workload.kv_cache_bytes_per_request(cfg, L)
                               / (ab.link_utilization * cl.link_bw))
@@ -883,7 +969,9 @@ def _sweep_disagg(clusters, cfg, scenarios, tp, pp, dtype, split_fracs):
                             n_prefill_xpus=n_p, n_decode_xpus=n_d,
                             tp=dec.tp, ep=dec.ep, pp=dec.pp,
                             tp_prefill=tp_p, pp_prefill=pp_p,
-                            ep_prefill=ep_p)
+                            ep_prefill=ep_p, used_dbo=dec.used_dbo,
+                            exposed_comm=dec.exposed_comm,
+                            t_compute=dec.t_compute, t_comm=dec.t_comm)
     return out
 
 
@@ -892,6 +980,7 @@ def sweep_prefill(clusters: Sequence[Cluster], cfg: ModelConfig,
                   tp: Union[int, str] = 1, pp: Union[int, str] = 1,
                   ep: Optional[int] = None,
                   dtype: str = "fp8",
+                  dbo: bool = False,
                   chunk_grid: Sequence[int] = CHUNK_GRID,
                   split_fracs: Sequence[float] = SPLIT_FRACS
                   ) -> List[List[Optional["PrefillOperatingPoint"]]]:
@@ -904,6 +993,13 @@ def sweep_prefill(clusters: Sequence[Cluster], cfg: ModelConfig,
                  batch x chunk-size search under TPOT and TTFT SLOs);
       'disagg'   cluster split into prefill/decode pools (split ratio
                  swept; throughput capped by the balanced pipeline rate).
+
+    dbo=True times every mode with the three-lane (max,+) DBO schedule
+    wherever it beats no-overlap: decode iterations split into two B/2
+    microbatches, prefill chunks and the disagg whole-prompt pass into two
+    causal half-chunks — A2A/AR hide under the other microbatch's GEMMs,
+    pp hops under both lanes. dbo=False (the default) is the no-overlap
+    timing, byte-identical to the pre-DBO search.
 
     All three modes accept tp="auto" / pp="auto": the (tp, pp, ep =
     n/(tp*pp)) mapping axes are searched per (cluster, scenario) cell
@@ -919,7 +1015,7 @@ def sweep_prefill(clusters: Sequence[Cluster], cfg: ModelConfig,
                          "group clusters by n_xpus")
     if mode == "decode":
         grid = sweep_max_throughput(clusters, cfg, scenarios, tp=tp, pp=pp,
-                                    ep=ep, dtype=dtype)
+                                    ep=ep, dtype=dtype, dbo=dbo)
         return [[_as_decode_point(op) for op in row] for row in grid]
     if mode not in ("chunked", "disagg"):
         raise ValueError(f"unknown prefill mode {mode!r}; expected "
@@ -939,15 +1035,15 @@ def sweep_prefill(clusters: Sequence[Cluster], cfg: ModelConfig,
             raise ValueError("disagg mode resolves EP per pool; pass "
                              "ep=None")
         return _sweep_disagg(clusters, cfg, scenarios, tp, pp, dtype,
-                             split_fracs)
+                             split_fracs, dbo=dbo)
     if tp == "auto" or pp == "auto":
         if ep is not None:
             raise ValueError("auto mapping search resolves ep = n/(tp*pp) "
                              "per candidate; pass ep=None")
         return _merge_best([
             _sweep_chunked(clusters, cfg, scenarios, t, q, e, dtype,
-                           chunk_grid)
+                           chunk_grid, dbo=dbo)
             for t, q, e in _auto_candidates(clusters, cfg, dtype, tp, pp)])
     ep_r = _resolve_parallelism(cfg, n, tp, pp, ep)
     return _sweep_chunked(clusters, cfg, scenarios, tp, pp, ep_r, dtype,
-                          chunk_grid)
+                          chunk_grid, dbo=dbo)

@@ -25,6 +25,20 @@ from repro.core.compute_model import Op
 
 BYTES = {"bf16": 2, "fp8": 1, "fp16": 2, "f32": 4}
 
+# scheduler lane of each communication kind (see `repro.core.overlap`):
+# collectives (expert A2A, TP all-reduce) contend for the fabric on the
+# "comm" lane; `pp_sendrecv` hops ride the dedicated point-to-point
+# "sendrecv" lane, so pipeline hops overlap BOTH compute and collectives
+# under the (max,+) DBO schedule (1F1B-style decode pipelining)
+COMM_LANES = {"a2a": "comm", "ar": "comm", "pp_sendrecv": "sendrecv"}
+
+
+def op_lane(kind: str) -> str:
+    """Scheduler lane of an `Op.kind` — the single source of truth shared
+    by the scalar scheduler (`overlap.to_timed`) and the vectorized lane
+    column (`optable.OpTable.lane`)."""
+    return "compute" if kind == "compute" else COMM_LANES[kind]
+
 
 @dataclass(frozen=True)
 class ServingPoint:

@@ -1,4 +1,4 @@
-"""Hypothesis property tests for the DBO two-lane scheduler.
+"""Hypothesis property tests for the DBO three-lane scheduler.
 
 Kept separate from test_overlap.py so a missing `hypothesis` (an optional
 [dev] dependency) skips this module instead of erroring the whole suite at
@@ -10,10 +10,10 @@ pytest.importorskip("hypothesis")
 
 from hypothesis import given, settings, strategies as st
 
-from repro.core.overlap import TimedOp, simulate_two_lane
+from repro.core.overlap import LANES, TimedOp, simulate_lanes
 
 
-@given(st.lists(st.tuples(st.sampled_from(["compute", "comm"]),
+@given(st.lists(st.tuples(st.sampled_from(LANES),
                           st.floats(0.001, 10.0)), min_size=1, max_size=30))
 @settings(max_examples=200, deadline=None)
 def test_schedule_invariants(ops):
@@ -22,10 +22,11 @@ def test_schedule_invariants(ops):
     preserved."""
     a = [TimedOp(f"a{i}", l, d, 0) for i, (l, d) in enumerate(ops)]
     b = [TimedOp(f"b{i}", l, d, 1) for i, (l, d) in enumerate(ops)]
-    res = simulate_two_lane(a, b)
+    res = simulate_lanes(a, b)
     stream_total = sum(d for _, d in ops)
     assert res.makespan >= res.compute_busy - 1e-9
     assert res.makespan >= res.comm_busy - 1e-9
+    assert res.makespan >= res.sendrecv_busy - 1e-9
     assert res.makespan >= stream_total - 1e-9
     assert res.makespan <= 2 * stream_total + 1e-9
     # per-microbatch op order is preserved
@@ -35,7 +36,7 @@ def test_schedule_invariants(ops):
         for i in range(1, len(ends)):
             assert starts[i] >= ends[i - 1] - 1e-9
     # lanes never run two ops at once
-    for lane in ("compute", "comm"):
+    for lane in LANES:
         lane_ops = sorted(
             [(s, e) for (n, m, s, e) in res.timeline
              for op in [next(o for o in (a + b)

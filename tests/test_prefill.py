@@ -173,6 +173,133 @@ def test_decode_only_byte_identical_to_committed_fig10():
 
 
 # ---------------------------------------------------------------------------
+# 2b. DBO inside the prefill modes (three-lane (max,+) schedule)
+# ---------------------------------------------------------------------------
+
+def test_chunked_dbo_batched_vs_scalar_all_topologies(dsv3_small):
+    """Chunked-prefill DBO: batched == scalar at 1e-9 on all four Table-3
+    topologies at pp > 1 (the acceptance bar) — decode iterations split
+    into B/2 microbatches, chunks into causal half-chunks, pp hops on the
+    dedicated send/recv lane on both paths."""
+    tp, pp = 2, 2
+    ep = 64 // (tp * pp)
+    table = optable.op_table(dsv3_small, tp, ep, 64, pp=pp)
+    ptable = optable.prefill_op_table(dsv3_small, tp, ep, 64, pp=pp)
+    sc = Scenario(40.0, 2048 + 512, prompt_len=2048, ttft_ms=2000.0)
+    batches = np.array([64, 1024, 8192])
+    for topo in ("scale-up", "scale-out", "torus", "fullmesh"):
+        cl = make_cluster(topo, 64, H100)
+        for chunk in (128, 512, 999):       # odd chunk: uneven causal halves
+            got_tpot, got_ttft = sweep.batched_chunked_tpot_ttft(
+                table, ptable, [cl], batches, sc, chunk, dbo=True)
+            for bi, b in enumerate(batches):
+                p = ServingPoint(batch_global=int(b), context=sc.context,
+                                 tp=tp, ep=ep, n_devices=64, pp=pp)
+                want_tpot, want_ttft = optimizer.chunked_prefill_tpot(
+                    dsv3_small, p, cl, sc, chunk, dbo=True)
+                np.testing.assert_allclose(got_tpot[0, bi], want_tpot,
+                                           rtol=1e-9,
+                                           err_msg=f"{topo} c{chunk}")
+                np.testing.assert_allclose(got_ttft[0, bi], want_ttft,
+                                           rtol=1e-9,
+                                           err_msg=f"{topo} c{chunk}")
+
+
+def test_chunked_dbo_never_worse_than_no_overlap(dsv3_small):
+    """DBO TPOT <= no-overlap TPOT on EVERY (cluster, batch, chunk) cell:
+    each component is best-of(no-overlap, monotone (max,+) schedule), so
+    overlap can only help."""
+    sc = Scenario(40.0, 4096 + 512, prompt_len=4096, ttft_ms=0.0)
+    table = optable.op_table(dsv3_small, 1, 64, 64)
+    ptable = optable.prefill_op_table(dsv3_small, 1, 64, 64)
+    batches = np.array([1, 64, 1024, 16384])
+    for topo in ("scale-up", "scale-out", "torus", "fullmesh"):
+        cl = make_cluster(topo, 64, H100)
+        for chunk in (1, 128, 2048):
+            t0, f0 = sweep.batched_chunked_tpot_ttft(table, ptable, [cl],
+                                                     batches, sc, chunk)
+            t1, f1 = sweep.batched_chunked_tpot_ttft(table, ptable, [cl],
+                                                     batches, sc, chunk,
+                                                     dbo=True)
+            assert (t1 <= t0 + 1e-15).all(), (topo, chunk)
+            assert (f1 <= f0 + 1e-15).all(), (topo, chunk)
+
+
+def test_prefill_dbo_gains_on_bandwidth_constrained_fabric(dsv3_small):
+    """The motivating trend: on a bandwidth-constrained fabric the chunk's
+    A2A hides under the half-chunks' GEMMs, so DBO strictly improves the
+    chunked TPOT; the searched operating point is never worse in any
+    mode."""
+    cl = make_cluster("scale-out", 64, H100)
+    sc = Scenario(40.0, 4608, prompt_len=4096, ttft_ms=2000.0)
+    table = optable.op_table(dsv3_small, 1, 64, 64)
+    ptable = optable.prefill_op_table(dsv3_small, 1, 64, 64)
+    batches = np.array([4096])
+    t0, _ = sweep.batched_chunked_tpot_ttft(table, ptable, [cl], batches,
+                                            sc, 512)
+    t1, _ = sweep.batched_chunked_tpot_ttft(table, ptable, [cl], batches,
+                                            sc, 512, dbo=True)
+    assert t1[0, 0] < t0[0, 0]
+    for mode in ("decode", "chunked", "disagg"):
+        a = sweep.sweep_prefill([cl], dsv3_small, [sc], mode=mode)[0][0]
+        b = sweep.sweep_prefill([cl], dsv3_small, [sc], mode=mode,
+                                dbo=True)[0][0]
+        assert a is not None and b is not None
+        assert b.throughput >= a.throughput - 1e-12, mode
+        assert b.used_dbo and not a.used_dbo
+
+
+def test_decode_dbo_pinned_to_committed_fig11():
+    """Decode-path DBO numbers must not move under the three-lane
+    generalization: at pp = 1 the sendrecv lane is empty and the schedule
+    must reproduce the committed fig11 'dbo' curve byte-identically."""
+    path = os.path.join(ROOT, "bench_results", "fig11_sw_opts.json")
+    with open(path) as f:
+        committed = json.load(f)
+    cfg = get_arch("deepseek-v3")
+    cl = make_cluster("scale-up", 64, H100, link_bw=150e9)
+    for want in committed["dbo/bw150"]:
+        if want["thpt_per_xpu"] == 0.0:
+            continue
+        op = optimizer.best_of_opts(cl, cfg,
+                                    Scenario(want["tpot_ms"], 512), "dbo")
+        assert op.throughput / 64 == want["thpt_per_xpu"]
+        assert op.used_dbo == want["used_dbo"]
+
+
+# ---------------------------------------------------------------------------
+# disagg KV-handoff alpha (pool-local latency regime)
+# ---------------------------------------------------------------------------
+
+def test_disagg_kv_handoff_uses_pool_alpha(dsv3_small):
+    """Regression (ISSUE 5 satellite): the KV-handoff alpha must come from
+    the PREFILL POOL (`cl_p._ab()`), not the whole cluster — an 8-XPU pool
+    sits inside one node and pays intra-node latencies. Pins the corrected
+    TTFT against the closed form."""
+    from repro.core.alphabeta import CLUSTER, INTRA_NODE
+
+    cl = make_cluster("torus", 64, H100)
+    sc = Scenario(40.0, 4608, prompt_len=4096, ttft_ms=2000.0)
+    op = sweep.sweep_prefill([cl], dsv3_small, [sc], mode="disagg",
+                             split_fracs=(0.125,))[0][0]
+    assert op is not None and op.n_prefill_xpus == 8
+    cl_p = sweep._subcluster(cl, 8)
+    assert cl_p._ab() is INTRA_NODE
+    ptable = optable.prefill_op_table(dsv3_small, op.tp_prefill,
+                                      op.ep_prefill, 8, pp=op.pp_prefill)
+    domains = 8 // op.tp_prefill
+    t_p = float(sweep._prefill_chunk_times(ptable, cl_p, domains,
+                                           [sc.prompt_len], [0])[0])
+    kv = workload.kv_cache_bytes_per_request(dsv3_small, sc.prompt_len)
+    want = t_p + INTRA_NODE.alpha0 + kv / (INTRA_NODE.link_utilization
+                                           * cl.link_bw)
+    wrong = t_p + CLUSTER.alpha0 + kv / (CLUSTER.link_utilization
+                                         * cl.link_bw)
+    assert op.ttft == pytest.approx(want, rel=1e-12)
+    assert op.ttft != pytest.approx(wrong, rel=1e-9)
+
+
+# ---------------------------------------------------------------------------
 # serving-mode search
 # ---------------------------------------------------------------------------
 
