@@ -14,8 +14,15 @@ pass):
   budget   now <= the module's own `budget_s` (written by benchmarks/run.py
            from BUDGETS_S) — an absolute per-benchmark ceiling, so modules
            that post-date the seed timings (fig_parallelism, fig_pipeline,
-           fig_prefill_overlap) are gated too, and a legitimate baseline
-           refresh cannot smuggle in an unbounded slowdown.
+           fig_prefill_overlap, fig_failures) are gated too, and a
+           legitimate baseline refresh cannot smuggle in an unbounded
+           slowdown.
+
+Both gates measure wall-clock on a shared CI runner, so a single noisy
+neighbor can trip them without any code regression: a module that fails
+is re-run once (fresh `benchmarks.run <module>` subprocess, which
+rewrites the timing JSON) and only fails the gate if the re-run misses
+too. `--no-retry` restores single-shot behavior for local bisection.
 
   --update-baseline rewrites the baseline file with the current run's
   timings (use after a change that legitimately grows the grid — e.g. the
@@ -25,10 +32,52 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import shutil
+import subprocess
 import sys
 
 FLOOR_S = 5.0
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _load_modules(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)["modules"]
+
+
+def _gate(name: str, row: dict, base: dict, max_ratio: float):
+    """Evaluate one module's gates. Returns (now, limits, bad) where
+    `limits` is [(kind, ceiling_s)] and `bad` the violated ones, or None
+    when the module was not freshly timed this run."""
+    now = row.get("now_s")
+    was = base.get(name, {}).get("now_s")
+    budget = row.get("budget_s")
+    if now is None or now == was:
+        return None         # not timed this run (merged from baseline)
+    limits = []
+    if was is not None:
+        limits.append(("ratio", max(max_ratio * was, was + FLOOR_S)))
+    if budget is not None:
+        limits.append(("budget", float(budget)))
+    if not limits:
+        return None
+    bad = [f"{what} {lim:.2f}s" for what, lim in limits if now > lim]
+    return now, was, limits, bad
+
+
+def _retry(name: str, current_path: str) -> bool:
+    """Re-run one module through the harness (which rewrites the timing
+    JSON at `current_path`). True if the subprocess completed."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (os.path.join(REPO_ROOT, "src"),
+                    env.get("PYTHONPATH")) if p)
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", name],
+        cwd=REPO_ROOT, env=env,
+        stdout=subprocess.DEVNULL, stderr=subprocess.DEVNULL)
+    return proc.returncode == 0
 
 
 def main(argv=None) -> int:
@@ -36,6 +85,9 @@ def main(argv=None) -> int:
     ap.add_argument("--baseline", required=True)
     ap.add_argument("--current", required=True)
     ap.add_argument("--max-ratio", type=float, default=2.0)
+    ap.add_argument("--no-retry", action="store_true",
+                    help="fail on the first miss instead of re-running "
+                         "the module once (wall-clock gates are noisy)")
     ap.add_argument("--update-baseline", action="store_true",
                     help="rewrite --baseline with the current timings "
                          "instead of gating (commit the result)")
@@ -46,27 +98,23 @@ def main(argv=None) -> int:
         print(f"baseline rewritten: {args.current} -> {args.baseline}")
         return 0
 
-    with open(args.baseline) as f:
-        base = json.load(f)["modules"]
-    with open(args.current) as f:
-        cur = json.load(f)["modules"]
+    base = _load_modules(args.baseline)
+    cur = _load_modules(args.current)
 
     failures = []
-    for name, row in cur.items():
-        now = row.get("now_s")
-        was = base.get(name, {}).get("now_s")
-        budget = row.get("budget_s")
-        if now is None or now == was:
-            continue        # not timed this run (merged from baseline)
-        limits = []
-        if was is not None:
-            limits.append(("ratio", max(args.max_ratio * was,
-                                        was + FLOOR_S)))
-        if budget is not None:
-            limits.append(("budget", float(budget)))
-        if not limits:
+    for name in cur:
+        res = _gate(name, cur[name], base, args.max_ratio)
+        if res is None:
             continue
-        bad = [f"{what} {lim:.2f}s" for what, lim in limits if now > lim]
+        now, was, limits, bad = res
+        if bad and not args.no_retry:
+            print(f"[retry] {name}: now {now:.2f}s over "
+                  f"{', '.join(bad)} — re-running once", flush=True)
+            if _retry(name, args.current):
+                row = _load_modules(args.current).get(name, cur[name])
+                res2 = _gate(name, row, base, args.max_ratio)
+                if res2 is not None:
+                    now, was, limits, bad = res2
         status = "FAIL" if bad else "ok"
         base_str = f"baseline {was:.2f}s -> " if was is not None else ""
         print(f"[{status}] {name}: {base_str}now {now:.2f}s "
@@ -75,8 +123,8 @@ def main(argv=None) -> int:
             failures.append(f"{name} ({'; '.join(bad)})")
     if failures:
         print(f"\nsweep timing regressed (>{args.max_ratio}x + {FLOOR_S}s "
-              f"floor, or over budget) in: {', '.join(failures)}",
-              file=sys.stderr)
+              f"floor, or over budget; after one retry) in: "
+              f"{', '.join(failures)}", file=sys.stderr)
         return 1
     print("\nsweep timings within budget")
     return 0

@@ -87,6 +87,20 @@ compares the fixed-(tp, ep) search against the full triple search on
 H100 (where pp trades KV headroom against hop latency) and on 16 GB
 TPU v5e, where pp flips DeepSeek-V3's low-tp mappings from HBM-pruned
 to feasible and wins the cost-per-throughput ranking.
+
+Degraded-fabric serving
+-----------------------
+`fig_failures` re-scores the fig14 topology ranking with the throughput
+numerator replaced by the expected steady-state throughput under the
+stationary component-failure distribution: `Cluster.with_faults`
+derates the fabric per topology (torus detours, full-mesh 2-hop relay,
+scale-up plane loss, scale-out node loss), `sweep.degraded_max_throughput`
+re-runs the (tp, pp, ep) search on the survivor subcluster,
+`optimizer.degrade_policy` arbitrates keep-mapping vs pay-remap-downtime,
+and `core.availability` enumerates multi-fault states with component
+counts derived from the TCO link/switch inventory (MTBF/MTTR defaults
+in docs/failure_model.md). The zero-fault path is byte-identical to
+the healthy model, so every other figure JSON is unaffected.
 """
 from __future__ import annotations
 
@@ -114,6 +128,7 @@ MODULES = [
     "benchmarks.fig_prefill_overlap",
     "benchmarks.fig_parallelism",
     "benchmarks.fig_pipeline",
+    "benchmarks.fig_failures",
     "benchmarks.roofline",
 ]
 
@@ -149,6 +164,7 @@ BUDGETS_S = {
     "benchmarks.fig_parallelism": 60,
     "benchmarks.fig_pipeline": 120,
     "benchmarks.fig_prefill_overlap": 120,
+    "benchmarks.fig_failures": 180,
 }
 
 

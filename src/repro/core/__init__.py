@@ -15,20 +15,26 @@ methodology for MoE LLM serving networks.
   sweep        batched operating-point search (vectorized alpha-beta + DBO,
                chunked / disaggregated prefill serving modes, hybrid
                (tp, pp, ep) parallelism-mapping search)
-  optimizer    max-throughput-under-SLO sweep
+  optimizer    max-throughput-under-SLO sweep (+ remap-vs-degrade policy)
   pareto       performance-vs-cost sweep + Pareto frontier (Fig 17)
   future       Blackwell/Rubin saturating-bandwidth projection (Fig 18/19)
+  availability component MTBF/MTTR -> stationary expected throughput
+               under the per-topology fault derating (FaultSet)
 """
 from repro.core.alphabeta import AlphaBeta, INTRA_NODE, INTER_NODE, CLUSTER
+from repro.core.availability import (AvailabilityModel, ComponentClass,
+                                     build_availability)
 from repro.core.hardware import (H100, BLACKWELL, RUBIN, TPU_V5E, GENERATIONS,
                                  XPUSpec)
 from repro.core.optimizer import (Scenario, SCENARIOS, best_of_opts,
                                   best_of_opts_scalar, max_throughput,
                                   max_throughput_prefill,
-                                  max_throughput_scalar,
-                                  PrefillOperatingPoint)
+                                  max_throughput_scalar, degrade_policy,
+                                  DegradedPlan, PrefillOperatingPoint)
 from repro.core.specdec import SpecDecConfig
-from repro.core.sweep import parallelism_candidates
-from repro.core.topology import Cluster, make_cluster, TOPOLOGIES
-from repro.core.tco import cluster_tco, throughput_per_cost
+from repro.core.sweep import degraded_max_throughput, parallelism_candidates
+from repro.core.topology import (Cluster, FaultSet, make_cluster,
+                                 TOPOLOGIES)
+from repro.core.tco import (availability_adjusted_throughput_per_cost,
+                            cluster_tco, throughput_per_cost)
 from repro.core.workload import ServingPoint

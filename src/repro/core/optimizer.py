@@ -456,6 +456,89 @@ def max_throughput_prefill(cluster: Cluster, cfg: ModelConfig,
                                **kw)[0][0]
 
 
+# ---------------------------------------------------------------------------
+# degraded-fabric serving policy (remap vs. degrade)
+# ---------------------------------------------------------------------------
+
+# Default re-shard downtime: re-sharding to a new (tp, pp, ep) mapping
+# reloads every device's weight shard and drains in-flight requests.
+# Pulling ~10-20 GB/device over a shared frontend at tens of GB/s plus
+# drain/warmup lands in the tens-of-seconds-to-minutes band reported for
+# production reconfigurations; 120 s is the conservative default, and the
+# policy exposes it as a knob (docs/failure_model.md).
+REMAP_DOWNTIME_S = 120.0
+# Horizon the remap downtime amortizes over: the expected time the cluster
+# serves in the new degraded state before the failed component repairs
+# (~ MTTR of the cheap components; availability.py carries per-class MTTRs).
+DEGRADED_HORIZON_S = 4 * 3600.0
+
+
+@dataclass(frozen=True)
+class DegradedPlan:
+    """Outcome of the remap-vs-degrade decision for one fault state.
+
+    action 'keep'  — serve the pre-fault (tp, pp, ep) mapping on the
+                     survivor cluster at a smaller batch (no downtime);
+           'remap' — pay `remap_downtime_s` of zero service to re-shard
+                     into the best degraded mapping;
+           'down'  — no feasible operating point survives the faults.
+    `effective_throughput` is tokens/s averaged over `horizon_s`
+    (downtime amortized in), the quantity the policy maximizes."""
+    action: str
+    point: Optional[OperatingPoint]
+    keep_point: Optional[OperatingPoint]
+    remap_point: Optional[OperatingPoint]
+    remap_downtime_s: float
+    horizon_s: float
+    effective_throughput: float
+
+
+def degrade_policy(cluster: Cluster, cfg: ModelConfig, scenario: Scenario,
+                   faults, *, baseline: Optional[OperatingPoint] = None,
+                   remap_downtime_s: float = REMAP_DOWNTIME_S,
+                   horizon_s: float = DEGRADED_HORIZON_S,
+                   tp: Union[int, str] = "auto", pp: Union[int, str] = 1,
+                   dtype: str = "fp8", dbo: bool = False,
+                   sd: Optional[SpecDecConfig] = None) -> DegradedPlan:
+    """Graceful-degradation decision on a fault: keep the current mapping
+    and serve a smaller batch under the same SLO, or pay a re-shard
+    downtime for the better degraded operating point.
+
+    `baseline` is the pre-fault operating point whose mapping the 'keep'
+    arm preserves (computed fresh via the healthy search when omitted).
+    The 'remap' arm re-runs the full (tp, pp, ep) search on the survivor
+    cluster (`sweep.degraded_max_throughput`) and is charged
+    `remap_downtime_s` of lost service amortized over `horizon_s` —
+    the repair-time-scale the degraded state persists for."""
+    from repro.core import sweep
+
+    if baseline is None:
+        baseline = max_throughput(cluster, cfg, scenario, dbo=dbo, sd=sd,
+                                  tp=tp, pp=pp, dtype=dtype)
+    keep_pt = None
+    if baseline is not None:
+        keep_pt = sweep.degraded_max_throughput(
+            cluster, cfg, scenario, faults=faults, dtype=dtype, dbo=dbo,
+            sd=sd, mapping=(baseline.tp, baseline.pp, baseline.ep))
+    remap_pt = sweep.degraded_max_throughput(
+        cluster, cfg, scenario, faults=faults, tp=tp, pp=pp, dtype=dtype,
+        dbo=dbo, sd=sd)
+    keep_thr = keep_pt.throughput if keep_pt is not None else 0.0
+    remap_eff = 0.0
+    if remap_pt is not None:
+        remap_eff = remap_pt.throughput * max(
+            1.0 - remap_downtime_s / max(horizon_s, 1e-9), 0.0)
+    if keep_pt is None and remap_pt is None:
+        return DegradedPlan("down", None, None, None, remap_downtime_s,
+                            horizon_s, 0.0)
+    # ties keep the no-downtime arm — remapping is never free
+    if keep_thr >= remap_eff:
+        return DegradedPlan("keep", keep_pt, keep_pt, remap_pt,
+                            remap_downtime_s, horizon_s, keep_thr)
+    return DegradedPlan("remap", remap_pt, keep_pt, remap_pt,
+                        remap_downtime_s, horizon_s, remap_eff)
+
+
 def best_of_opts_scalar(cluster: Cluster, cfg: ModelConfig,
                         scenario: Scenario, opts: str = "dbo+sd",
                         **kw) -> Optional[OperatingPoint]:

@@ -975,6 +975,90 @@ def _sweep_disagg(clusters, cfg, scenarios, tp, pp, dtype, split_fracs,
     return out
 
 
+# ---------------------------------------------------------------------------
+# failure-aware re-search (degraded-fabric serving)
+# ---------------------------------------------------------------------------
+
+def degraded_subcluster(cl: Cluster, faults) -> Optional[Cluster]:
+    """`cl` shrunk to the fault set's survivor pool with the link/plane
+    derates attached, or None when no XPU survives.
+
+    XPU-count faults carve a survivor sub-cluster exactly like the
+    disaggregated-prefill pools (`_subcluster` conventions: same XPU,
+    per-XPU link bandwidth and topology family; meshes re-factorize to
+    the most-cubic dims via `_pool_dims`). Link / switch-plane faults stay
+    attached to the survivor fabric — the broken cables are still broken
+    after the pool shrinks."""
+    cl_f = cl.with_faults(faults)
+    n_surv = cl_f.survivor_xpus()
+    if n_surv < 1:
+        return None
+    if n_surv == cl.n_xpus:
+        return cl_f
+    dims = (_pool_dims(n_surv) if cl.topology in ("torus", "fullmesh")
+            else None)
+    return Cluster(topology=cl.topology, n_xpus=n_surv, xpu=cl.xpu,
+                   link_bw=cl.link_bw, dims=dims, faults=faults)
+
+
+def degraded_candidates(cfg: ModelConfig, cluster: Cluster, *,
+                        dtype: str = "fp8",
+                        tp: Union[int, str] = "auto",
+                        pp: Union[int, str] = 1
+                        ) -> List[Tuple[int, int, int]]:
+    """(tp, pp, ep) mappings valid on a (possibly odd-sized) survivor
+    cluster. Survivor counts like 63 or 56 rarely divide the expert count,
+    so the enumeration uses the padded-expert convention the disaggregated
+    pools established (strict_experts=False: experts pad to the EP
+    group)."""
+    cands = parallelism_candidates(cfg, cluster, dtype=dtype, pp=pp,
+                                   strict_experts=False)
+    if tp != "auto":
+        cands = [c for c in cands if c[0] == tp]
+    return cands
+
+
+def degraded_max_throughput(cluster: Cluster, cfg: ModelConfig, scenario, *,
+                            faults=None,
+                            tp: Union[int, str] = "auto",
+                            pp: Union[int, str] = 1,
+                            dtype: str = "fp8", dbo: bool = False,
+                            sd: Optional[SpecDecConfig] = None,
+                            mapping: Optional[Tuple[int, int, int]] = None):
+    """Best operating point of `cluster` under `faults` (which may already
+    be attached to the cluster): the failure-aware re-search.
+
+    The cluster shrinks to the survivor sub-cluster (failed XPUs, and on
+    scale-out whole NIC-less nodes, leave the pool; link and switch-plane
+    faults derate the surviving fabric via `Cluster.comm_spec`) and the
+    (tp, pp, ep) mapping search re-runs there with padded experts.
+
+    mapping=(tp, pp, ep) restricts the search to ONE mapping — the
+    "keep the pre-fault sharding, serve a smaller batch" arm of the
+    remap-vs-degrade policy (`optimizer.degrade_policy`); ep is
+    re-derived as survivors/(tp*pp), since EP is device-count-defined.
+    Returns None when the SLO is unreachable (or the mapping infeasible)
+    on the survivor cluster."""
+    cl_d = degraded_subcluster(cluster, faults if faults is not None
+                               else cluster.faults)
+    if cl_d is None:
+        return None
+    n = cl_d.n_xpus
+    if mapping is not None:
+        t, q, _ = mapping
+        if t * q > n or n % (t * q) or q > cfg.num_layers:
+            return None
+        cands = [(t, q, max(n // (t * q), 1) if cfg.moe is not None else 1)]
+    else:
+        cands = degraded_candidates(cfg, cl_d, dtype=dtype, tp=tp, pp=pp)
+    grids = [_sweep_fixed([cl_d], cfg, [scenario], dbo=dbo, sd=sd, tp=t,
+                          pp=q, ep_r=e, dtype=dtype)
+             for t, q, e in cands]
+    if not grids:
+        return None
+    return _merge_best(grids)[0][0]
+
+
 def sweep_prefill(clusters: Sequence[Cluster], cfg: ModelConfig,
                   scenarios: Sequence, mode: str = "chunked", *,
                   tp: Union[int, str] = 1, pp: Union[int, str] = 1,

@@ -89,3 +89,26 @@ def throughput_per_cost(throughput_tok_s: float, cluster: Cluster,
     """tokens/s per normalized monthly cost unit."""
     tco = cluster_tco(cluster).total(c)
     return throughput_tok_s / max(tco, 1e-9)
+
+
+def availability_adjusted_throughput_per_cost(cluster: Cluster, cfg,
+                                              scenario, *,
+                                              mtbf_scale: float = 1.0,
+                                              max_total_faults: int = 2,
+                                              c: float = 1.0,
+                                              model=None):
+    """fig14's throughput/$ metric with the numerator replaced by the
+    expected steady-state throughput under the stationary failure
+    distribution (`core/availability.py`): the cluster still pays full TCO
+    while serving degraded. Pass a prebuilt `AvailabilityModel` via
+    `model` to amortize the degraded searches across an MTBF sweep.
+
+    Returns (tokens/s per cost unit, AvailabilityReport, AvailabilityModel).
+    """
+    from repro.core import availability as av
+    if model is None:
+        model = av.build_availability(cluster, cfg, scenario,
+                                      max_total_faults=max_total_faults)
+    report = model.report(mtbf_scale)
+    return (throughput_per_cost(report.expected_throughput, cluster, c),
+            report, model)

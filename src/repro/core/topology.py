@@ -3,6 +3,14 @@ TCO), and best-algorithm collective times (paper sections 2.2, 3.2.2, 3.4).
 
 Four families (paper Fig. 2): scale-up / scale-out (non-blocking fat-tree),
 3D torus, 3D full-mesh. Torus/full-mesh dims: 4x4x4 (64) and 8x8x4 (256).
+
+Degraded fabrics: a `FaultSet` attached to a `Cluster` derates every
+collective placed through `comm_spec` — the topologies fail very
+differently (a mesh degrades gracefully via detours; a switched fabric
+concentrates failures into few high-blast-radius planes), and the derating
+formulas per topology live in `Cluster._fault_derate` (documented in
+docs/failure_model.md). A cluster with `faults=None` is byte-identical to
+the pre-fault model on every path.
 """
 from __future__ import annotations
 
@@ -56,6 +64,53 @@ class LinkInventory:
     aoc_gbps_total: float = 0.0        # aggregate AOC bandwidth (GB/s)
 
 
+# bandwidth floor of a fully-failed fabric: keeps collective times finite
+# (astronomical, so any feasibility check rejects them) instead of inf/NaN
+_DEAD_FABRIC_FRAC = 1e-9
+
+
+@dataclass(frozen=True)
+class FaultSet:
+    """Failed components of one cluster — counts per class, not identities
+    (the model is symmetric across same-class components, and collectives
+    synchronize on the slowest rank, so the worst-case placement prices
+    every placement).
+
+    mesh_links     failed torus / full-mesh links per dimension (entries
+                   beyond the cluster's dims, or on switched fabrics, are
+                   ignored); a broken torus ring forces detour rounds, a
+                   lost full-mesh direct link forces a 2-hop relay over the
+                   (d-1) surviving links of its line
+    switch_planes  failed scale-up switch-plane rails (of the
+                   SCALE_UP_PORTS parallel planes each XPU stripes across)
+    nics           failed scale-out NICs — each takes its whole NODE_XPUS
+                   island node out of the serving pool
+    xpus           failed XPUs (any topology)
+
+    The zero FaultSet derates nothing; `Cluster(faults=None)` skips the
+    derating code path entirely (byte-identity of the healthy model).
+    """
+    mesh_links: Tuple[int, ...] = ()
+    switch_planes: int = 0
+    nics: int = 0
+    xpus: int = 0
+
+    def __post_init__(self):
+        if (any(f < 0 for f in self.mesh_links) or self.switch_planes < 0
+                or self.nics < 0 or self.xpus < 0):
+            raise ValueError(f"fault counts must be >= 0: {self}")
+        object.__setattr__(self, "mesh_links", tuple(self.mesh_links))
+
+    @property
+    def any(self) -> bool:
+        return bool(sum(self.mesh_links) or self.switch_planes
+                    or self.nics or self.xpus)
+
+    def link_at(self, i: int) -> int:
+        """Failed links in mesh dim `i` (0 beyond the recorded dims)."""
+        return self.mesh_links[i] if i < len(self.mesh_links) else 0
+
+
 @dataclass(frozen=True)
 class Cluster:
     topology: str
@@ -63,10 +118,113 @@ class Cluster:
     xpu: XPUSpec
     link_bw: float                      # per-XPU aggregate network BW (B/s)
     dims: Optional[Tuple[int, ...]] = None
+    faults: Optional[FaultSet] = None   # None = healthy (byte-identical)
 
     def __post_init__(self):
         if self.topology in ("torus", "fullmesh") and self.dims is None:
+            if self.n_xpus not in DIMS_BY_SIZE:
+                raise ValueError(
+                    f"no predefined {self.topology} dims for "
+                    f"n_xpus={self.n_xpus}; supported sizes: "
+                    f"{sorted(DIMS_BY_SIZE)} — pass dims=(a, b, c) "
+                    "explicitly for other sizes")
             object.__setattr__(self, "dims", DIMS_BY_SIZE[self.n_xpus])
+
+    # ------------- degraded fabric -------------
+    def with_faults(self, faults: Optional[FaultSet]) -> "Cluster":
+        """This cluster with `faults` attached (None clears them)."""
+        return Cluster(topology=self.topology, n_xpus=self.n_xpus,
+                       xpu=self.xpu, link_bw=self.link_bw, dims=self.dims,
+                       faults=faults)
+
+    def survivor_xpus(self) -> int:
+        """Devices still serving under `self.faults`: failed XPUs are out
+        everywhere; on scale-out each failed NIC additionally takes its
+        whole NODE_XPUS island node out (the node's only path into the
+        fabric)."""
+        if self.faults is None:
+            return self.n_xpus
+        lost = self.faults.xpus
+        if self.topology == "scale-out":
+            lost += self.faults.nics * NODE_XPUS
+        return max(self.n_xpus - lost, 0)
+
+    def mesh_link_counts(self) -> Tuple[int, ...]:
+        """Physical link count per dimension of a torus / full-mesh
+        (0 for inactive dims and switched fabrics). Torus dim of extent d:
+        n/d rings x d links (degenerate d=2 'ring': one link per pair);
+        full-mesh dim: n/d lines x d(d-1)/2 direct links."""
+        if self.topology not in ("torus", "fullmesh") or not self.dims:
+            return ()
+        out = []
+        for d in self.dims:
+            if d <= 1:
+                out.append(0)
+            elif self.topology == "torus":
+                out.append(self.n_xpus if d > 2 else self.n_xpus // 2)
+            else:
+                out.append((self.n_xpus // d) * d * (d - 1) // 2)
+        return tuple(out)
+
+    def _fault_derate(self) -> Tuple[float, float, float]:
+        """(bandwidth factor, extra rounds, extra dests) the attached
+        FaultSet imposes on every collective placed through `comm_spec`
+        (docs/failure_model.md derives the formulas):
+
+        scale-up   a failed switch plane removes one of the SCALE_UP_PORTS
+                   parallel rails every XPU stripes across: bandwidth
+                   scales by surviving planes / planes, no extra latency
+                   (the rails are independent).
+        scale-out  NIC failures are node-count events (survivor_xpus), not
+                   fabric derates — the surviving nodes' non-blocking tree
+                   is unaffected.
+        torus      the first failed link of a dimension breaks a ring into
+                   a line: wrapped traffic detours the long way, folding
+                   over the surviving links (x1/2 efficiency), and ring
+                   phases pay ~d/2 detour rounds; further failures remove
+                   capacity linearly.
+        full-mesh  a lost direct link forces its pair onto a 2-hop relay
+                   across the (d-1) surviving links of the line — the
+                   rerouted traffic consumes 2x capacity (factor
+                   (L - 2f)/L per dim) and adds one store-and-forward
+                   relay round per affected dimension.
+
+        The factor applies to the whole fabric (collectives synchronize on
+        the slowest rank, so one degraded ring/plane gates every phase);
+        it is monotonically non-increasing — and rounds non-decreasing —
+        in every fault count, the invariant the degradation-monotonicity
+        property tests pin.
+        """
+        f = self.faults
+        if f is None or not f.any:
+            return 1.0, 0.0, 0.0
+        if self.topology == "scale-up":
+            frac = max(SCALE_UP_PORTS - f.switch_planes, 0) / SCALE_UP_PORTS
+            return max(frac, _DEAD_FABRIC_FRAC), 0.0, 0.0
+        if self.topology == "scale-out":
+            return 1.0, 0.0, 0.0
+        links = self.mesh_link_counts()
+        active = [i for i, d in enumerate(self.dims) if d > 1]
+        if not active:
+            return 1.0, 0.0, 0.0
+        fracs = []
+        extra_r = extra_d = 0.0
+        for i in active:
+            li = links[i]
+            fi = min(f.link_at(i), li)
+            if fi == 0:
+                fracs.append(1.0)
+                continue
+            if self.topology == "torus":
+                fracs.append(0.5 * (li - fi) / li)
+                extra_r += math.ceil(self.dims[i] / 2)
+                extra_d += math.ceil(self.dims[i] / 2)
+            else:
+                fracs.append(max(li - 2 * fi, 0) / li)
+                extra_r += 1.0
+                extra_d += 2.0
+        frac = sum(fracs) / len(fracs)
+        return max(frac, _DEAD_FABRIC_FRAC), extra_r, extra_d
 
     # ------------- collectives -------------
     def _ab(self) -> AlphaBeta:
@@ -75,8 +233,27 @@ class Cluster:
     def comm_spec(self, kind: str, group: int = 0, tp: int = 1,
                   pp: int = 1):
         """(algorithm menu, bandwidth, AlphaBeta) of one collective PLACED
-        under the hybrid (tp, pp, ep) mapping — the topology-aware half of
-        the parallelism search.
+        under the hybrid (tp, pp, ep) mapping, derated by the attached
+        `FaultSet` (identity when `faults` is None — the healthy placement
+        below is untouched). Both the scalar timers and the batched
+        engine's (A, B) lowering consume this one spec, so degraded
+        batched and scalar times agree exactly as healthy ones do."""
+        menu, bw, ab = self._comm_spec_healthy(kind, group, tp, pp)
+        if self.faults is None or not self.faults.any:
+            return menu, bw, ab
+        factor, extra_r, extra_d = self._fault_derate()
+        if factor == 1.0 and extra_r == 0.0 and extra_d == 0.0:
+            return menu, bw, ab
+        menu = {name: coll.CollCost(rounds=c.rounds + extra_r,
+                                    dests=c.dests + extra_d,
+                                    m_coeff=c.m_coeff, name=c.name)
+                for name, c in menu.items()}
+        return menu, bw * factor, ab
+
+    def _comm_spec_healthy(self, kind: str, group: int = 0, tp: int = 1,
+                           pp: int = 1):
+        """The healthy-fabric collective placement — the topology-aware
+        half of the parallelism search.
 
         kind 'ar' with group == tp is the TP all-reduce: it runs over the
         scale-up / mesh NEIGHBORHOOD (a tp-sized sub-mesh of torus /
@@ -257,8 +434,14 @@ class Cluster:
             aoc_gbps_total=total_bw * cross_frac / gb)
 
     def describe(self) -> Dict:
-        return {"topology": self.topology, "n": self.n_xpus,
-                "link_bw_GBs": self.link_bw / 1e9, "dims": self.dims}
+        out = {"topology": self.topology, "n": self.n_xpus,
+               "link_bw_GBs": self.link_bw / 1e9, "dims": self.dims}
+        if self.faults is not None and self.faults.any:
+            out["faults"] = {"mesh_links": list(self.faults.mesh_links),
+                             "switch_planes": self.faults.switch_planes,
+                             "nics": self.faults.nics,
+                             "xpus": self.faults.xpus}
+        return out
 
 
 def make_cluster(topology: str, n_xpus: int, xpu: XPUSpec,

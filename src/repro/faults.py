@@ -1,0 +1,72 @@
+"""Shared fault-injection machinery (serving sweeps + training drills).
+
+One seam drives both sides of the repo's failure story:
+
+  * the training recovery loop (`training/fault_tolerance.py`) raises
+    `WorkerFailure` through a `FailureInjector` at deterministic step
+    indices and restores from checkpoint;
+  * the serving-side fault sweeps (tests/test_faults*.py, the degraded
+    searches behind `benchmarks/fig_failures.py`) draw seeded random
+    `FaultSet`s from the same per-component inventory the availability
+    model prices, via `sample_faultset`.
+
+Everything here is deterministic given its seed — injected failures must
+reproduce exactly across reruns (a recovery drill that fails flakily is
+useless as a regression test), so the injector takes explicit step
+indices or a seed, never wall-clock or global RNG state.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.topology import Cluster, FaultSet
+
+
+class WorkerFailure(RuntimeError):
+    """A worker (or its host / link) died during a step."""
+
+
+@dataclass
+class FailureInjector:
+    """Raise WorkerFailure at the configured step indices (once each)."""
+    fail_at: List[int] = field(default_factory=list)
+    fired: List[int] = field(default_factory=list)
+
+    def check(self, step: int):
+        if step in self.fail_at and step not in self.fired:
+            self.fired.append(step)
+            raise WorkerFailure(f"injected failure at step {step}")
+
+    @classmethod
+    def seeded(cls, n_steps: int, rate: float,
+               seed: int = 0) -> "FailureInjector":
+        """Deterministic Bernoulli(rate)-per-step failure plan over
+        `n_steps` — the seeded construction both the training drills and
+        the serving sweeps share."""
+        if not 0.0 <= rate <= 1.0:
+            raise ValueError(f"rate must be in [0, 1], got {rate}")
+        rng = np.random.default_rng(seed)
+        hits = np.nonzero(rng.random(n_steps) < rate)[0]
+        return cls(fail_at=[int(s) for s in hits])
+
+
+def sample_faultset(cluster: Cluster, *, exposure_h: float,
+                    seed: int = 0,
+                    mtbf_mttr: Optional[Dict[str, Tuple[float, float]]]
+                    = None) -> FaultSet:
+    """Draw one seeded random `FaultSet` for `cluster`: each component
+    class fails Poisson(count x exposure_h / MTBF) times over the exposure
+    window, mapped onto the serving model's fault axes by the same
+    blast-radius rules the availability enumeration uses
+    (`availability.faultset_for_counts`). Deterministic per seed."""
+    from repro.core.availability import (component_inventory,
+                                         faultset_for_counts)
+    if exposure_h < 0:
+        raise ValueError(f"exposure_h must be >= 0, got {exposure_h}")
+    rng = np.random.default_rng(seed)
+    counts = {c.name: int(rng.poisson(c.count * exposure_h / c.mtbf_h))
+              for c in component_inventory(cluster, mtbf_mttr)}
+    return faultset_for_counts(cluster, counts)

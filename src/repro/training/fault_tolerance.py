@@ -4,8 +4,9 @@ Large-fleet training treats worker failure as routine: detect at a step
 boundary, restore the last atomic checkpoint, resume the (deterministic,
 seekable) data stream at the restored step. This module provides:
 
-  * WorkerFailure — the exception class the runtime surfaces;
-  * FailureInjector — deterministic fault injection for tests/drills;
+  * WorkerFailure / FailureInjector — re-exported from the shared
+    `repro.faults` seam (the serving-side fault sweeps draw from the
+    same machinery; see also `repro.faults.sample_faultset`);
   * run_with_recovery — the driver loop: catches failures mid-run,
     restores, and continues until the target step, bounded by
     `max_restarts` (a crash-looping job must page a human, not spin).
@@ -17,28 +18,15 @@ logic is the same and is exercised here through the injector.
 """
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import List, Optional
 
+from repro.faults import FailureInjector, WorkerFailure
 from repro.training.data import SyntheticLM
 from repro.training.train_loop import Trainer
 
-
-class WorkerFailure(RuntimeError):
-    """A worker (or its host / link) died during a step."""
-
-
-@dataclass
-class FailureInjector:
-    """Raise WorkerFailure at the configured step indices (once each)."""
-    fail_at: List[int] = field(default_factory=list)
-    fired: List[int] = field(default_factory=list)
-
-    def check(self, step: int):
-        if step in self.fail_at and step not in self.fired:
-            self.fired.append(step)
-            raise WorkerFailure(f"injected failure at step {step}")
+__all__ = ["WorkerFailure", "FailureInjector", "RecoveryReport",
+           "run_with_recovery"]
 
 
 @dataclass

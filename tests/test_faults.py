@@ -1,0 +1,304 @@
+"""Degraded-fabric serving: FaultSet derating, failure-aware re-search,
+remap-vs-degrade policy, availability model, shared injection seam.
+
+Locks the PR-6 acceptance criteria: the zero-fault path is identical to
+the healthy model, batched and scalar searches agree to 1e-9 under
+injected faults on all four topologies, and bad mesh sizes raise a clear
+ValueError instead of an opaque KeyError."""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.core import H100, Scenario, make_cluster
+from repro.core.availability import (COLLECTIVE_TIMEOUT_S, MTBF_MTTR_H,
+                                     build_availability,
+                                     component_inventory,
+                                     faultset_for_counts, straddle_penalty)
+from repro.core.optimizer import (degrade_policy, max_throughput,
+                                  max_throughput_scalar)
+from repro.core.sweep import degraded_max_throughput, degraded_subcluster
+from repro.core.tco import availability_adjusted_throughput_per_cost
+from repro.core.topology import FaultSet, NODE_XPUS, TOPOLOGIES
+from repro.faults import FailureInjector, WorkerFailure, sample_faultset
+
+CFG = get_arch("deepseek-v3")
+SC = Scenario(40.0, 512)
+M_BYTES = 4 << 20
+
+# one representative non-trivial FaultSet per topology (fabric-derating
+# axes only; node-loss axes are exercised separately below)
+FAULTS = {
+    "torus": FaultSet(mesh_links=(1, 0, 0)),
+    "fullmesh": FaultSet(mesh_links=(0, 1, 0)),
+    "scale-up": FaultSet(switch_planes=2),
+    "scale-out": FaultSet(nics=1),
+}
+
+
+def _clusters(n=64):
+    return {t: make_cluster(t, n, H100) for t in TOPOLOGIES}
+
+
+# ---------------------------------------------------------------- FaultSet
+
+def test_faultset_validation():
+    with pytest.raises(ValueError):
+        FaultSet(switch_planes=-1)
+    with pytest.raises(ValueError):
+        FaultSet(mesh_links=(0, -2))
+    assert not FaultSet().any
+    fs = FaultSet(mesh_links=[1, 0])          # list coerces to tuple
+    assert fs.mesh_links == (1, 0) and fs.any
+    assert fs.link_at(0) == 1 and fs.link_at(5) == 0
+
+
+def test_bad_mesh_size_raises_clear_valueerror():
+    # satellite: n_xpus outside DIMS_BY_SIZE must not surface a KeyError
+    for topo in ("torus", "fullmesh"):
+        with pytest.raises(ValueError, match="supported sizes"):
+            make_cluster(topo, 128, H100)
+    # switched fabrics are sized by formula and accept any n
+    assert make_cluster("scale-up", 128, H100).n_xpus == 128
+
+
+# ------------------------------------------------------ zero-fault identity
+
+def test_zero_fault_path_identical():
+    for topo, cl in _clusters().items():
+        cl0 = cl.with_faults(FaultSet())
+        for kind, tp, pp in (("a2a", 1, 1), ("ar", 4, 1),
+                             ("pp_sendrecv", 1, 2)):
+            menu, bw, ab = cl.comm_spec(kind, 0 if kind != "pp_sendrecv"
+                                        else pp, tp, pp)
+            menu0, bw0, ab0 = cl0.comm_spec(kind, 0 if kind != "pp_sendrecv"
+                                            else pp, tp, pp)
+            assert bw == bw0 and ab == ab0
+            assert {k: (c.rounds, c.dests, c.m_coeff)
+                    for k, c in menu.items()} == \
+                   {k: (c.rounds, c.dests, c.m_coeff)
+                    for k, c in menu0.items()}, (topo, kind)
+
+
+# ------------------------------------------------------------ fault derating
+
+def test_fault_derating_slows_collectives():
+    for topo, cl in _clusters().items():
+        cl_f = cl.with_faults(FAULTS[topo])
+        for name, t0, t1 in (
+                ("a2a", cl.a2a_time(M_BYTES), cl_f.a2a_time(M_BYTES)),
+                ("ar", cl.ar_time(M_BYTES), cl_f.ar_time(M_BYTES)),
+                ("pp", cl.pp_hop_time(M_BYTES), cl_f.pp_hop_time(M_BYTES))):
+            assert t1 >= t0, (topo, name)
+        if topo != "scale-out":     # NIC loss is a node event, not derate
+            assert cl_f.a2a_time(M_BYTES) > cl.a2a_time(M_BYTES), topo
+
+
+def test_derating_monotone_in_fault_count():
+    cl = make_cluster("torus", 64, H100)
+    times = [cl.with_faults(FaultSet(mesh_links=(k, 0, 0))).a2a_time(M_BYTES)
+             for k in range(4)]
+    assert all(b >= a for a, b in zip(times, times[1:])), times
+    su = make_cluster("scale-up", 64, H100)
+    times = [su.with_faults(FaultSet(switch_planes=k)).ar_time(M_BYTES)
+             for k in range(5)]
+    assert all(b >= a for a, b in zip(times, times[1:])), times
+
+
+def test_survivor_accounting():
+    for topo, cl in _clusters().items():
+        assert cl.with_faults(FaultSet(xpus=3)).survivor_xpus() == 61
+    so = make_cluster("scale-out", 64, H100)
+    # a dead NIC orphans its whole island node
+    assert so.with_faults(FaultSet(nics=1)).survivor_xpus() \
+        == 64 - NODE_XPUS
+    assert so.with_faults(FaultSet(nics=100)).survivor_xpus() == 0
+
+
+# -------------------------------------------- batched == scalar under faults
+
+def test_batched_scalar_agree_under_faults():
+    """Acceptance criterion: with faults injected, the batched engine and
+    the scalar reference agree to 1e-9 on all four topologies."""
+    for topo, cl in _clusters().items():
+        cl_f = cl.with_faults(FAULTS[topo])
+        b = max_throughput(cl_f, CFG, SC, tp=1, pp=1)
+        s = max_throughput_scalar(cl_f, CFG, SC, tp=1, pp=1)
+        assert (b is None) == (s is None), topo
+        if b is None:
+            continue
+        assert b.batch == s.batch, topo
+        np.testing.assert_allclose(b.tpot, s.tpot, rtol=1e-9)
+        np.testing.assert_allclose(b.throughput, s.throughput, rtol=1e-9)
+
+
+# ------------------------------------------------------- degraded re-search
+
+def test_degraded_subcluster_and_search():
+    for topo, cl in _clusters().items():
+        fs = FaultSet(xpus=2)
+        cl_d = degraded_subcluster(cl, fs)
+        assert cl_d is not None and cl_d.n_xpus == 62
+        pt = degraded_max_throughput(cl, CFG, SC, faults=fs)
+        healthy = max_throughput(cl, CFG, SC, tp="auto")
+        if pt is not None and healthy is not None:
+            assert pt.throughput <= healthy.throughput * (1 + 1e-12), topo
+
+
+def test_degrade_policy_plan():
+    for topo, cl in _clusters().items():
+        plan = degrade_policy(cl, CFG, SC, FaultSet(xpus=NODE_XPUS))
+        assert plan.action in ("keep", "remap", "down"), topo
+        if plan.action == "down":
+            assert plan.effective_throughput == 0.0
+            continue
+        baseline = max_throughput(cl, CFG, SC, tp="auto")
+        assert plan.effective_throughput <= baseline.throughput, topo
+        # the policy picks the better arm
+        keep_thr = plan.keep_point.throughput if plan.keep_point else 0.0
+        if plan.action == "keep":
+            assert plan.effective_throughput == keep_thr
+        else:
+            assert plan.effective_throughput >= keep_thr
+
+
+def test_degrade_policy_horizon_knob():
+    """A long remap downtime relative to the horizon disfavors remapping."""
+    cl = make_cluster("fullmesh", 64, H100)
+    fs = FaultSet(xpus=1)
+    cheap = degrade_policy(cl, CFG, SC, fs, remap_downtime_s=0.0)
+    dear = degrade_policy(cl, CFG, SC, fs, remap_downtime_s=3600.0,
+                          horizon_s=3600.0)
+    assert cheap.effective_throughput >= dear.effective_throughput
+
+
+# ------------------------------------------------------------- availability
+
+def test_straddle_penalty():
+    assert straddle_penalty(0.02) == COLLECTIVE_TIMEOUT_S + 0.02
+    assert straddle_penalty(0.02, retries=3) == COLLECTIVE_TIMEOUT_S + 0.06
+    with pytest.raises(ValueError):
+        straddle_penalty(0.02, timeout_s=-1.0)
+
+
+def test_component_inventory():
+    for topo, cl in _clusters().items():
+        inv = component_inventory(cl)
+        names = [c.name for c in inv]
+        assert "xpu" in names and all(c.count > 0 for c in inv)
+        assert all(c.mtbf_h > 0 and c.mttr_h > 0 for c in inv)
+    so = [c.name for c in component_inventory(_clusters()["scale-out"])]
+    assert "nic" in so and "switch" in so
+    # per-class MTBF/MTTR overrides replace the documented defaults
+    cl = _clusters()["torus"]
+    assert MTBF_MTTR_H["xpu"] != (123.0, 4.0)
+    xpu = [c for c in component_inventory(cl, {"xpu": (123.0, 4.0)})
+           if c.name == "xpu"][0]
+    assert (xpu.mtbf_h, xpu.mttr_h) == (123.0, 4.0)
+    for mesh in ("torus", "fullmesh"):
+        assert "switch" not in [c.name for c in
+                                component_inventory(_clusters()[mesh])]
+
+
+def test_faultset_for_counts_blast_radius():
+    cls = _clusters()
+    fs = faultset_for_counts(cls["torus"], {"link_copper": 3})
+    assert sum(fs.mesh_links) == 3
+    fs = faultset_for_counts(cls["scale-up"], {"link_copper": 1,
+                                               "switch": 1})
+    assert fs.switch_planes == 2
+    fs = faultset_for_counts(cls["scale-out"], {"switch": 1})
+    assert fs.xpus == 64        # one-level fabric switch: whole cluster
+    fs = faultset_for_counts(cls["scale-out"], {"link_copper": 2})
+    assert fs.nics == 2         # severed node uplink == dead NIC
+
+
+def test_availability_model_sanity():
+    cl = make_cluster("fullmesh", 64, H100)
+    m = build_availability(cl, CFG, SC, max_total_faults=2)
+    assert m.healthy_throughput > 0
+    assert m.states[0].action == "healthy"
+    assert all(s.throughput <= m.healthy_throughput * (1 + 1e-12)
+               for s in m.states)
+    r = m.report(1.0)
+    assert 0.0 < r.availability <= 1.0
+    assert 0.0 <= r.tail_mass < 1e-3
+    assert all(0.0 <= p <= 1.0 for p in r.state_probs)
+    assert abs(sum(r.state_probs) + r.tail_mass - 1.0) < 1e-6
+    # healthier fleet -> higher availability
+    assert m.report(10.0).availability >= r.availability
+    assert r.availability >= m.report(0.1).availability
+
+
+def test_single_fault_closed_form():
+    """Enumerated single-fault probabilities match the analytic binomial
+    C(N,1) u (1-u)^(N-1) exactly."""
+    cl = make_cluster("torus", 64, H100)
+    m = build_availability(cl, CFG, SC, max_total_faults=1)
+    r = m.report(1.0)
+    for ci, c in enumerate(m.classes):
+        u = c.unavailability(1.0)
+        want = math.comb(c.count, 1) * u * (1 - u) ** (c.count - 1)
+        for cj, other in enumerate(m.classes):
+            if cj != ci:
+                uo = other.unavailability(1.0)
+                want *= (1 - uo) ** other.count
+        key = tuple(1 if i == ci else 0 for i in range(len(m.classes)))
+        got = [p for s, p in zip(m.states, r.state_probs)
+               if s.counts == key]
+        assert len(got) == 1
+        np.testing.assert_allclose(got[0], want, rtol=1e-12)
+
+
+def test_availability_adjusted_tpc():
+    cl = make_cluster("torus", 64, H100)
+    v, rep, model = availability_adjusted_throughput_per_cost(cl, CFG, SC)
+    v0, rep0, _ = availability_adjusted_throughput_per_cost(
+        cl, None, None, mtbf_scale=0.1, model=model)
+    assert 0 < v0 < v
+    assert rep0.availability < rep.availability
+
+
+# ------------------------------------------------------ shared fault seam
+
+def test_seeded_injector_deterministic():
+    a = FailureInjector.seeded(200, 0.1, seed=11)
+    b = FailureInjector.seeded(200, 0.1, seed=11)
+    assert a.fail_at == b.fail_at and a.fail_at
+    assert FailureInjector.seeded(200, 0.1, seed=12).fail_at != a.fail_at
+    with pytest.raises(ValueError):
+        FailureInjector.seeded(10, 1.5)
+    with pytest.raises(WorkerFailure):
+        a.check(a.fail_at[0])
+    a.check(a.fail_at[0])       # fires once
+
+
+def test_training_seam_reexports():
+    # run_with_recovery's injector IS the shared one (behavior unchanged)
+    from repro.training import fault_tolerance as ft
+    assert ft.FailureInjector is FailureInjector
+    assert ft.WorkerFailure is WorkerFailure
+
+
+def test_sample_faultset_deterministic():
+    for topo, cl in _clusters().items():
+        a = sample_faultset(cl, exposure_h=5000.0, seed=4)
+        b = sample_faultset(cl, exposure_h=5000.0, seed=4)
+        assert a == b
+    with pytest.raises(ValueError):
+        sample_faultset(make_cluster("torus", 64, H100), exposure_h=-1.0)
+
+
+def test_faults_survive_subclustering():
+    cl = make_cluster("torus", 64, H100)
+    fs = FaultSet(mesh_links=(1, 0, 0), xpus=1)
+    cl_d = degraded_subcluster(cl, fs)
+    assert cl_d.faults == fs    # link derate persists on the survivor pool
+
+
+def test_describe_includes_faults():
+    cl = make_cluster("torus", 64, H100).with_faults(FaultSet(xpus=1))
+    assert cl.describe()["faults"]["xpus"] == 1

@@ -1,0 +1,101 @@
+"""Hypothesis property tests for the degraded-fabric model: adding any
+fault never speeds the fabric up.
+
+The failure-model analogue of the overlap no-anomaly suite — on every
+topology, for arbitrary fault sets:
+
+  * a2a_time / ar_time / pp_hop_time never decrease;
+  * stacking MORE faults on an already-faulted fabric never decreases
+    them either (monotone along fault chains, not just vs. healthy);
+  * the TPOT of the searched operating point never decreases, and the
+    searched throughput never increases.
+
+Kept separate from test_faults.py so a missing `hypothesis` (an optional
+[dev] dependency) skips this module instead of erroring the whole suite
+at collection.
+"""
+import pytest
+
+pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_arch
+from repro.core import H100, Scenario, make_cluster
+from repro.core.optimizer import max_throughput, tpot_at
+from repro.core.topology import (FaultSet, SCALE_UP_PORTS, TOPOLOGIES)
+from repro.core.workload import ServingPoint
+
+CFG = get_arch("deepseek-v3")
+SC = Scenario(40.0, 512)
+CLUSTERS = {t: make_cluster(t, 64, H100) for t in TOPOLOGIES}
+
+faultsets = st.builds(
+    FaultSet,
+    mesh_links=st.tuples(st.integers(0, 4), st.integers(0, 4),
+                         st.integers(0, 4)),
+    switch_planes=st.integers(0, SCALE_UP_PORTS),
+    nics=st.integers(0, 8),
+    xpus=st.integers(0, 8),
+)
+
+
+def _times(cl, m_bytes, tp, pp):
+    return (cl.a2a_time(m_bytes, tp=tp, pp=pp),
+            cl.ar_time(m_bytes, tp=tp, pp=pp),
+            cl.pp_hop_time(m_bytes, pp=max(pp, 2), tp=tp))
+
+
+@given(topo=st.sampled_from(TOPOLOGIES), fs=faultsets,
+       m_bytes=st.floats(1e3, 1e9), tp=st.sampled_from((1, 2, 4)),
+       pp=st.sampled_from((1, 2)))
+@settings(max_examples=150, deadline=None)
+def test_faults_never_speed_up_collectives(topo, fs, m_bytes, tp, pp):
+    cl = CLUSTERS[topo]
+    healthy = _times(cl, m_bytes, tp, pp)
+    faulted = _times(cl.with_faults(fs), m_bytes, tp, pp)
+    for name, t0, t1 in zip(("a2a", "ar", "pp_hop"), healthy, faulted):
+        assert t1 >= t0 * (1 - 1e-12), (topo, name, fs)
+
+
+@given(topo=st.sampled_from(TOPOLOGIES), fs=faultsets,
+       extra=st.sampled_from(("link0", "link1", "plane", "nic")),
+       m_bytes=st.floats(1e3, 1e8))
+@settings(max_examples=100, deadline=None)
+def test_fault_chain_monotone(topo, fs, extra, m_bytes):
+    """One more fault on an already-degraded fabric never helps."""
+    links = list(fs.mesh_links)
+    if extra == "link0":
+        links[0] += 1
+    elif extra == "link1":
+        links[1] += 1
+    fs2 = FaultSet(
+        mesh_links=tuple(links),
+        switch_planes=fs.switch_planes + (extra == "plane"),
+        nics=fs.nics + (extra == "nic"), xpus=fs.xpus)
+    cl = CLUSTERS[topo]
+    t1 = _times(cl.with_faults(fs), m_bytes, 1, 1)
+    t2 = _times(cl.with_faults(fs2), m_bytes, 1, 1)
+    assert all(b >= a * (1 - 1e-12) for a, b in zip(t1, t2)), (topo, fs,
+                                                              fs2)
+
+
+@given(topo=st.sampled_from(TOPOLOGIES),
+       links=st.integers(0, 3), planes=st.integers(0, 4))
+@settings(max_examples=12, deadline=None)
+def test_searched_point_never_improves_under_faults(topo, links, planes):
+    """Fabric faults never decrease the searched TPOT (evaluated at the
+    healthy winner's batch) nor increase the searched throughput."""
+    fs = FaultSet(mesh_links=(links, 0, 0), switch_planes=planes)
+    cl = CLUSTERS[topo]
+    healthy = max_throughput(cl, CFG, SC, tp=1, pp=1)
+    faulted = max_throughput(cl.with_faults(fs), CFG, SC, tp=1, pp=1)
+    assert healthy is not None
+    if faulted is None:         # SLO now unreachable: degraded, fine
+        return
+    assert faulted.throughput <= healthy.throughput * (1 + 1e-12)
+    p = ServingPoint(batch_global=healthy.batch, context=SC.context,
+                     tp=1, ep=cl.n_xpus)
+    t_h, *_ = tpot_at(CFG, p, cl, dbo=False, sd=None)
+    t_f, *_ = tpot_at(CFG, p, cl.with_faults(fs), dbo=False, sd=None)
+    assert t_f >= t_h * (1 - 1e-12)
