@@ -1,7 +1,16 @@
 """Benchmark harness: one module per paper table/figure.
 
-  PYTHONPATH=src python -m benchmarks.run            # all
-  PYTHONPATH=src python -m benchmarks.run fig14      # substring filter
+  PYTHONPATH=src python -m benchmarks.run                  # all
+  PYTHONPATH=src python -m benchmarks.run fig14            # substring filter
+  PYTHONPATH=src python -m benchmarks.run --list           # print modules
+  PYTHONPATH=src python -m benchmarks.run --only fig14_topology
+
+A bare positional pattern is a SUBSTRING filter and runs every matching
+module (e.g. `fig1` matches fig10/fig11/fig12/...). `--only NAME` runs
+exactly one module — NAME must equal a module's short name (the part
+after `benchmarks.`) or its full dotted path, and the harness errors on
+no match instead of silently running nothing. `--list` prints every
+registered module with its short name and exits.
 
 Results land in bench_results/*.json; claim checks print per module.
 
@@ -129,6 +138,7 @@ MODULES = [
     "benchmarks.fig_parallelism",
     "benchmarks.fig_pipeline",
     "benchmarks.fig_failures",
+    "benchmarks.fig_product_grid",
     "benchmarks.roofline",
 ]
 
@@ -165,6 +175,9 @@ BUDGETS_S = {
     "benchmarks.fig_pipeline": 120,
     "benchmarks.fig_prefill_overlap": 120,
     "benchmarks.fig_failures": 180,
+    # 10^6-cell numpy-vs-jax product grid: ~35s local (numpy reference
+    # pass dominates), plus jit compile and a cold CI runner's margin
+    "benchmarks.fig_product_grid": 240,
 }
 
 
@@ -207,17 +220,63 @@ def _save_sweep_timing(timings: dict) -> None:
                                if now_total else None),
         "all_modules_timed": complete,
     }
+
+    # op-table LRU effectiveness over THIS harness run: mapping x model x
+    # fault product grids thrash a small cache (the old maxsize=64 bound),
+    # and a low hit rate here is the early warning
+    from repro.core import optable
+    payload["optable_cache"] = optable.cache_stats()
+
+    # the jitted product-grid engine's speedup-vs-NumPy record (written by
+    # fig_product_grid this run, or carried from its committed JSON)
+    pg_path = os.path.join(OUT_DIR, "fig_product_grid.json")
+    if os.path.exists(pg_path):
+        with open(pg_path) as f:
+            pg = json.load(f)
+        payload["product_grid_jax"] = {
+            "n_cells": pg.get("grid", {}).get("n_cells"),
+            "numpy_s": pg.get("seq", {}).get("numpy_s"),
+            "jax_s": pg.get("seq", {}).get("jax_s"),
+            "speedup": pg.get("seq", {}).get("speedup"),
+        }
     save("BENCH_sweep_timing", payload)
 
 
 def main(argv):
-    pattern = argv[1] if len(argv) > 1 else ""
+    import argparse
+    ap = argparse.ArgumentParser(
+        prog="benchmarks.run",
+        description="Run benchmark modules (see module docstring).")
+    ap.add_argument("pattern", nargs="?", default="",
+                    help="substring filter on dotted module names; empty "
+                         "runs everything")
+    ap.add_argument("--list", action="store_true", dest="list_modules",
+                    help="print registered modules (short + dotted names) "
+                         "and exit")
+    ap.add_argument("--only", default=None, metavar="NAME",
+                    help="run exactly one module; NAME must equal a short "
+                         "name (e.g. fig14_topology) or dotted path — "
+                         "errors on no match, unlike the substring filter")
+    args = ap.parse_args(argv[1:])
+
+    if args.list_modules:
+        for name in MODULES:
+            print(f"{name.split('.')[-1]:<24} {name}")
+        return 0
+    if args.only is not None:
+        selected = [n for n in MODULES
+                    if n == args.only or n.split(".")[-1] == args.only]
+        if not selected:
+            print(f"--only {args.only!r} matches no registered module; "
+                  "run with --list to see them", file=sys.stderr)
+            return 2
+    else:
+        selected = [n for n in MODULES if args.pattern in n]
+
     failures = []
     claims_summary = {}
     timings = {}
-    for name in MODULES:
-        if pattern and pattern not in name:
-            continue
+    for name in selected:
         print(f"\n{'=' * 72}\n== {name}\n{'=' * 72}", flush=True)
         t0 = time.time()
         try:

@@ -360,7 +360,8 @@ def max_throughput(cluster: Cluster, cfg: ModelConfig, scenario: Scenario,
                    *, dbo: bool = False, sd: Optional[SpecDecConfig] = None,
                    tp: Union[int, str] = 1, pp: Union[int, str] = 1,
                    ep: Optional[int] = None,
-                   dtype: str = "fp8") -> Optional[OperatingPoint]:
+                   dtype: str = "fp8",
+                   backend: Optional[str] = None) -> Optional[OperatingPoint]:
     """Best operating point under the TPOT SLO, or None if the SLO is
     unreachable at every feasible batch size.
 
@@ -380,7 +381,7 @@ def max_throughput(cluster: Cluster, cfg: ModelConfig, scenario: Scenario,
     from repro.core import sweep
     return sweep.sweep_max_throughput([cluster], cfg, [scenario], dbo=dbo,
                                       sd=sd, tp=tp, pp=pp, ep=ep,
-                                      dtype=dtype)[0][0]
+                                      dtype=dtype, backend=backend)[0][0]
 
 
 def max_throughput_scalar(cluster: Cluster, cfg: ModelConfig,

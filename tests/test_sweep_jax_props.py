@@ -1,0 +1,93 @@
+"""Hypothesis property tests for jax-vs-NumPy sweep-engine parity.
+
+tests/test_sweep_jax.py pins the contract on hand-picked cells; this
+module lets hypothesis draw the cells — topology x (tp, pp, ep) mapping
+x dbo x fault set x batch/scenario grid for decode, and chunk schedules
+for prefill — and asserts the two backends agree to <= 1e-6 relative on
+EVERY grid cell (the documented acceptance bar; observed drift is
+~1e-12, pure summation-order residue).
+
+Kept separate from test_sweep_jax.py so a missing `hypothesis` (an
+optional [dev] dependency, like tests/test_faults_props.py) skips this
+module instead of erroring collection; a missing jax skips both.
+"""
+import pytest
+
+pytest.importorskip("hypothesis")
+pytest.importorskip("jax")
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_arch
+from repro.core import H100, Scenario, make_cluster
+from repro.core import optable, sweep
+from repro.core.topology import FaultSet, TOPOLOGIES
+
+CFG = get_arch("deepseek-v3").replace(num_layers=8)
+RTOL = 1e-6
+N = 64
+
+faultsets = st.one_of(
+    st.none(),
+    st.builds(FaultSet,
+              mesh_links=st.tuples(st.integers(0, 3), st.integers(0, 3),
+                                   st.integers(0, 3)),
+              switch_planes=st.integers(0, 4),
+              nics=st.integers(0, 4)))
+
+scenarios = st.lists(
+    st.builds(Scenario,
+              st.sampled_from((5.0, 15.0, 40.0, 100.0)),
+              st.sampled_from((128, 1024, 8192, 32768))),
+    min_size=1, max_size=3)
+
+batch_grids = st.lists(st.integers(1, 65536), min_size=1, max_size=6,
+                       unique=True).map(sorted)
+
+
+@given(topo=st.sampled_from(TOPOLOGIES),
+       tp_pp=st.sampled_from(((1, 1), (2, 1), (4, 1), (1, 2), (2, 2),
+                              (1, 4), (8, 1))),
+       dbo=st.booleans(), fs=faultsets, scs=scenarios, batches=batch_grids)
+@settings(max_examples=30, deadline=None)
+def test_decode_grid_parity(topo, tp_pp, dbo, fs, scs, batches):
+    tp, pp = tp_pp
+    ep = max(N // (tp * pp), 1)
+    table = optable.op_table(CFG, tp, ep, N, "fp8", pp=pp)
+    cl = make_cluster(topo, N, H100)
+    if fs is not None:
+        cl = cl.with_faults(fs)
+    b = np.asarray(batches, np.int64)
+    ref = sweep.GridEval(table, [cl], scs, b, backend="numpy")
+    got = sweep.GridEval(table, [cl], scs, b, backend="jax")
+    np.testing.assert_allclose(got.tpot(dbo=dbo), ref.tpot(dbo=dbo),
+                               rtol=RTOL, atol=0.0)
+    if dbo:     # the components feeding the (max,+) schedule also agree
+        for q in (1,):
+            for a, r in zip(got.seq_components(q), ref.seq_components(q)):
+                np.testing.assert_allclose(a, r, rtol=RTOL, atol=0.0)
+
+
+@given(topo=st.sampled_from(TOPOLOGIES),
+       tp_pp=st.sampled_from(((1, 1), (2, 1), (2, 2))),
+       dbo=st.booleans(),
+       bg=st.integers(1, 4096),
+       chunks=st.lists(st.tuples(st.integers(1, 8192),
+                                 st.integers(0, 16384)),
+                       min_size=1, max_size=5))
+@settings(max_examples=25, deadline=None)
+def test_prefill_chunk_parity(topo, tp_pp, dbo, bg, chunks):
+    """Chunk-duration parity on arbitrary (size, kv-offset) schedules —
+    the kernel under both the chunked and disagg prefill modes."""
+    tp, pp = tp_pp
+    ep = max(N // (tp * pp), 1)
+    ptable = optable.prefill_op_table(CFG, tp, ep, N, "fp8", pp=pp)
+    cl = make_cluster(topo, N, H100)
+    sizes = np.array([c[0] for c in chunks], np.int64)
+    offsets = np.array([c[1] for c in chunks], np.int64)
+    ref = sweep._prefill_chunk_times(ptable, cl, bg, sizes, offsets,
+                                     dbo=dbo, backend="numpy")
+    got = sweep._prefill_chunk_times(ptable, cl, bg, sizes, offsets,
+                                     dbo=dbo, backend="jax")
+    np.testing.assert_allclose(got, ref, rtol=RTOL, atol=0.0)
