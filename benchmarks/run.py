@@ -110,6 +110,21 @@ and `core.availability` enumerates multi-fault states with component
 counts derived from the TCO link/switch inventory (MTBF/MTTR defaults
 in docs/failure_model.md). The zero-fault path is byte-identical to
 the healthy model, so every other figure JSON is unaffected.
+
+Skewed expert routing + placement
+---------------------------------
+`fig_skew` drops the uniform-routing assumption: `Scenario(routing="zipf",
+zipf_s=s)` draws a per-layer Zipf expert popularity (seeded, permutation
+independent of s), `repro.core.placement` turns it into per-layer hot-rank
+load factors, and the sweep charges grouped GEMM time and A2A payload at
+the hottest rank's load (`sweep.op_load_factors`; both NumPy and JAX
+backends, scalar parity at 1e-9). `placement="auto"` searches replica
+counts for the hottest experts (HBM-feasibility-gated via
+`workload.model_shard_bytes`) with greedy hot-expert replication + LPT
+placement; the R=0 arm is searched first and only strictly better arms
+replace it, so uniform scenarios stay byte-identical and placement never
+loses. The figure sweeps Zipf s x Table-3 topologies x fig14 scenarios
+with and without placement.
 """
 from __future__ import annotations
 
@@ -139,6 +154,7 @@ MODULES = [
     "benchmarks.fig_pipeline",
     "benchmarks.fig_failures",
     "benchmarks.fig_product_grid",
+    "benchmarks.fig_skew",
     "benchmarks.roofline",
 ]
 
@@ -178,6 +194,9 @@ BUDGETS_S = {
     # 10^6-cell numpy-vs-jax product grid: ~35s local (numpy reference
     # pass dominates), plus jit compile and a cold CI runner's margin
     "benchmarks.fig_product_grid": 240,
+    # 4 Zipf-s levels x 2 placement arms, each a full topology x scenario
+    # grid; the placement arm re-sweeps per replica-count candidate
+    "benchmarks.fig_skew": 240,
 }
 
 

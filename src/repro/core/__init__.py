@@ -7,6 +7,8 @@ methodology for MoE LLM serving networks.
   hardware     XPU generations (H100, Blackwell, Rubin, TPU v5e; Table 5)
   compute_model roofline-with-efficiency per-layer compute times
   workload     MoE decode/prefill iterations -> ordered op lists (per-device)
+  placement    expert-routing skew (Zipf load factors) + replication/
+               placement search spending HBM headroom on hot experts
   overlap      DBO three-lane (max,+) scheduler (compute / collectives /
                pp send-recv) -> exposed communication time
   specdec      speculative decoding TPOT model

@@ -11,6 +11,11 @@ R, D, coeff come from the collective algorithm (core.collectives, Table 3).
 Fitted values (paper Table 1, NCCL on DGX H100) are the defaults; the fitting
 code itself (fit_alpha_beta) is exercised on synthetic data in
 benchmarks/table1_alphabeta.py to validate the methodology.
+
+Layer: leaf of the comm stack — consumed by `core.collectives` (which
+supplies R, D, coeff) and `core.topology.Cluster.comm_spec`; depends on
+nothing above it. Pure float arithmetic, identical on every path (scalar,
+batched, jax), so it has no separate parity contract of its own.
 """
 from __future__ import annotations
 

@@ -28,6 +28,11 @@ high-blast-radius switch planes. This module prices that difference:
 Separating (2) from (3) makes MTBF sweeps cheap: the expensive degraded
 searches run once per cluster, then `report` re-weights them per failure
 rate — how `benchmarks/fig_failures.py` finds the crossover MTBF.
+
+Layer: probability weighting above the degraded sweep
+(`sweep.degraded_max_throughput`); the underlying searches keep the
+sweep layer's scalar/batched parity, and the stationary weighting is
+plain float arithmetic on top.
 """
 from __future__ import annotations
 

@@ -14,6 +14,10 @@ Table 3 ground truth (asserted in tests/test_collectives.py):
 beta uses each topology's PER-XPU aggregate bandwidth; the coefficients
 already encode how much of that aggregate a given algorithm can actually
 drive (e.g. full-mesh DoR is bottlenecked by its thinnest dimension).
+
+Layer: pure coefficient tables between `core.alphabeta` (below) and
+`core.topology` (above); no timing is computed here, so scalar/batched
+parity is inherited, not asserted.
 """
 from __future__ import annotations
 

@@ -9,6 +9,12 @@ with per-op-class compute efficiencies and a small fixed launch cost. The
 efficiency constants are calibrated so DeepSeek-V3 decode TPOT/throughput
 lands in the envelope of the public SGLang 96xH100 report the paper itself
 validates against (benchmarks/validation.py cross-checks this).
+
+Layer: leaf constants + the roofline formula, shared verbatim by the
+scalar timers (`core.workload` op lists), the batched NumPy engine
+(`sweep.GridEval._durations`), and the jax kernels (`sweep_jax`) — the
+1e-9 scalar/batched parity contract holds because all three apply THESE
+constants with the same associations.
 """
 from __future__ import annotations
 

@@ -11,6 +11,10 @@ roofline, so switching the XPUSpec does exactly that.
 
 `alpha_scale` models the paper's alpha-reduction study (Fig 19): scaling
 alpha_r and alpha_d toward zero (lower software/protocol overhead).
+
+Layer: top-of-stack study driver over `core.hardware` specs and the sweep
+engines; it only swaps inputs (XPUSpec, alphas), so results inherit the
+sweep layer's scalar/batched parity unchanged.
 """
 from __future__ import annotations
 

@@ -1,22 +1,33 @@
-"""Structured op tables: `workload.decode_iteration` lowered to arrays.
+"""Structured op tables: the workload op lists lowered to coefficient
+arrays — the IR between `workload` (shape formulas) and the sweep engines.
 
-The optimizer's sweep evaluates the same decode op list at every point of a
-batch-grid x {dbo, sd} x scenario x topology cross-product. Rebuilding the
-op list (hundreds of dataclass instances) per point is the hot path of every
-figure benchmark. This module lowers the op list ONCE per (model,
-parallelism, dtype) into a coefficient table; every per-op quantity is then
-a closed form over the sweep variables, so the whole grid evaluates as a
-handful of NumPy broadcasts (see `repro.core.sweep`).
+Layer: `workload.decode_iteration` / `workload.prefill_iteration` produce
+per-op dataclasses; this module lowers each list ONCE per mapping into an
+`OpTable` / `PrefillOpTable` of closed-form coefficients; `sweep` (NumPy
+reference) and `sweep_jax` (jitted) evaluate those tables over whole
+batch x {dbo, sd} x scenario x topology grids. Rebuilding the op list
+(hundreds of dataclass instances) per grid point was the hot path of every
+figure benchmark — with the tables the grid is a handful of broadcasts.
 
-Tables are LRU-cached per (model, tp, ep, n_devices, dtype, kv_dtype) — the
-full hybrid-parallelism key, so the (tp, ep) mapping search reuses one
-lowering per candidate mapping. The tp > 1 op lists gain the `moe_ar`
-all-reduce and the TP-sharded expert terms (see `workload.moe_ops`); both
-stay inside the linear basis below, so the probes need no new points.
-Each table also carries a `lane` column (int codes into `overlap.LANES`)
-routing every op to its scheduler lane — compute, collective fabric, or
-the dedicated pp send/recv channel — for the vectorized three-lane (max,+)
-DBO schedule (`sweep._lane_makespan`).
+Tables are LRU-cached per (model, tp, ep, n_devices, dtype, kv_dtype, pp)
+— the full hybrid-parallelism key, so the (tp, pp, ep) mapping search
+reuses one lowering per candidate mapping. The tp > 1 op lists gain the
+`moe_ar` all-reduce and the TP-sharded expert terms (see
+`workload.moe_ops`); both stay inside the linear basis below, so the
+probes need no new points. Each table also carries a `lane` column (int
+codes into `overlap.LANES`) routing every op to its scheduler lane —
+compute, collective fabric, or the dedicated pp send/recv channel — for
+the vectorized three-lane (max,+) DBO schedule (`sweep._lane_makespan`) —
+and a `moe_layer` column (the per-op MoE-layer ordinal from
+`workload.moe_layer_ordinals`, -1 for ops expert-load skew does not
+touch). Tables are always built at UNIFORM routing; skewed scenarios are
+applied by the sweep as per-op constant multipliers indexed through
+`moe_layer` (`sweep.op_load_factors`), so skew changes neither the cache
+key nor the probe points.
+
+Parity contract: the closed forms must match the probed workload to 1e-9
+relative (`_validate` raises otherwise), which is what lets the batched
+engines claim 1e-9 agreement with the scalar `optimizer` path.
 
 Every op emitted by `workload.decode_iteration` is exactly linear in the
 basis {1, rows, rows*ctx, b*ctx} where b = batch_per_device and
@@ -92,6 +103,8 @@ class OpTable:
     bytes_row: np.ndarray      # activation bytes per row
     bytes_ctx: np.ndarray      # KV bytes per request per context token
     m_row: np.ndarray          # comm payload bytes per row
+    moe_layer: np.ndarray      # int32 MoE-layer ordinal of skew-scaled ops
+                               # (workload.moe_layer_ordinals; -1 otherwise)
 
     @property
     def n_ops(self) -> int:
@@ -122,6 +135,7 @@ class OpTable:
             "bytes_row": np.asarray(self.bytes_row, np.float64),
             "bytes_ctx": np.asarray(self.bytes_ctx, np.float64),
             "m_row": np.asarray(self.m_row, np.float64),
+            "moe_layer": np.asarray(self.moe_layer, np.int32),
         }
 
     # ------------- closed-form evaluation -------------
@@ -219,7 +233,8 @@ def build_op_table(cfg: ModelConfig, *, tp: int = 1, ep: int = 1,
         eff=eff, eff_small=eff_small,
         flop_row=flop_row, flop_row_ctx=flop_row_ctx,
         bytes_const=bytes_const, bytes_row=bytes_row, bytes_ctx=bytes_ctx,
-        m_row=m_row)
+        m_row=m_row,
+        moe_layer=np.array(workload.moe_layer_ordinals(names0), np.int32))
     _validate(cfg, table, **kw)
     return table
 
@@ -316,6 +331,7 @@ class PrefillOpTable:
     bytes_row: np.ndarray
     bytes_ctx: np.ndarray
     m_row: np.ndarray
+    moe_layer: np.ndarray      # int32 MoE-layer ordinal of skew-scaled ops
 
     @property
     def n_ops(self) -> int:
@@ -344,6 +360,7 @@ class PrefillOpTable:
             "bytes_row": np.asarray(self.bytes_row, np.float64),
             "bytes_ctx": np.asarray(self.bytes_ctx, np.float64),
             "m_row": np.asarray(self.m_row, np.float64),
+            "moe_layer": np.asarray(self.moe_layer, np.int32),
         }
 
     # ------------- closed-form evaluation -------------
@@ -443,7 +460,8 @@ def build_prefill_op_table(cfg: ModelConfig, *, tp: int = 1, ep: int = 1,
         flop_row=flop_row, flop_row_ctx=flop_row_ctx,
         flop_row_chunk=flop_row_chunk,
         bytes_const=bytes_const, bytes_row=bytes_row, bytes_ctx=bytes_ctx,
-        m_row=m_row)
+        m_row=m_row,
+        moe_layer=np.array(workload.moe_layer_ordinals(names0), np.int32))
     _validate_prefill(cfg, table, **kw)
     return table
 

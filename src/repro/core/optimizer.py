@@ -34,17 +34,45 @@ class Scenario:
     """TPOT SLO x average context length (paper section 3.1), optionally
     extended with a prefill spec: `prompt_len` (tokens to prefill per
     request) and `ttft_ms` (time-to-first-token SLO; 0 = unconstrained).
-    `prompt_len == 0` keeps the seed's decode-only semantics."""
+    `prompt_len == 0` keeps the seed's decode-only semantics.
+
+    The routing axis models expert-load skew: `routing="zipf"` with
+    `zipf_s > 0` draws a per-MoE-layer Zipf(s) expert-popularity vector
+    from `routing_seed` (`core.placement`), and the cost model charges the
+    MAX per-rank expert load instead of the mean. The default
+    (`routing="uniform"`, which `zipf_s=0` also reduces to) is
+    byte-identical to the pre-skew stack — `name` and every sweep result
+    are unchanged."""
     tpot_ms: float
     context: int
     prompt_len: int = 0
     ttft_ms: float = 0.0
+    routing: str = "uniform"
+    zipf_s: float = 0.0
+    routing_seed: int = 0
+
+    def __post_init__(self):
+        if self.routing not in ("uniform", "zipf"):
+            raise ValueError(f"unknown routing {self.routing!r}; "
+                             "expected 'uniform' or 'zipf'")
+        if self.zipf_s < 0:
+            raise ValueError(f"zipf_s must be >= 0, got {self.zipf_s}")
+
+    @property
+    def is_skewed(self) -> bool:
+        """True when the scenario departs from uniform expert load —
+        s = 0 is the uniform distribution, so it keeps the fast path."""
+        return self.routing == "zipf" and self.zipf_s > 0
 
     @property
     def name(self) -> str:
         base = f"tpot{int(self.tpot_ms)}ms_ctx{self.context}"
         if self.prompt_len:
             base += f"_p{self.prompt_len}_ttft{int(self.ttft_ms)}ms"
+        if self.is_skewed:
+            base += f"_zipf{self.zipf_s:g}"
+            if self.routing_seed:
+                base += f"_seed{self.routing_seed}"
         return base
 
     @property
@@ -82,6 +110,7 @@ class OperatingPoint:
     tp: int = 1                    # the (tp, pp, ep) mapping of the point
     ep: int = 0                    # resolved EP degree (1 for dense models)
     pp: int = 1                    # pipeline-parallel degree (layer stages)
+    extra_experts: int = 0         # replica expert slots per rank (placement)
 
     @property
     def throughput_per_xpu(self):  # filled by caller via cluster.n_xpus
@@ -361,7 +390,9 @@ def max_throughput(cluster: Cluster, cfg: ModelConfig, scenario: Scenario,
                    tp: Union[int, str] = 1, pp: Union[int, str] = 1,
                    ep: Optional[int] = None,
                    dtype: str = "fp8",
-                   backend: Optional[str] = None) -> Optional[OperatingPoint]:
+                   backend: Optional[str] = None,
+                   placement: Optional[str] = None
+                   ) -> Optional[OperatingPoint]:
     """Best operating point under the TPOT SLO, or None if the SLO is
     unreachable at every feasible batch size.
 
@@ -377,31 +408,50 @@ def max_throughput(cluster: Cluster, cfg: ModelConfig, scenario: Scenario,
     best mapping's point (ties prefer the smaller tp, then the smaller pp,
     so the fixed mapping wins exact draws); the chosen mapping is recorded
     on `OperatingPoint.tp` / `.pp` / `.ep`.
+
+    placement="auto" additionally searches expert replication for skewed
+    scenarios (`core.placement`): R extra expert slots per rank, spending
+    the HBM headroom left after the ep shard, merged with the R=0 arm
+    first so the search can never lose to no-placement (and uniform
+    scenarios keep the byte-identical R=0 result). The chosen R is
+    recorded on `OperatingPoint.extra_experts`.
     """
     from repro.core import sweep
     return sweep.sweep_max_throughput([cluster], cfg, [scenario], dbo=dbo,
                                       sd=sd, tp=tp, pp=pp, ep=ep,
-                                      dtype=dtype, backend=backend)[0][0]
+                                      dtype=dtype, backend=backend,
+                                      placement=placement)[0][0]
 
 
 def max_throughput_scalar(cluster: Cluster, cfg: ModelConfig,
                           scenario: Scenario, *, dbo: bool = False,
                           sd: Optional[SpecDecConfig] = None, tp: int = 1,
                           pp: int = 1, ep: Optional[int] = None,
-                          dtype: str = "fp8") -> Optional[OperatingPoint]:
+                          dtype: str = "fp8",
+                          extra_slots: int = 0) -> Optional[OperatingPoint]:
     """Reference scalar sweep (the seed implementation, one `tpot_at` call
     per grid point). Kept as the ground truth the batched engine is tested
     against, and as the fallback when a batched TPOT lands exactly on the
-    SLO boundary."""
+    SLO boundary.
+
+    Skewed scenarios thread their per-layer hot-rank load factors
+    (`placement.point_factors`) into every ServingPoint; `extra_slots`
+    fixes the replica count of one placement-search arm (the batched
+    search's knife-edge fallback passes the arm it is finalizing)."""
+    from repro.core import placement
     n = cluster.n_xpus
     if cfg.moe is not None:
         ep = ep or max(n // (tp * pp), 1)
     else:
         ep = 1
+        extra_slots = 0
     tpot_budget = scenario.tpot_ms * 1e-3
 
     p0 = ServingPoint(batch_global=1, context=scenario.context, tp=tp, ep=ep,
-                      n_devices=n, dtype=dtype, pp=pp)
+                      n_devices=n, dtype=dtype, pp=pp,
+                      moe_load=placement.point_factors(cfg, scenario, ep,
+                                                       extra_slots),
+                      moe_extra=extra_slots)
     # reject scenarios where ONE request's prompt + decode context cannot
     # be held at all (degenerate empty grids otherwise); batch sizing
     # keeps the seed convention of KV at the average context
@@ -421,7 +471,8 @@ def max_throughput_scalar(cluster: Cluster, cfg: ModelConfig,
             best = OperatingPoint(batch=b, tpot=tpot, throughput=thr,
                                   used_dbo=dbo, used_sd=sd is not None,
                                   exposed_comm=ect, t_compute=tc, t_comm=tm,
-                                  tp=tp, ep=ep, pp=pp)
+                                  tp=tp, ep=ep, pp=pp,
+                                  extra_experts=extra_slots)
     return best
 
 
@@ -433,7 +484,8 @@ def best_of_opts(cluster: Cluster, cfg: ModelConfig, scenario: Scenario,
     Runs on the batched sweep engine; `sweep.best_of_opts_grid` is the
     many-clusters/many-scenarios entry point the benchmarks use. Accepts
     tp="auto" / pp="auto" to co-optimize the (tp, pp, ep) mapping per
-    cluster."""
+    cluster, and placement="auto" to search expert replication for skewed
+    scenarios (see `max_throughput`)."""
     from repro.core import sweep
     return sweep.best_of_opts_grid([cluster], cfg, [scenario], opts,
                                    **kw)[0][0]

@@ -29,6 +29,11 @@ stagger; `dbo_tpot` applies both to a decode op list. The same machinery
 times DBO'd prefill chunks (`optimizer.prefill_iteration_dbo` splits a
 chunk into two causal half-chunk microbatches) and is vectorized exactly
 over sweep grids by `sweep.GridEval.dbo_makespan`.
+
+Layer: schedule math over per-op duration lists from `core.workload` +
+`core.compute_model`; `dbo_best` is the scalar REFERENCE the batched
+(max,+) vectorizations (`sweep._lane_makespan`, `sweep_jax`) are held to
+at 1e-9 / 1e-6 respectively.
 """
 from __future__ import annotations
 

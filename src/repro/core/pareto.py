@@ -4,6 +4,9 @@ Each point = (monthly cost per XPU, throughput per XPU) for one
 (topology, link bandwidth, cluster size) under a scenario with all software
 optimizations. The slope origin->point is throughput per cost; the Pareto
 frontier is the upper-left hull.
+
+Layer: presentation-side aggregation over sweep results + `core.tco`;
+no timing math of its own, so parity is inherited from the sweep.
 """
 from __future__ import annotations
 

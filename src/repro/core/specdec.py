@@ -10,6 +10,11 @@ t_verify = one iteration where attention q_len = spec_m and every other op
            sees batch * spec_m rows.
 
 Defaults (spec_m, spec_p) = (4, 0.8) per the paper.
+
+Layer: a combinator over iteration times — the scalar path feeds it
+`optimizer.iteration_time`, the batched engines feed it
+`GridEval.best_iteration(q)`; the 1e-9 parity contract covers the
+combined TPOT because both sides evaluate this same formula.
 """
 from __future__ import annotations
 

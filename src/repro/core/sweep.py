@@ -48,6 +48,18 @@ A2A over the stage's quotient, pp hops on the stage-boundary link), and
 each (cluster, scenario) cell keeps the highest-throughput mapping — ties
 to the smallest (tp, pp) lexicographically, so fixed-mapping (tp=1, pp=1)
 results are byte-identical to the seed.
+
+Expert-load skew (`Scenario(routing="zipf", ...)`, see `core.placement`):
+tables stay UNIFORM — skew enters as per-op constant multipliers
+(`op_load_factors`: lf scales the row-linear flops/bytes/payload of the
+expert GEMM and A2As per scenario, cf scales the expert weight stream
+under replication) applied inside `GridEval._durations`, so no new table
+cache keys and no new probe points. `load=None` (every scenario uniform,
+no replicas) skips the factor path entirely — structural byte-identity,
+not a numerical coincidence. placement="auto" wraps the fixed-mapping
+search in a replica-count loop (`_placement_candidates`) merged R=0-first
+through the same strict-> `_merge_best`, so the placement search can
+never lose to no-placement and uniform scenarios keep the R=0 arm.
 """
 from __future__ import annotations
 
@@ -57,7 +69,7 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core import optable, workload
+from repro.core import optable, placement, workload
 from repro.core.compute_model import (EFF_MEMORY, GEMM_SMALL_TOKENS,
                                       T_LAUNCH)
 from repro.core.optable import OpTable
@@ -177,6 +189,49 @@ def _lane_makespan(lanes: np.ndarray, dur_a: np.ndarray,
 
 
 # ---------------------------------------------------------------------------
+# expert-skew load factors
+# ---------------------------------------------------------------------------
+
+def op_load_factors(table, cfg: ModelConfig, scenarios: Sequence,
+                    extra_slots: int = 0
+                    ) -> Optional[Tuple[np.ndarray, np.ndarray]]:
+    """Per-op skew multipliers for one grid, or None on the uniform path.
+
+    Returns (lf, cf): lf (n_ops, n_scenarios) multiplies the row-linear
+    flops / bytes / payload coefficients of the skew-scaled MoE ops
+    (`workload.SKEW_SCALED_OPS`, located via the table's `moe_layer`
+    column) with the scenario's per-MoE-layer hot-rank load factor
+    (`placement.layer_load_factors`); cf (n_ops,) multiplies bytes_const
+    — the expert weight stream — with the replica hosting factor
+    (`placement.hosting_factor`). Both are exactly 1 everywhere else.
+    None (every scenario uniform, no replicas, or no sharded experts)
+    selects `GridEval`'s untouched seed arithmetic — byte-identity is
+    structural, not numerical. Works on decode and prefill tables alike.
+    """
+    skewed = [bool(getattr(sc, "is_skewed", False)) for sc in scenarios]
+    if cfg.moe is None or (not any(skewed) and not extra_slots):
+        return None
+    ml = np.asarray(table.moe_layer)
+    sel = ml >= 0
+    lf = np.ones((table.n_ops, len(scenarios)))
+    if sel.any():
+        for si, sc in enumerate(scenarios):
+            if not skewed[si]:
+                continue
+            fac = np.asarray(placement.layer_load_factors(
+                cfg, sc, table.ep, extra_slots))
+            lf[sel, si] = fac[ml[sel]]
+    cf = np.ones(table.n_ops)
+    if extra_slots:
+        host = np.array([nm.rsplit(".", 1)[-1] == "expert_ffn"
+                         for nm in table.names])
+        cf[host] = placement.hosting_factor(cfg, table.ep, extra_slots)
+    if not extra_slots and np.all(lf == 1.0):
+        return None            # e.g. ep=1: skew cannot create imbalance
+    return lf, cf
+
+
+# ---------------------------------------------------------------------------
 # grid evaluation context
 # ---------------------------------------------------------------------------
 
@@ -191,18 +246,24 @@ class GridEval:
     selection) is shared NumPy code. backend=None takes the module
     default (see `set_default_backend`).
 
+    `load` carries the expert-skew multipliers from `op_load_factors`
+    (None on the uniform path, which then runs the seed arithmetic
+    unchanged — byte-identity is structural).
+
     All result arrays have shape (n_clusters, n_scenarios, n_batches).
     """
 
     def __init__(self, table: OpTable, clusters: Sequence[Cluster],
                  scenarios: Sequence, batches: np.ndarray,
-                 backend: Optional[str] = None):
+                 backend: Optional[str] = None,
+                 load: Optional[Tuple[np.ndarray, np.ndarray]] = None):
         self.table = table
         self.clusters = list(clusters)
         self.scenarios = list(scenarios)
         self.batches = np.asarray(batches, np.int64)
         self.half = np.maximum(self.batches // 2, 1)
         self.backend = _resolve_backend(backend)
+        self.load = load
         self._engine = None
         self._dur: Dict = {}
         self._mk: Dict = {}
@@ -213,7 +274,7 @@ class GridEval:
             from repro.core import sweep_jax
             self._engine = sweep_jax.JaxGridEngine(
                 self.table, self.clusters, self.scenarios, self.batches,
-                self.half)
+                self.half, load=self.load)
         return self._engine
 
     # ------------- durations -------------
@@ -233,10 +294,21 @@ class GridEval:
         # compute roofline (cluster axis only matters if XPUs differ)
         flops_base = t.flop_row[:, None] * rows
         flops_ctx = t.flop_row_ctx[:, None] * rows
-        byts_base = t.bytes_const[:, None] + t.bytes_row[:, None] * rows
         byts_ctx = t.bytes_ctx[:, None] * t.batch_per_device(b_arr)
-        flops_sc = flops_base[:, None, :] + flops_ctx[:, None, :] * ctx
-        byts_sc = byts_base[:, None, :] + byts_ctx[:, None, :] * ctx
+        if self.load is None:
+            byts_base = t.bytes_const[:, None] + t.bytes_row[:, None] * rows
+            flops_sc = flops_base[:, None, :] + flops_ctx[:, None, :] * ctx
+            byts_sc = byts_base[:, None, :] + byts_ctx[:, None, :] * ctx
+        else:
+            # expert-skew path: lf (n_ops, n_sc) scales the row-linear
+            # terms per scenario (exact — affected ops have zero ctx
+            # coefficients), cf (n_ops,) scales the expert weight stream
+            lf3 = self.load[0][:, :, None]
+            flops_sc = (flops_base[:, None, :] * lf3
+                        + flops_ctx[:, None, :] * ctx)
+            byts_sc = ((t.bytes_const * self.load[1])[:, None, None]
+                       + (t.bytes_row[:, None] * rows)[:, None, :] * lf3
+                       + byts_ctx[:, None, :] * ctx)
 
         fp8 = t.dtype == "fp8"
         eff = np.where(rows < GEMM_SMALL_TOKENS,
@@ -255,8 +327,17 @@ class GridEval:
 
         m = t.m_bytes(b_arr, q)                        # (n_ops, n_b)
         comm = np.zeros_like(comp)
-        for ci, cl in enumerate(self.clusters):
-            comm[:, ci] = _comm_times(t, cl, m)[:, None, :]
+        if self.load is None:
+            for ci, cl in enumerate(self.clusters):
+                comm[:, ci] = _comm_times(t, cl, m)[:, None, :]
+        else:
+            # hot-rank A2A payload: the collective finishes when its
+            # hottest rank does, so the beta term scales by lf per
+            # scenario (alpha unchanged — _comm_times broadcasts over
+            # the trailing (n_sc, n_b) axes)
+            m_sc = m[:, None, :] * self.load[0][:, :, None]
+            for ci, cl in enumerate(self.clusters):
+                comm[:, ci] = _comm_times(t, cl, m_sc)
         comm = np.where(is_comp, 0.0, comm)
 
         # pipeline bottleneck: the largest stage's layer ops repeat
@@ -462,8 +543,11 @@ def _auto_candidates(clusters: Sequence[Cluster], cfg: ModelConfig,
     return cands
 
 
-def _prepare_grid(clusters, cfg, scenarios, tp, pp, ep_r, dtype):
-    """Per-(cluster, scenario) seed batch grids + their sorted union."""
+def _prepare_grid(clusters, cfg, scenarios, tp, pp, ep_r, dtype,
+                  extra_slots=0):
+    """Per-(cluster, scenario) seed batch grids + their sorted union.
+    extra_slots > 0 charges the replica weights against HBM (shrinking
+    the grids) via `ServingPoint.moe_extra`."""
     from repro.core.optimizer import _batch_grid
     n = clusters[0].n_xpus
     grids = {}
@@ -476,9 +560,11 @@ def _prepare_grid(clusters, cfg, scenarios, tp, pp, ep_r, dtype):
             # average context
             mem_ctx = getattr(sc, "mem_context", sc.context)
             p0 = ServingPoint(batch_global=1, context=sc.context, tp=tp,
-                              ep=ep_r, n_devices=n, dtype=dtype, pp=pp)
+                              ep=ep_r, n_devices=n, dtype=dtype, pp=pp,
+                              moe_extra=extra_slots)
             p_mem = ServingPoint(batch_global=1, context=mem_ctx, tp=tp,
-                                 ep=ep_r, n_devices=n, dtype=dtype, pp=pp)
+                                 ep=ep_r, n_devices=n, dtype=dtype, pp=pp,
+                                 moe_extra=extra_slots)
             if not workload.single_request_fits(cfg, p_mem, cl.xpu.hbm_cap):
                 grids[ci, si] = []
                 continue
@@ -490,9 +576,11 @@ def _prepare_grid(clusters, cfg, scenarios, tp, pp, ep_r, dtype):
 
 
 def _select_and_finalize(ev: GridEval, grids, cfg, *, dbo, sd, tp, pp,
-                         ep_r, dtype):
+                         ep_r, dtype, extra_slots=0):
     """Feasibility + argmax on the batched TPOTs, then re-evaluate the
-    winner through the exact scalar path (byte-identical OperatingPoint)."""
+    winner through the exact scalar path (byte-identical OperatingPoint).
+    extra_slots tags the replica-count arm of the placement search so the
+    scalar re-derivation (and knife-edge fallback) prices the same skew."""
     from repro.core import optimizer
 
     tpot = ev.tpot(dbo=dbo, sd=sd)
@@ -520,13 +608,16 @@ def _select_and_finalize(ev: GridEval, grids, cfg, *, dbo, sd, tp, pp,
             if knife_edge:
                 row.append(optimizer.max_throughput_scalar(
                     cl, cfg, ev.scenarios[si], dbo=dbo, sd=sd, tp=tp, pp=pp,
-                    ep=ep_r, dtype=dtype))
+                    ep=ep_r, dtype=dtype, extra_slots=extra_slots))
                 continue
             if best_b is None:
                 row.append(None)
                 continue
             p = ServingPoint(batch_global=best_b, context=sc.context, tp=tp,
-                             ep=ep_r, n_devices=n, dtype=dtype, pp=pp)
+                             ep=ep_r, n_devices=n, dtype=dtype, pp=pp,
+                             moe_load=placement.point_factors(
+                                 cfg, sc, ep_r, extra_slots),
+                             moe_extra=extra_slots)
             tpot_s, ect, tc, tm = optimizer.tpot_at(cfg, p, cl, dbo=dbo,
                                                     sd=sd)
             if tpot_s > budget:
@@ -534,28 +625,91 @@ def _select_and_finalize(ev: GridEval, grids, cfg, *, dbo, sd, tp, pp,
                 # scalar rounding disagrees — defer to the exact search
                 row.append(optimizer.max_throughput_scalar(
                     cl, cfg, sc, dbo=dbo, sd=sd, tp=tp, pp=pp, ep=ep_r,
-                    dtype=dtype))
+                    dtype=dtype, extra_slots=extra_slots))
                 continue
             row.append(optimizer.OperatingPoint(
                 batch=best_b, tpot=tpot_s, throughput=best_b / tpot_s,
                 used_dbo=dbo, used_sd=sd is not None, exposed_comm=ect,
-                t_compute=tc, t_comm=tm, tp=tp, ep=ep_r, pp=pp))
+                t_compute=tc, t_comm=tm, tp=tp, ep=ep_r, pp=pp,
+                extra_experts=extra_slots))
         out.append(row)
     return out
 
 
 def _sweep_fixed(clusters, cfg, scenarios, *, dbo, sd, tp, pp, ep_r,
-                 dtype, backend=None):
-    """One FIXED-mapping batched search (the pre-hybrid sweep body)."""
+                 dtype, backend=None, extra_slots=0):
+    """One FIXED-mapping batched search (the pre-hybrid sweep body).
+    Skewed scenarios are priced automatically (`op_load_factors` is
+    always consulted), so every caller — degraded re-search included —
+    honors the routing axis without its own plumbing."""
     n = clusters[0].n_xpus
     grids, batches = _prepare_grid(clusters, cfg, scenarios, tp, pp, ep_r,
-                                   dtype)
+                                   dtype, extra_slots=extra_slots)
     if batches.size == 0:
         return [[None] * len(scenarios) for _ in clusters]
     table = optable.op_table(cfg, tp, ep_r, n, dtype, pp=pp)
-    ev = GridEval(table, clusters, scenarios, batches, backend=backend)
+    load = op_load_factors(table, cfg, scenarios, extra_slots)
+    ev = GridEval(table, clusters, scenarios, batches, backend=backend,
+                  load=load)
     return _select_and_finalize(ev, grids, cfg, dbo=dbo, sd=sd, tp=tp, pp=pp,
-                                ep_r=ep_r, dtype=dtype)
+                                ep_r=ep_r, dtype=dtype,
+                                extra_slots=extra_slots)
+
+
+def _check_placement(placement_mode) -> None:
+    if placement_mode not in (None, "auto"):
+        raise ValueError(f"unknown placement {placement_mode!r}; "
+                         "expected None or 'auto'")
+
+
+def _placement_candidates(clusters, cfg, scenarios, tp, pp, ep_r,
+                          dtype) -> List[int]:
+    """Replica-slot candidates R of the placement search: 0 plus powers of
+    two, pruned to counts whose weight shard + replicas still fit at least
+    one cluster's HBM (the per-arm batch grids do the exact per-cluster
+    rejection) and capped at E - E/ep (every expert everywhere). [0] when
+    there is nothing to search: dense model, unsharded experts, or no
+    skewed scenario."""
+    if (cfg.moe is None or ep_r <= 1
+            or not any(getattr(sc, "is_skewed", False) for sc in scenarios)):
+        return [0]
+    cap = cfg.moe.num_experts - max(cfg.moe.num_experts // ep_r, 1)
+    out = [0]
+    r = 1
+    while r <= cap:
+        if any(workload.model_shard_bytes(cfg, tp, ep_r, dtype, pp, r)
+               < cl.xpu.hbm_cap * (1 - workload.KV_RESERVE_FRAC)
+               for cl in clusters):
+            out.append(r)
+        r *= 2
+    return out
+
+
+def _sweep_mapping(clusters, cfg, scenarios, *, dbo, sd, tp, pp, ep_r,
+                   dtype, backend=None, placement_mode=None, extra_slots=0):
+    """`_sweep_fixed`, optionally wrapped in the replication/placement
+    search: placement_mode="auto" runs one fixed-mapping search per
+    replica count and merges the arms R=0-FIRST through `_merge_best`'s
+    strict argmax — so auto placement can never lose to no-placement, and
+    uniform scenarios (whose extra replicas only add weight traffic) keep
+    the byte-identical R=0 result."""
+    _check_placement(placement_mode)
+    if placement_mode == "auto":
+        if extra_slots:
+            raise ValueError("pass either placement='auto' or a fixed "
+                             "extra_slots, not both")
+        rs = _placement_candidates(clusters, cfg, scenarios, tp, pp, ep_r,
+                                   dtype)
+    else:
+        rs = [extra_slots]
+    if len(rs) == 1:
+        return _sweep_fixed(clusters, cfg, scenarios, dbo=dbo, sd=sd, tp=tp,
+                            pp=pp, ep_r=ep_r, dtype=dtype, backend=backend,
+                            extra_slots=rs[0])
+    return _merge_best([
+        _sweep_fixed(clusters, cfg, scenarios, dbo=dbo, sd=sd, tp=tp, pp=pp,
+                     ep_r=ep_r, dtype=dtype, backend=backend, extra_slots=r)
+        for r in rs])
 
 
 def sweep_max_throughput(clusters: Sequence[Cluster], cfg: ModelConfig,
@@ -564,7 +718,8 @@ def sweep_max_throughput(clusters: Sequence[Cluster], cfg: ModelConfig,
                          tp: Union[int, str] = 1,
                          pp: Union[int, str] = 1,
                          ep: Optional[int] = None, dtype: str = "fp8",
-                         backend: Optional[str] = None
+                         backend: Optional[str] = None,
+                         placement: Optional[str] = None
                          ) -> List[List[Optional["OperatingPoint"]]]:
     """Batched optimizer.max_throughput over clusters x scenarios.
 
@@ -579,22 +734,30 @@ def sweep_max_throughput(clusters: Sequence[Cluster], cfg: ModelConfig,
     (cluster, scenario) cell keeps the highest-throughput mapping, ties to
     the smallest (tp, pp). The chosen mapping is recorded on the point's
     `tp` / `pp` / `ep` fields.
+
+    placement="auto" additionally searches expert replica counts for
+    skewed scenarios (`_placement_candidates`; chosen count on the
+    point's `extra_experts`) — a no-op, byte-identical to placement=None,
+    when every scenario routes uniformly.
     """
     n = clusters[0].n_xpus
     if any(cl.n_xpus != n for cl in clusters):
         raise ValueError("sweep_max_throughput requires a uniform device "
                          "count; group clusters by n_xpus")
+    _check_placement(placement)
     if tp == "auto" or pp == "auto":
         if ep is not None:
             raise ValueError("auto mapping search resolves ep = n/(tp*pp) "
                              "per candidate; pass ep=None")
         return _merge_best([
-            _sweep_fixed(clusters, cfg, scenarios, dbo=dbo, sd=sd, tp=t,
-                         pp=q, ep_r=e, dtype=dtype, backend=backend)
+            _sweep_mapping(clusters, cfg, scenarios, dbo=dbo, sd=sd, tp=t,
+                           pp=q, ep_r=e, dtype=dtype, backend=backend,
+                           placement_mode=placement)
             for t, q, e in _auto_candidates(clusters, cfg, dtype, tp, pp)])
     ep_r = _resolve_parallelism(cfg, n, tp, pp, ep)
-    return _sweep_fixed(clusters, cfg, scenarios, dbo=dbo, sd=sd, tp=tp,
-                        pp=pp, ep_r=ep_r, dtype=dtype, backend=backend)
+    return _sweep_mapping(clusters, cfg, scenarios, dbo=dbo, sd=sd, tp=tp,
+                          pp=pp, ep_r=ep_r, dtype=dtype, backend=backend,
+                          placement_mode=placement)
 
 
 def _variants_for(opts: str) -> List[Tuple[bool, Optional[SpecDecConfig]]]:
@@ -616,7 +779,9 @@ def best_of_opts_multi(clusters: Sequence[Cluster], cfg: ModelConfig,
                        tp: Union[int, str] = 1, pp: Union[int, str] = 1,
                        ep: Optional[int] = None,
                        dtype: str = "fp8",
-                       backend: Optional[str] = None
+                       backend: Optional[str] = None,
+                       placement: Optional[str] = None,
+                       extra_slots: int = 0
                        ) -> Dict[str, List[List[Optional["OperatingPoint"]]]]:
     """Batched optimizer.best_of_opts for SEVERAL opts levels at once.
 
@@ -624,31 +789,51 @@ def best_of_opts_multi(clusters: Sequence[Cluster], cfg: ModelConfig,
     levels ('dbo+sd' already evaluates everything 'noopt' and 'dbo' need),
     so e.g. fig11's three curves cost one engine pass, not three.
     tp="auto" / pp="auto" additionally sweep the (tp, pp, ep = n/(tp*pp))
-    mapping axes per level (one engine pass per candidate mapping).
+    mapping axes per level (one engine pass per candidate mapping), and
+    placement="auto" the expert replica counts (one engine pass per
+    count, merged R=0-first so it never loses to placement=None).
     """
     n = clusters[0].n_xpus
     if any(cl.n_xpus != n for cl in clusters):
         raise ValueError("best_of_opts_multi requires a uniform device "
                          "count")
+    _check_placement(placement)
     if tp == "auto" or pp == "auto":
         if ep is not None:
             raise ValueError("auto mapping search resolves ep = n/(tp*pp) "
                              "per candidate; pass ep=None")
         per_cand = [best_of_opts_multi(clusters, cfg, scenarios, opts_levels,
                                        tp=t, pp=q, ep=e, dtype=dtype,
-                                       backend=backend)
+                                       backend=backend, placement=placement,
+                                       extra_slots=extra_slots)
                     for t, q, e in _auto_candidates(clusters, cfg, dtype,
                                                     tp, pp)]
         return {opts: _merge_best([pc[opts] for pc in per_cand])
                 for opts in opts_levels}
     ep_r = _resolve_parallelism(cfg, n, tp, pp, ep)
-    grids, batches = _prepare_grid(clusters, cfg, scenarios, tp, pp, ep_r,
+    if placement == "auto":
+        if extra_slots:
+            raise ValueError("pass either placement='auto' or a fixed "
+                             "extra_slots, not both")
+        rs = _placement_candidates(clusters, cfg, scenarios, tp, pp, ep_r,
                                    dtype)
+        if len(rs) > 1:
+            per_r = [best_of_opts_multi(clusters, cfg, scenarios,
+                                        opts_levels, tp=tp, pp=pp, ep=ep,
+                                        dtype=dtype, backend=backend,
+                                        extra_slots=r)
+                     for r in rs]
+            return {opts: _merge_best([pr[opts] for pr in per_r])
+                    for opts in opts_levels}
+    grids, batches = _prepare_grid(clusters, cfg, scenarios, tp, pp, ep_r,
+                                   dtype, extra_slots=extra_slots)
     if batches.size == 0:
         empty = [[None] * len(scenarios) for _ in clusters]
         return {opts: [list(row) for row in empty] for opts in opts_levels}
     table = optable.op_table(cfg, tp, ep_r, n, dtype, pp=pp)
-    ev = GridEval(table, clusters, scenarios, batches, backend=backend)
+    load = op_load_factors(table, cfg, scenarios, extra_slots)
+    ev = GridEval(table, clusters, scenarios, batches, backend=backend,
+                  load=load)
 
     by_variant: Dict[Tuple, List[List[Optional["OperatingPoint"]]]] = {}
     out = {}
@@ -659,7 +844,7 @@ def best_of_opts_multi(clusters: Sequence[Cluster], cfg: ModelConfig,
             if key not in by_variant:
                 by_variant[key] = _select_and_finalize(
                     ev, grids, cfg, dbo=d, sd=s, tp=tp, pp=pp, ep_r=ep_r,
-                    dtype=dtype)
+                    dtype=dtype, extra_slots=extra_slots)
             per_variant.append(by_variant[key])
         level = []
         for ci in range(len(clusters)):
@@ -682,12 +867,13 @@ def best_of_opts_grid(clusters: Sequence[Cluster], cfg: ModelConfig,
                       tp: Union[int, str] = 1, pp: Union[int, str] = 1,
                       ep: Optional[int] = None,
                       dtype: str = "fp8",
-                      backend: Optional[str] = None
+                      backend: Optional[str] = None,
+                      placement: Optional[str] = None
                       ) -> List[List[Optional["OperatingPoint"]]]:
     """Batched optimizer.best_of_opts over clusters x scenarios."""
     return best_of_opts_multi(clusters, cfg, scenarios, [opts], tp=tp,
                               pp=pp, ep=ep, dtype=dtype,
-                              backend=backend)[opts]
+                              backend=backend, placement=placement)[opts]
 
 
 # ---------------------------------------------------------------------------
@@ -700,20 +886,57 @@ CHUNK_GRID = (128, 256, 512, 1024, 2048)
 SPLIT_FRACS = (0.125, 0.25, 0.375, 0.5, 0.625, 0.75)
 
 
+def _prefill_load(ptable: "optable.PrefillOpTable", cfg: ModelConfig,
+                  scenario) -> Optional[Tuple[np.ndarray, np.ndarray]]:
+    """Single-scenario (lf, cf) column vectors for a prefill table, or
+    None for the uniform fast path — `op_load_factors` specialised to the
+    per-schedule prefill evaluators (no scenario axis, no replication:
+    prefill chunks run on the unreplicated shard)."""
+    out = op_load_factors(ptable, cfg, [scenario], 0)
+    if out is None:
+        return None
+    lf, cf = out
+    return lf[:, 0], cf
+
+
+def _skew_sig(scenario) -> Optional[Tuple[float, int]]:
+    """Cache-key component distinguishing skewed scenarios that share a
+    prompt length (None for uniform, keeping seed keys unchanged)."""
+    if not getattr(scenario, "is_skewed", False):
+        return None
+    return (float(scenario.zipf_s), int(scenario.routing_seed))
+
+
 def _prefill_chunk_durations(ptable: "optable.PrefillOpTable",
                              cluster: Cluster, batch_global: int,
-                             sizes: np.ndarray, offsets: np.ndarray
+                             sizes: np.ndarray, offsets: np.ndarray,
+                             load: Optional[Tuple[np.ndarray,
+                                                  np.ndarray]] = None
                              ) -> Tuple[np.ndarray, np.ndarray]:
     """(comp, comm) per-op per-chunk duration rows of one chunk schedule,
     each (n_ops, n_chunks) with zeros off their own lane — the prefill
     counterpart of `GridEval._durations` (stage scale applied), built from
-    the table's chunk-polynomial closed forms."""
+    the table's chunk-polynomial closed forms. `load` (from
+    `_prefill_load`) prices expert skew; None is the untouched seed
+    arithmetic."""
     s = np.asarray(sizes, float)
     o = np.asarray(offsets, float)
     rows = ptable.rows(batch_global, s)                    # (n_chunks,)
-    flops = ptable.flops(batch_global, s, o)               # (n_ops, n_chunks)
-    byts = ptable.op_bytes(batch_global, s, o)
-    m = ptable.m_bytes(batch_global, s)
+    if load is None:
+        flops = ptable.flops(batch_global, s, o)           # (n_ops, n_chunks)
+        byts = ptable.op_bytes(batch_global, s, o)
+        m = ptable.m_bytes(batch_global, s)
+    else:
+        lfv, cfv = load
+        # exact for the skew-scaled ops: their ctx / chunk coefficients
+        # are zero (expert flops and A2A payload are row-linear), so
+        # scaling the closed-form total equals scaling the row term
+        flops = ptable.flops(batch_global, s, o) * lfv[:, None]
+        byts = (ptable.bytes_const[:, None] * cfv[:, None]
+                + (ptable.bytes_row[:, None] * rows) * lfv[:, None]
+                + ptable.bytes_ctx[:, None]
+                * (ptable.batch_per_device(batch_global) * o))
+        m = ptable.m_bytes(batch_global, s) * lfv[:, None]
 
     fp8 = ptable.dtype == "fp8"
     peak = cluster.xpu.flops_fp8 if fp8 else cluster.xpu.flops_bf16
@@ -733,19 +956,26 @@ def _prefill_chunk_times(ptable: "optable.PrefillOpTable", cluster: Cluster,
                          batch_global: int, sizes: Sequence[int],
                          offsets: Sequence[int], *,
                          dbo: bool = False,
-                         backend: Optional[str] = None) -> np.ndarray:
+                         backend: Optional[str] = None,
+                         load: Optional[Tuple[np.ndarray,
+                                              np.ndarray]] = None
+                         ) -> np.ndarray:
     """Prefill-iteration time per chunk of one schedule, shape (n_chunks,)
     — the batched `optimizer.prefill_chunk_components` time. dbo=False is
     the no-overlap sum (`optimizer.prefill_iteration_time`); dbo=True takes
     best-of(no-overlap, three-lane DBO) per chunk, where each chunk splits
     CAUSALLY into a leading ceil- and trailing floor-half microbatch
-    (`optimizer.prefill_iteration_dbo`); 1-token chunks stay no-overlap."""
-    if _resolve_backend(backend) == "jax":
+    (`optimizer.prefill_iteration_dbo`); 1-token chunks stay no-overlap.
+    Skewed schedules (`load` from `_prefill_load`) always run on the
+    NumPy reference path — per-schedule prefill rows are too small to
+    amortise a second jit variant, and uniform scenarios (load=None, the
+    byte-identity path) keep the jitted kernel."""
+    if load is None and _resolve_backend(backend) == "jax":
         from repro.core import sweep_jax
         return sweep_jax.prefill_chunk_times(ptable, cluster, batch_global,
                                              sizes, offsets, dbo=dbo)
     comp, comm = _prefill_chunk_durations(ptable, cluster, batch_global,
-                                          sizes, offsets)
+                                          sizes, offsets, load)
     seq = comp.sum(axis=0) + comm.sum(axis=0)
     if not dbo:
         return seq
@@ -754,9 +984,9 @@ def _prefill_chunk_times(ptable: "optable.PrefillOpTable", cluster: Cluster,
     h2 = s_arr // 2
     h1 = s_arr - h2
     comp_a, comm_a = _prefill_chunk_durations(ptable, cluster, batch_global,
-                                              h1, o_arr)
+                                              h1, o_arr, load)
     comp_b, comm_b = _prefill_chunk_durations(ptable, cluster, batch_global,
-                                              h2, o_arr + h1)
+                                              h2, o_arr + h1, load)
     mk = _lane_makespan(ptable.lane, comp_a + comm_a, comp_b + comm_b)
     return np.where(s_arr >= 2, np.minimum(seq, mk), seq)
 
@@ -780,21 +1010,30 @@ def batched_chunked_tpot_ttft(op_table: OpTable,
                               clusters: Sequence[Cluster],
                               batches: np.ndarray, scenario,
                               chunk: int, *, dbo: bool = False,
-                              backend: Optional[str] = None
+                              backend: Optional[str] = None,
+                              cfg: Optional[ModelConfig] = None
                               ) -> Tuple[np.ndarray, np.ndarray]:
     """(TPOT, TTFT) of the chunked-prefill model over a (cluster, batch)
     grid, each (n_clusters, n_batches) — the batched
     `optimizer.chunked_prefill_tpot` (matches it to 1e-9 relative, with
-    and without the three-lane DBO schedule)."""
-    ev = GridEval(op_table, clusters, [scenario], batches, backend=backend)
+    and without the three-lane DBO schedule). Pass `cfg` to price a
+    skewed scenario (without it the routing axis is ignored, the seed
+    behavior)."""
+    load = (op_load_factors(op_table, cfg, [scenario])
+            if cfg is not None else None)
+    ev = GridEval(op_table, clusters, [scenario], batches, backend=backend,
+                  load=load)
     t_dec = ev.best_iteration(1, dbo)[:, 0, :]             # (n_cl, n_b)
     sizes, offsets = workload.chunk_schedule(scenario.prompt_len, chunk)
     # chunk-carrying DP lanes across all pipeline stages: n/(tp*pp) per
     # stage times pp microbatches in flight = n/tp, pp-invariant
     domains = max(op_table.n // op_table.tp, 1)
+    p_load = (_prefill_load(ptable, cfg, scenario) if cfg is not None
+              else None)
     s_pre = np.stack([_prefill_chunk_times(ptable, cl, domains, sizes,
                                            offsets, dbo=dbo,
-                                           backend=backend).sum()
+                                           backend=backend,
+                                           load=p_load).sum()
                       for cl in clusters])                 # (n_cl,)
     tpot, ttft, _ = _chunked_formulas(t_dec, s_pre[:, None], len(sizes),
                                       batches[None, :], scenario.gen_len,
@@ -842,22 +1081,25 @@ def _sweep_chunked(clusters, cfg, scenarios, tp, pp, ep_r, dtype,
                                    dtype)
     if batches.size == 0:
         return [[None] * len(scenarios) for _ in clusters]
-    ev = GridEval(table, clusters, scenarios, batches, backend=backend)
+    load = op_load_factors(table, cfg, scenarios)
+    ev = GridEval(table, clusters, scenarios, batches, backend=backend,
+                  load=load)
     t_dec_all = ev.best_iteration(1, dbo)                  # (n_cl, n_sc, n_b)
     index = {int(b): i for i, b in enumerate(batches)}
     domains = max(n // tp, 1)
-    pre_cache: Dict[Tuple[int, int, int], float] = {}
+    pre_cache: Dict[Tuple, float] = {}
 
-    def s_pre_of(ci, prompt_len, c):
+    def s_pre_of(ci, sc, c):
         """Summed per-chunk prefill time, cached per (cluster, prompt,
-        chunk) — scenarios sharing a prompt length (e.g. a TTFT sweep)
-        reuse one DBO makespan evaluation."""
-        key = (ci, prompt_len, c)
+        chunk, skew signature) — scenarios sharing a prompt length (e.g.
+        a TTFT sweep) reuse one DBO makespan evaluation."""
+        key = (ci, sc.prompt_len, c, _skew_sig(sc))
         if key not in pre_cache:
-            sizes, offsets = workload.chunk_schedule(prompt_len, c)
+            sizes, offsets = workload.chunk_schedule(sc.prompt_len, c)
             pre_cache[key] = float(_prefill_chunk_times(
                 ptable, clusters[ci], domains, sizes, offsets,
-                dbo=dbo, backend=backend).sum())
+                dbo=dbo, backend=backend,
+                load=_prefill_load(ptable, cfg, sc)).sum())
         return pre_cache[key]
 
     out: List[List[Optional[optimizer.PrefillOperatingPoint]]] = []
@@ -869,7 +1111,7 @@ def _sweep_chunked(clusters, cfg, scenarios, tp, pp, ep_r, dtype,
             best = None                     # (thr, b, chunk, b_eff)
             for c in _chunk_candidates(sc.prompt_len, chunk_grid):
                 m = len(workload.chunk_schedule(sc.prompt_len, c)[0])
-                s_pre = s_pre_of(ci, sc.prompt_len, c)
+                s_pre = s_pre_of(ci, sc, c)
                 for b in grids[ci, si]:
                     t_dec = float(t_dec_all[ci, si, index[b]])
                     tpot, ttft, b_eff = (
@@ -885,7 +1127,8 @@ def _sweep_chunked(clusters, cfg, scenarios, tp, pp, ep_r, dtype,
                 continue
             _, b, c, b_eff = best
             p = ServingPoint(batch_global=b, context=sc.context, tp=tp,
-                             ep=ep_r, n_devices=n, dtype=dtype, pp=pp)
+                             ep=ep_r, n_devices=n, dtype=dtype, pp=pp,
+                             moe_load=placement.point_factors(cfg, sc, ep_r))
             tpot_s, ttft_s, ect, tc, tm = optimizer.chunked_prefill_components(
                 cfg, p, cl, sc, c, dbo=dbo)
             row.append(optimizer.PrefillOperatingPoint(
@@ -1030,7 +1273,7 @@ def _sweep_disagg(clusters, cfg, scenarios, tp, pp, dtype, split_fracs,
                     if workload.max_batch_by_memory(
                             cfg, p_pre, cl.xpu.hbm_cap) < domains_p:
                         continue
-                    ck = (n_p, tp_p, pp_p, ep_p, ci, L)
+                    ck = (n_p, tp_p, pp_p, ep_p, ci, L, _skew_sig(sc))
                     if ck not in pass_cache:
                         # the whole-prompt pass is a single-chunk scalar
                         # evaluation — no grid to amortize a jit over —
@@ -1039,7 +1282,8 @@ def _sweep_disagg(clusters, cfg, scenarios, tp, pp, dtype, split_fracs,
                         # (the decode-pool grid above is the heavy part)
                         pass_cache[ck] = float(_prefill_chunk_times(
                             ptable, cl_p, domains_p, [L], [0], dbo=dbo,
-                            backend="numpy")[0])
+                            backend="numpy",
+                            load=_prefill_load(ptable, cfg, sc))[0])
                     t_p = pass_cache[ck]
                     t_xfer = (ab.alpha0
                               + workload.kv_cache_bytes_per_request(cfg, L)

@@ -22,6 +22,13 @@ jitted device program:
                   stagger candidates
   prefill         the chunk-polynomial duration rows and the causal
                   half-chunk DBO makespan of `sweep._prefill_chunk_times`
+  skew            expert-load factors (`sweep.op_load_factors`) ride in as
+                  two extra per-op leaves (lf, cf) consumed by dedicated
+                  `*_skew` kernel variants whose comm accumulator carries a
+                  scenario axis; uniform grids (load=None) keep the
+                  scenario-free factored kernels untouched — the >= 10x
+                  product-grid speedup and the byte-identity path never
+                  see the skew code
 
 Numerics contract (docs/sweep_engine.md): every kernel runs under
 `jax.experimental.enable_x64` (float64, same associations as the NumPy
@@ -69,6 +76,8 @@ def require_jax() -> None:
 _PER_OP_KEYS = ("kind", "stage_scale", "eff", "eff_small", "flop_row",
                 "flop_row_ctx", "flop_row_chunk", "bytes_const",
                 "bytes_row", "bytes_ctx", "m_row", "A", "Mc", "Bt")
+# the skew kernels additionally scan the expert-load leaves
+_PER_OP_KEYS_SKEW = _PER_OP_KEYS + ("lf", "cf")
 
 
 # ---------------------------------------------------------------------------
@@ -210,6 +219,74 @@ def _seq_kernel(lw, rows, bpd, ctx):
     return tc_full, jnp.broadcast_to(tm[:, None, :], tc_full.shape)
 
 
+def _op_factors_skew(op, peak, hbm, rows, bpd, ctx, knee):
+    """(comp, comm) of ONE op under expert skew — `_op_factors` with the
+    per-scenario load factor lf on the row-linear flops / bytes / payload
+    terms and the hosting factor cf on the weight-stream bytes_const (the
+    same associations as `GridEval._durations`' skew branch, so numpy and
+    jax agree to float rounding). The payload now depends on the
+    scenario, so comm is (n_cl, n_sc, n_b) — the scenario-free
+    factorization is lost, which is why uniform grids keep the plain
+    kernels."""
+    lf = op["lf"]                                              # (n_sc,)
+    f = (op["flop_row"] * rows)[None, :] * lf[:, None] \
+        + (op["flop_row_ctx"] * rows)[None, :] * ctx[:, None]
+    by = op["bytes_const"] * op["cf"] \
+        + (op["bytes_row"] * rows)[None, :] * lf[:, None] \
+        + (op["bytes_ctx"] * bpd)[None, :] * ctx[:, None]
+    eff = jnp.where(knee, op["eff_small"], op["eff"])          # (n_b,)
+    t_c = f[None] / (peak[:, None, None] * eff[None, None, :])
+    t_m = by[None] / (hbm[:, None, None] * EFF_MEMORY)
+    comp = (jnp.maximum(t_c, t_m) + T_LAUNCH) * op["stage_scale"]
+    m = (op["m_row"] * rows)[None, :] * lf[:, None]            # (n_sc, n_b)
+    alg = op["A"][:, :, None, None] \
+        + (op["Mc"][:, :, None, None] * m[None, None]) \
+        * op["Bt"][:, :, None, None]
+    comm = alg.min(axis=1) * op["stage_scale"]         # (n_cl, n_sc, n_b)
+    return comp, comm, op["kind"] == optable.KIND_COMPUTE
+
+
+@_jit
+def _seq_kernel_skew(lw, rows, bpd, ctx):
+    """`_seq_kernel` for skewed grids: same scan, scenario-carrying comm
+    accumulator (n_cl, n_sc, n_b)."""
+    peak, hbm = lw["peak"], lw["hbm"]
+    knee = rows < GEMM_SMALL_TOKENS
+    per_op = {k: lw[k] for k in _PER_OP_KEYS_SKEW}
+
+    def step(carry, op):
+        comp, comm, is_comp = _op_factors_skew(op, peak, hbm, rows, bpd,
+                                               ctx, knee)
+        tc, tm = carry
+        return (tc + jnp.where(is_comp, comp, 0.0),
+                tm + jnp.where(is_comp, 0.0, comm)), None
+
+    z_c = jnp.zeros((peak.shape[0], ctx.shape[0], rows.shape[0]),
+                    rows.dtype)
+    z_m = jnp.zeros((lw["A"].shape[1], ctx.shape[0], rows.shape[0]),
+                    rows.dtype)
+    (tc, tm), _ = lax.scan(step, (z_c, z_m), per_op)
+    return tc[lw["xpu_idx"]], tm
+
+
+@_jit
+def _dur_kernel_skew(lw, rows, bpd, ctx):
+    """`_dur_kernel` for skewed grids (per-op durations for the DBO
+    makespan, full (n_ops, n_cl, n_sc, n_b))."""
+    peak, hbm = lw["peak"], lw["hbm"]
+    knee = rows < GEMM_SMALL_TOKENS
+    per_op = {k: lw[k] for k in _PER_OP_KEYS_SKEW}
+
+    def step(carry, op):
+        comp, comm, is_comp = _op_factors_skew(op, peak, hbm, rows, bpd,
+                                               ctx, knee)
+        d = jnp.where(is_comp, comp[lw["xpu_idx"]], comm)
+        return carry, d
+
+    _, dur = lax.scan(step, 0, per_op)
+    return dur
+
+
 @_jit
 def _dur_kernel(lw, rows, bpd, ctx):
     """Per-op duration tensor (n_ops, n_cl, n_sc, n_b) — the DBO makespan
@@ -337,10 +414,16 @@ class JaxGridEngine:
     shape (n_clusters, n_scenarios, n_batches)."""
 
     def __init__(self, table, clusters, scenarios,
-                 batches: np.ndarray, half: np.ndarray):
+                 batches: np.ndarray, half: np.ndarray, load=None):
         require_jax()
         self.table = table
         self.lw = lower_grid(table, clusters)
+        self.skew = load is not None
+        if self.skew:
+            # expert-load leaves (sweep.op_load_factors) ride the same
+            # pytree; the plain kernels never select them
+            self.lw["lf"] = np.asarray(load[0], np.float64)
+            self.lw["cf"] = np.asarray(load[1], np.float64)
         self.ctx = np.array([sc.context for sc in scenarios], np.float64)
         self.batches = np.asarray(batches, np.float64)
         self.half = np.asarray(half, np.float64)
@@ -352,14 +435,16 @@ class JaxGridEngine:
 
     def seq_components(self, q: int, half: bool = False):
         rows, bpd = self._rows(q, half)
+        kernel = _seq_kernel_skew if self.skew else _seq_kernel
         with enable_x64():
-            tc, tm = _seq_kernel(self.lw, rows, bpd, self.ctx)
+            tc, tm = kernel(self.lw, rows, bpd, self.ctx)
         return np.asarray(tc), np.asarray(tm)
 
     def dbo_makespan(self, q: int) -> np.ndarray:
         rows, bpd = self._rows(q, half=True)
+        kernel = _dur_kernel_skew if self.skew else _dur_kernel
         with enable_x64():
-            dur = _dur_kernel(self.lw, rows, bpd, self.ctx)
+            dur = kernel(self.lw, rows, bpd, self.ctx)
             mk = _makespan_kernel(np.asarray(self.table.lane, np.int32),
                                   dur, dur,
                                   *_stagger_orders(self.table.n_ops))

@@ -15,6 +15,11 @@ An adjustment factor c scales the network share:
 
 Costs are reported normalized to a reference unit (paper: 'normalized to a
 reference unit cost rather than absolute dollar figures').
+
+Layer: cost side only — consumes `core.topology` inventories, never
+timing; throughput/$ figures pair its output with sweep results
+downstream (benchmarks), so it carries no scalar/batched parity
+obligations.
 """
 from __future__ import annotations
 

@@ -11,6 +11,14 @@ concentrates failures into few high-blast-radius planes), and the derating
 formulas per topology live in `Cluster._fault_derate` (documented in
 docs/failure_model.md). A cluster with `faults=None` is byte-identical to
 the pre-fault model on every path.
+
+Expert-load skew never enters this layer: a skewed A2A is priced by
+scaling the per-op PAYLOAD handed to the alpha-beta menus (`m_bytes` x
+hot-rank load factor, `sweep.op_load_factors`) — the beta term grows with
+the hottest rank's ingress while the alpha terms (rounds, destinations)
+are topology properties and stay fixed, matching a symmetric collective
+that synchronizes on its slowest member. `comm_spec` and the menus below
+are skew-agnostic.
 """
 from __future__ import annotations
 

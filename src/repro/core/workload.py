@@ -12,6 +12,16 @@ on: every device in a parallelism domain executes the same-shaped shard, so
 we derive shapes analytically from (batch, context, config, TP, EP) and feed
 them to the roofline-with-efficiency compute model.
 
+Expert-load skew (`core.placement`): uniform routing is the default and the
+byte-identical fast path. A skewed scenario threads per-MoE-layer hot-rank
+load factors through `ServingPoint.moe_load` (and replica slots through
+`ServingPoint.moe_extra`); `moe_ops` then charges the MAX per-rank expert
+load — grouped-GEMM row terms and A2A payload scale by the factor, the
+expert weight stream by the hosted-expert count. Ops affected are exactly
+`SKEW_SCALED_OPS`; `moe_layer_ordinals` maps op names to the per-layer
+factor index and is the single source of truth shared with
+`optable.OpTable.moe_layer`.
+
 All sizes below are PER DEVICE unless suffixed `_global`.
 """
 from __future__ import annotations
@@ -67,6 +77,11 @@ class ServingPoint:
     kv_dtype: str = "bf16"
     q_len: int = 1               # >1 during SD verification
     pp: int = 1                  # pipeline-parallel degree (layer stages)
+    # expert-load skew (core.placement): per-MoE-layer hot-rank load
+    # factors (execution order; () = uniform, the byte-identical default)
+    # and replica expert slots hosted per rank beyond the E/ep shard
+    moe_load: Tuple[float, ...] = ()
+    moe_extra: int = 0
 
     @property
     def n(self) -> int:
@@ -134,7 +149,8 @@ def attention_ops(cfg: ModelConfig, p: ServingPoint) -> List[Op]:
     return ops
 
 
-def moe_ops(cfg: ModelConfig, p: ServingPoint) -> List[Op]:
+def moe_ops(cfg: ModelConfig, p: ServingPoint, load: float = 1.0,
+            extra: int = 0) -> List[Op]:
     """MoE FFN sublayer of ONE layer: router + A2A dispatch + experts + A2A.
 
     With tp > 1 the experts are TP-sharded inside each expert group: the
@@ -144,6 +160,16 @@ def moe_ops(cfg: ModelConfig, p: ServingPoint) -> List[Op]:
     [rows, d] output over the tp shards (the row-parallel partial sums,
     shared-expert included). At tp=1 every term reduces to the paper's
     fixed mapping exactly.
+
+    `load` is the layer's hot-rank load factor (`core.placement`, >= 1):
+    under skewed routing a symmetric A2A/grouped-GEMM finishes when its
+    hottest rank does, so the token-proportional terms of `a2a_dispatch`,
+    `expert_ffn` and `a2a_gather` scale by `load` instead of the mean.
+    `extra` replica expert slots per rank widen the expert weight stream
+    (and the HBM shard — see `model_shard_bytes`). The defaults
+    (load=1.0, extra=0) are bit-exact no-ops: multiplying by 1.0 and
+    adding 0 leave every float unchanged, preserving the uniform path's
+    byte-identity.
     """
     assert cfg.moe is not None
     m = cfg.moe
@@ -161,22 +187,24 @@ def moe_ops(cfg: ModelConfig, p: ServingPoint) -> List[Op]:
 
     # dispatch A2A: each token is sent to top-k expert owners.
     # m = per-device payload = rows * topk * d / tp (paper's A2A message
-    # convention; the domain's tp devices split the token features)
-    a2a_bytes = rows * m.experts_per_token * d * wb / p.tp
+    # convention; the domain's tp devices split the token features); the
+    # hottest rank ingests `load` x the mean and the collective waits on it
+    a2a_bytes = rows * m.experts_per_token * d * wb / p.tp * load
     if p.ep > 1:
         ops.append(Op(name="a2a_dispatch", kind="a2a", m_bytes=a2a_bytes,
                       group=p.ep))
 
-    # expert FFN: each expert group hosts E/ep experts and receives
-    # rows * topk tokens on average (load-balanced); each of the group's tp
-    # devices holds a 1/tp shard of the expert weights and activations.
+    # expert FFN: each expert group hosts E/ep experts (+ `extra` replica
+    # slots) and its hottest rank receives rows * topk * load tokens; each
+    # of the group's tp devices holds a 1/tp shard of the expert weights
+    # and activations.
     tokens_in = rows * m.experts_per_token
     experts_local = max(m.num_experts // p.ep, 1)
     w_expert = 3 * d * m.d_expert            # SwiGLU gate/up/down
     ops.append(Op(name="expert_ffn", kind="compute",
-                  flops=2 * tokens_in * w_expert / p.tp,
-                  bytes=(experts_local * w_expert * wb
-                         + 2 * tokens_in * d * wb) / p.tp,
+                  flops=2 * tokens_in * load * w_expert / p.tp,
+                  bytes=((experts_local + extra) * w_expert * wb
+                         + 2 * tokens_in * load * d * wb) / p.tp,
                   op_class="gemm"))
 
     if m.num_shared_experts:
@@ -237,6 +265,32 @@ def is_per_layer_op(name: str) -> bool:
     return "." in name
 
 
+# ops whose token-proportional terms scale with the hot-rank expert load
+# factor under skewed routing (see `moe_ops` and `core.placement`); the
+# router, shared expert and TP all-reduces see every token regardless of
+# which expert it routes to, so they stay at the mean
+SKEW_SCALED_OPS = ("a2a_dispatch", "expert_ffn", "a2a_gather")
+
+
+def moe_layer_ordinals(names) -> List[int]:
+    """Per-op MoE-layer ordinal for skew scaling: -1 for ops unaffected by
+    expert-load skew, else the op's 0-based index among MoE layers in
+    execution order — the same counter `decode_iteration` advances, so
+    `ServingPoint.moe_load[ordinal]` is the factor the scalar path applied.
+    Single source of truth for `optable.OpTable.moe_layer`."""
+    out: List[int] = []
+    seen: dict = {}
+    for nm in names:
+        if "." in nm and nm.rsplit(".", 1)[-1] in SKEW_SCALED_OPS:
+            layer = nm.split(".", 1)[0]
+            if layer not in seen:
+                seen[layer] = len(seen)
+            out.append(seen[layer])
+        else:
+            out.append(-1)
+    return out
+
+
 def stage_imbalance(n_layers: int, pp: int) -> float:
     """Pipeline bottleneck factor of the balanced partition: the steady-
     state round period is pp * t_largest_stage, so per-layer op times
@@ -275,6 +329,7 @@ def decode_iteration(cfg: ModelConfig, p: ServingPoint) -> List[Op]:
             boundaries.add(acc)
     hop_bytes = p.batch_per_device * p.q_len * cfg.d_model * _wb(p) / p.tp
     stage = 0
+    moe_i = 0
     ops: List[Op] = []
     for li, spec in enumerate(cfg.layer_specs):
         if li in boundaries:
@@ -298,12 +353,17 @@ def decode_iteration(cfg: ModelConfig, p: ServingPoint) -> List[Op]:
                 layer_ops.append(Op(name="mixer_ar", kind="ar",
                                    m_bytes=rows * d * wb, group=p.tp))
         if spec.ffn == "moe":
-            layer_ops += moe_ops(cfg, p)
+            lf = p.moe_load[moe_i] if p.moe_load else 1.0
+            layer_ops += moe_ops(cfg, p, load=lf, extra=p.moe_extra)
+            moe_i += 1
         elif spec.ffn == "dense":
             layer_ops += dense_ffn_ops(cfg, p)
         ops += [Op(name=prefix + o.name, kind=o.kind, flops=o.flops,
                    bytes=o.bytes, op_class=o.op_class, m_bytes=o.m_bytes,
                    group=o.group) for o in layer_ops]
+    if p.moe_load and len(p.moe_load) != moe_i:
+        raise ValueError(f"moe_load has {len(p.moe_load)} factors but the "
+                         f"model has {moe_i} MoE layers")
 
     # LM head (vocab projection, TP-sharded)
     d, v = cfg.d_model, cfg.vocab_size
@@ -407,7 +467,8 @@ def kv_cache_bytes_per_request(cfg: ModelConfig, context: int,
 
 
 def model_shard_bytes(cfg: ModelConfig, tp: int, ep: int,
-                      dtype: str = "fp8", pp: int = 1) -> float:
+                      dtype: str = "fp8", pp: int = 1,
+                      extra_experts: int = 0) -> float:
     """Per-device weight bytes: per-layer dense params / (tp*pp), expert
     params / (ep*tp*pp) (experts are TP-sharded inside each expert group,
     see `moe_ops` — at the paper mapping (tp=1, pp=1, ep=n) this is expert
@@ -420,7 +481,13 @@ def model_shard_bytes(cfg: ModelConfig, tp: int, ep: int,
     which pipeline stages do NOT split — are charged in full (one
     vocab x d matrix, TP-sharded) to the boundary stage, so an uneven
     split or a fat vocabulary cannot sneak a stage past the HBM capacity
-    the uniform average would claim. pp=1 is the seed formula exactly."""
+    the uniform average would claim. pp=1 is the seed formula exactly.
+
+    `extra_experts` replica slots per rank (the placement search,
+    `core.placement`) each host one full TP-sharded expert on EVERY rank
+    — they do not divide by ep — and under pp they belong to the stage's
+    own MoE layers, so they carry the same imb/pp bottleneck factor as
+    the base expert shard. extra_experts=0 adds nothing (bit-exact)."""
     wb = BYTES[dtype]
     total_params = cfg.param_count()
     imb = stage_imbalance(cfg.num_layers, pp)
@@ -436,11 +503,17 @@ def model_shard_bytes(cfg: ModelConfig, tp: int, ep: int,
     expert_params = n_moe * m.num_experts * 3 * cfg.d_model * m.d_expert
     dense_params = total_params - expert_params
     if pp == 1:
-        return (dense_params / tp + expert_params / (ep * tp)) * wb
-    layer_dense = dense_params - io_params * (1 if cfg.tie_embeddings
-                                              else 2)
-    return ((io_params + layer_dense * imb / pp) / tp
-            + expert_params * imb / (ep * tp * pp)) * wb
+        total = (dense_params / tp + expert_params / (ep * tp)) * wb
+    else:
+        layer_dense = dense_params - io_params * (1 if cfg.tie_embeddings
+                                                  else 2)
+        total = ((io_params + layer_dense * imb / pp) / tp
+                 + expert_params * imb / (ep * tp * pp)) * wb
+    if extra_experts:
+        w_expert = 3 * cfg.d_model * m.d_expert
+        scale = imb / pp if pp > 1 else 1.0
+        total += n_moe * extra_experts * w_expert * scale * wb / tp
+    return total
 
 
 # HBM fraction reserved for activations/fragmentation — the single memory
@@ -468,7 +541,7 @@ def max_batch_by_memory(cfg: ModelConfig, p: ServingPoint, hbm_cap: float,
     only its own layers' KV (1/pp of a request) for the pp microbatches
     it serves — per-device KV totals B*tp/n * kv_request either way, but
     the request count each device can admit divides by tp*pp."""
-    shard = model_shard_bytes(cfg, p.tp, p.ep, p.dtype, p.pp)
+    shard = model_shard_bytes(cfg, p.tp, p.ep, p.dtype, p.pp, p.moe_extra)
     free = hbm_cap * (1 - reserve_frac) - shard
     if free <= 0:
         return 0

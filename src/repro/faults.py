@@ -14,6 +14,11 @@ Everything here is deterministic given its seed — injected failures must
 reproduce exactly across reruns (a recovery drill that fails flakily is
 useless as a regression test), so the injector takes explicit step
 indices or a seed, never wall-clock or global RNG state.
+
+Layer: shared seam between the serving stack (`core.topology.FaultSet`,
+`core.availability`) and the training loop; everything here is seeded and
+deterministic, matching the repo-wide reproducibility contract (committed
+figure JSONs regenerate byte-identically).
 """
 from __future__ import annotations
 

@@ -1,0 +1,49 @@
+"""Docs reference integrity: tools/check_docs.py must pass, and must be
+able to fail (a deliberately stale reference is caught)."""
+import subprocess
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+CHECKER = ROOT / "tools" / "check_docs.py"
+
+
+def _run():
+    return subprocess.run([sys.executable, str(CHECKER)],
+                          capture_output=True, text=True, cwd=ROOT)
+
+
+def test_docs_references_resolve():
+    r = _run()
+    assert r.returncode == 0, f"stale docs references:\n{r.stderr}"
+
+
+def test_checker_catches_stale_reference():
+    doc = ROOT / "docs" / "architecture.md"
+    orig = doc.read_text()
+    try:
+        doc.write_text(orig + "\n`core/no_such_module.py` and "
+                              "`repro.core.sweep.no_such_symbol`\n")
+        r = _run()
+        assert r.returncode == 1
+        assert "no_such_module" in r.stderr
+        assert "no_such_symbol" in r.stderr
+    finally:
+        doc.write_text(orig)
+
+
+def test_required_docs_exist():
+    for name in ("architecture.md", "figures.md", "sweep_engine.md",
+                 "failure_model.md"):
+        assert (ROOT / "docs" / name).is_file(), name
+    assert (ROOT / "README.md").is_file()
+
+
+def test_figures_catalog_covers_every_benchmark():
+    """Every benchmarks/fig_*.py (and table/validation/roofline modules)
+    has an entry in docs/figures.md."""
+    text = (ROOT / "docs" / "figures.md").read_text()
+    for mod in sorted((ROOT / "benchmarks").glob("*.py")):
+        if mod.stem in ("run", "common", "check_timing", "__init__"):
+            continue
+        assert f"`{mod.stem}`" in text, f"docs/figures.md misses {mod.stem}"

@@ -1,0 +1,291 @@
+"""Skewed-expert routing + replication/placement validation.
+
+Four layers of guarantee, mirroring how the skew axis is built:
+
+  1. `core.placement` unit behavior: Zipf draws are deterministic, load
+     factors are >= 1, monotone in s (the per-layer permutation depends
+     only on (seed, layer), never s), and replication flattens them;
+  2. routing="uniform" (and placement="auto" on uniform scenarios) is
+     BYTE-IDENTICAL to the seed — equal OperatingPoints, unchanged
+     Scenario names, `op_load_factors` returning None (the structural
+     fast path);
+  3. batched-vs-scalar parity under skew: NumPy and JAX backends both
+     match `optimizer.tpot_at` with `ServingPoint.moe_load` to 1e-9
+     relative on all four Table-3 topologies, with and without replicas;
+  4. the two theorem-shaped claims fig_skew asserts: skew never improves
+     throughput (load factors >= 1 scale durations up, and the (max,+)
+     schedule is monotone), and placement="auto" never loses (R=0-first
+     strict merge).
+"""
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.core import H100, Scenario, make_cluster
+from repro.core import optable, optimizer, placement, sweep, workload
+from repro.core.workload import ServingPoint
+
+TOPOS = ("scale-up", "scale-out", "torus", "fullmesh")
+CFG = get_arch("deepseek-v3")
+N = 64
+
+
+def _skewed(s, seed=0, tpot=40.0, ctx=4096):
+    return Scenario(tpot, ctx, routing="zipf", zipf_s=s, routing_seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# 1. placement unit behavior
+# ---------------------------------------------------------------------------
+
+def test_zipf_probs_distribution():
+    p = placement.zipf_probs(256, 1.0, seed=0, layer=3)
+    assert p.shape == (256,)
+    assert abs(p.sum() - 1.0) < 1e-12
+    assert (p > 0).all()
+    # uniform at s <= 0
+    u = placement.zipf_probs(256, 0.0, seed=0, layer=3)
+    assert np.allclose(u, 1.0 / 256)
+    # deterministic across calls
+    assert np.array_equal(p, placement.zipf_probs(256, 1.0, 0, 3))
+    # the hot-expert IDENTITY depends only on (seed, layer), not s
+    hot_06 = int(placement.zipf_probs(256, 0.6, 0, 3).argmax())
+    hot_14 = int(placement.zipf_probs(256, 1.4, 0, 3).argmax())
+    assert hot_06 == hot_14 == int(p.argmax())
+    # different layers / seeds permute differently
+    assert not np.array_equal(p, placement.zipf_probs(256, 1.0, 0, 4))
+    assert not np.array_equal(p, placement.zipf_probs(256, 1.0, 7, 3))
+
+
+def test_layer_load_factors_bounds_and_monotonicity():
+    prev = None
+    for s in (0.0, 0.3, 0.6, 1.0, 1.4):
+        fac = placement.layer_load_factors(CFG, _skewed(s), ep=64)
+        assert len(fac) == sum(1 for sp in CFG.layer_specs
+                               if sp.ffn == "moe")
+        assert all(f >= 1.0 for f in fac)
+        if s == 0.0:
+            assert all(f == 1.0 for f in fac)
+        if prev is not None:
+            # same seed => same hot experts => factors monotone in s
+            assert all(a <= b + 1e-12 for a, b in zip(prev, fac))
+        prev = fac
+
+
+def test_replication_flattens_load():
+    sc = _skewed(1.0)
+    base = placement.layer_load_factors(CFG, sc, ep=64)
+    for r in (1, 2, 8):
+        rep = placement.layer_load_factors(CFG, sc, ep=64, extra_slots=r)
+        assert all(b >= 1.0 for b in rep)
+        assert max(rep) < max(base)
+    # replica slots on every rank can host the full Zipf head: near-flat
+    assert max(placement.layer_load_factors(CFG, sc, 64, 8)) < 1.01
+
+
+def test_replica_counts_and_placement_invariants():
+    probs = placement.zipf_probs(256, 1.0, 0, 0)
+    counts = placement.replica_counts(probs, ep=64, extra_slots=2)
+    assert counts.sum() == 256 + 64 * 2
+    assert counts.min() >= 1 and counts.max() <= 64
+    loads = placement.place_instances(probs, counts, ep=64, cap=4 + 2)
+    assert abs(loads.sum() - 1.0) < 1e-12
+    assert loads.max() <= 1.0
+
+
+def test_point_factors_and_hosting():
+    assert placement.point_factors(CFG, Scenario(40.0, 4096), 64) == ()
+    fac = placement.point_factors(CFG, _skewed(1.0), 64)
+    assert fac == placement.layer_load_factors(CFG, _skewed(1.0), 64)
+    assert placement.hosting_factor(CFG, 64, 0) == 1.0
+    assert placement.hosting_factor(CFG, 64, 4) == 2.0  # (4+4)/4
+
+
+# ---------------------------------------------------------------------------
+# 2. uniform stays byte-identical
+# ---------------------------------------------------------------------------
+
+def test_uniform_scenario_name_and_fast_path():
+    sc = Scenario(15.0, 4096)
+    assert sc.name == "tpot15ms_ctx4096"          # seed name unchanged
+    assert not sc.is_skewed
+    assert not Scenario(15.0, 4096, routing="zipf").is_skewed  # s=0
+    table = optable.op_table(CFG, 1, 64, N)
+    assert sweep.op_load_factors(table, CFG, [sc]) is None
+    with pytest.raises(ValueError):
+        Scenario(15.0, 4096, routing="hot")
+    with pytest.raises(ValueError):
+        Scenario(15.0, 4096, zipf_s=-1.0)
+
+
+@pytest.mark.parametrize("topo", TOPOS)
+def test_uniform_sweep_and_auto_placement_byte_identical(topo):
+    cl = make_cluster(topo, N, H100)
+    sc = Scenario(40.0, 4096)
+    ref = optimizer.max_throughput(cl, CFG, sc, dbo=True)
+    assert ref is not None
+    assert ref == optimizer.max_throughput(cl, CFG, sc, dbo=True,
+                                           placement="auto")
+    assert ref.extra_experts == 0
+    got = sweep.sweep_max_throughput([cl], CFG, [sc], dbo=True,
+                                     placement="auto")[0][0]
+    assert got == ref
+
+
+def test_moe_load_defaults_are_exact_noops():
+    p = ServingPoint(batch_global=128, context=4096, tp=1, ep=64,
+                     n_devices=N, dtype="fp8")
+    ones = tuple(1.0 for _ in placement.layer_load_factors(
+        CFG, _skewed(1.0), 64))
+    p1 = ServingPoint(batch_global=128, context=4096, tp=1, ep=64,
+                      n_devices=N, dtype="fp8", moe_load=ones)
+    cl = make_cluster("torus", N, H100)
+    assert optimizer.tpot_at(CFG, p, cl, dbo=True, sd=None) == \
+        optimizer.tpot_at(CFG, p1, cl, dbo=True, sd=None)
+
+
+# ---------------------------------------------------------------------------
+# 3. batched vs scalar parity under skew (numpy AND jax, 1e-9)
+# ---------------------------------------------------------------------------
+
+def _scalar_tpot(cl, sc, b, extra=0, dbo=True):
+    p = ServingPoint(batch_global=b, context=sc.context, tp=1, ep=64,
+                     n_devices=N, dtype="fp8",
+                     moe_load=placement.point_factors(CFG, sc, 64, extra),
+                     moe_extra=extra)
+    return optimizer.tpot_at(CFG, p, cl, dbo=dbo, sd=None)[0]
+
+
+@pytest.mark.parametrize("topo", TOPOS)
+@pytest.mark.parametrize("backend", ("numpy", "jax"))
+def test_skewed_tpot_parity(topo, backend):
+    if backend == "jax":
+        pytest.importorskip("jax")
+    cl = make_cluster(topo, N, H100)
+    scens = [Scenario(40.0, 4096), _skewed(0.6), _skewed(1.0, seed=3)]
+    batches = np.array([1, 16, 128, 512], np.int64)
+    table = optable.op_table(CFG, 1, 64, N)
+    load = sweep.op_load_factors(table, CFG, scens)
+    ev = sweep.GridEval(table, [cl], scens, batches, backend=backend,
+                        load=load)
+    for dbo in (False, True):
+        got = ev.tpot(dbo=dbo)
+        for si, sc in enumerate(scens):
+            for bi, b in enumerate(batches):
+                ref = _scalar_tpot(cl, sc, int(b), dbo=dbo)
+                assert got[0, si, bi] == pytest.approx(ref, rel=1e-9)
+
+
+@pytest.mark.parametrize("backend", ("numpy", "jax"))
+def test_skewed_tpot_parity_with_replicas(backend):
+    if backend == "jax":
+        pytest.importorskip("jax")
+    cl = make_cluster("fullmesh", N, H100)
+    scens = [_skewed(1.0)]
+    batches = np.array([8, 256], np.int64)
+    table = optable.op_table(CFG, 1, 64, N)
+    load = sweep.op_load_factors(table, CFG, scens, extra_slots=2)
+    ev = sweep.GridEval(table, [cl], scens, batches, backend=backend,
+                        load=load)
+    got = ev.tpot(dbo=True)
+    for bi, b in enumerate(batches):
+        ref = _scalar_tpot(cl, scens[0], int(b), extra=2)
+        assert got[0, 0, bi] == pytest.approx(ref, rel=1e-9)
+
+
+def test_skewed_sweep_winner_matches_scalar_search():
+    cl = make_cluster("torus", N, H100)
+    sc = _skewed(0.6, tpot=40.0)
+    got = sweep.sweep_max_throughput([cl], CFG, [sc], dbo=True)[0][0]
+    ref = optimizer.max_throughput_scalar(cl, CFG, sc, dbo=True)
+    assert got == ref
+
+
+def test_skewed_chunked_prefill_parity():
+    cl = make_cluster("torus", N, H100)
+    sc = Scenario(40.0, 4096, prompt_len=2048, ttft_ms=2000.0,
+                  routing="zipf", zipf_s=0.6)
+    table = optable.op_table(CFG, 1, 64, N)
+    ptable = optable.prefill_op_table(CFG, 1, 64, N)
+    batches = np.array([64], np.int64)
+    tpot_b, ttft_b = sweep.batched_chunked_tpot_ttft(
+        table, ptable, [cl], batches, sc, chunk=512, dbo=True, cfg=CFG)
+    p = ServingPoint(batch_global=64, context=sc.context, tp=1, ep=64,
+                     n_devices=N, dtype="fp8",
+                     moe_load=placement.point_factors(CFG, sc, 64))
+    tpot_s, ttft_s, *_ = optimizer.chunked_prefill_components(
+        CFG, p, cl, sc, 512, dbo=True)
+    assert tpot_b[0, 0] == pytest.approx(tpot_s, rel=1e-9)
+    assert ttft_b[0, 0] == pytest.approx(ttft_s, rel=1e-9)
+
+
+def test_moe_layer_column():
+    table = optable.op_table(CFG, 1, 64, N)
+    n_moe = sum(1 for sp in CFG.layer_specs if sp.ffn == "moe")
+    marked = table.moe_layer[table.moe_layer >= 0]
+    assert table.moe_layer.max() == n_moe - 1
+    # exactly the dispatch / expert GEMM / gather triple per MoE layer
+    assert len(marked) == 3 * n_moe
+    names = np.asarray(table.names)
+    suffixes = {nm.rsplit(".", 1)[-1] for nm in names[table.moe_layer >= 0]}
+    assert suffixes == set(workload.SKEW_SCALED_OPS)
+    # dense model: all -1
+    dense = optable.op_table(get_arch("starcoder2-3b"), 1, 1, N)
+    assert (dense.moe_layer == -1).all()
+
+
+# ---------------------------------------------------------------------------
+# 4. the fig_skew claims, theorem-shaped
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("topo", TOPOS)
+def test_skew_never_improves_tpot(topo):
+    """Load factors >= 1 scale per-op durations up; the (max,+) schedule
+    and the min-over-staggers are monotone, so skewed TPOT >= uniform
+    TPOT at every (batch, dbo) point. Deterministic grid version of the
+    hypothesis property in test_skew_props.py."""
+    cl = make_cluster(topo, N, H100)
+    for s, seed in ((0.3, 0), (0.6, 1), (1.0, 2), (1.4, 3)):
+        sc = _skewed(s, seed=seed)
+        for b in (1, 32, 512):
+            for dbo in (False, True):
+                assert _scalar_tpot(cl, sc, b, dbo=dbo) >= \
+                    _scalar_tpot(cl, Scenario(40.0, 4096), b, dbo=dbo) \
+                    - 1e-15
+
+
+@pytest.mark.parametrize("topo", TOPOS)
+def test_placement_never_loses(topo):
+    cl = make_cluster(topo, N, H100)
+    scens = [Scenario(40.0, 4096), _skewed(0.6), _skewed(1.0)]
+    base = sweep.best_of_opts_grid([cl], CFG, scens, "dbo+sd")
+    auto = sweep.best_of_opts_grid([cl], CFG, scens, "dbo+sd",
+                                   placement="auto")
+    for si in range(len(scens)):
+        b, a = base[0][si], auto[0][si]
+        thr_b = b.throughput if b else 0.0
+        thr_a = a.throughput if a else 0.0
+        assert thr_a >= thr_b
+        if si == 0:        # uniform cell keeps the byte-identical R=0 arm
+            assert a == b
+
+
+def test_degraded_search_honors_skew():
+    """The failure-aware re-search routes through `_sweep_fixed`, so a
+    skewed scenario is priced there with no extra plumbing."""
+    cl = make_cluster("torus", N, H100)
+    u = sweep.degraded_max_throughput(cl, CFG, Scenario(40.0, 4096),
+                                      faults=None, tp=1)
+    s = sweep.degraded_max_throughput(cl, CFG, _skewed(1.0), faults=None,
+                                      tp=1)
+    assert s is None or u is None or s.throughput <= u.throughput
+
+
+def test_extra_slots_charges_hbm():
+    bytes0 = workload.model_shard_bytes(CFG, 1, 64, "fp8", 1)
+    bytes8 = workload.model_shard_bytes(CFG, 1, 64, "fp8", 1,
+                                        extra_experts=8)
+    assert bytes8 > bytes0
+    n_moe = sum(1 for sp in CFG.layer_specs if sp.ffn == "moe")
+    w_expert = 3 * CFG.d_model * CFG.moe.d_expert
+    assert bytes8 - bytes0 == pytest.approx(n_moe * 8 * w_expert * 1.0)

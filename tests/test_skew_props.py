@@ -1,0 +1,54 @@
+"""Hypothesis property tests for the skewed-routing cost model.
+
+Kept separate from test_skew.py so a missing `hypothesis` (an optional
+[dev] dependency) skips this module instead of erroring the whole suite at
+collection. test_skew.py carries deterministic grid versions of the same
+properties for environments without hypothesis.
+"""
+import pytest
+
+pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_arch
+from repro.core import H100, Scenario, make_cluster, optimizer, placement
+from repro.core.workload import ServingPoint
+
+CFG = get_arch("deepseek-v3")
+CLUSTERS = {t: make_cluster(t, 64, H100)
+            for t in ("scale-up", "scale-out", "torus", "fullmesh")}
+
+
+def _tpot(cl, sc, b):
+    p = ServingPoint(batch_global=b, context=sc.context, tp=1, ep=64,
+                     n_devices=64, dtype="fp8",
+                     moe_load=placement.point_factors(CFG, sc, 64))
+    return optimizer.tpot_at(CFG, p, cl, dbo=False, sd=None)[0]
+
+
+@given(topo=st.sampled_from(sorted(CLUSTERS)),
+       s=st.floats(0.0, 2.0),
+       seed=st.integers(0, 31),
+       b=st.integers(1, 1024))
+@settings(max_examples=60, deadline=None)
+def test_skewed_tpot_dominates_uniform(topo, s, seed, b):
+    """Property: skewed TPOT >= uniform TPOT on every topology — load
+    factors are >= 1 and every duration/schedule map is monotone."""
+    cl = CLUSTERS[topo]
+    sc = Scenario(40.0, 4096, routing="zipf", zipf_s=s, routing_seed=seed)
+    assert _tpot(cl, sc, b) >= _tpot(cl, Scenario(40.0, 4096), b) - 1e-15
+
+
+@given(s=st.floats(0.1, 2.0), seed=st.integers(0, 31),
+       r=st.integers(1, 16))
+@settings(max_examples=60, deadline=None)
+def test_load_factors_bounds(s, seed, r):
+    """Property: per-layer load factors are >= 1 always, and replication
+    never makes the worst layer worse than the unreplicated baseline."""
+    sc = Scenario(40.0, 4096, routing="zipf", zipf_s=s, routing_seed=seed)
+    base = placement.layer_load_factors(CFG, sc, 64)
+    rep = placement.layer_load_factors(CFG, sc, 64, extra_slots=r)
+    assert all(f >= 1.0 for f in base)
+    assert all(f >= 1.0 for f in rep)
+    assert max(rep) <= max(base) + 1e-12

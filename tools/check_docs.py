@@ -1,0 +1,115 @@
+"""Docs link-and-reference checker (CI lint step).
+
+Scans README.md and docs/*.md and fails if any reference is stale:
+
+  * markdown link targets ``[text](path)`` must exist (http/mailto and
+    pure #anchors are skipped);
+  * backtick tokens that look like file paths (contain "/" and end in a
+    known extension, optionally followed by ``: symbol``) must resolve
+    against the repo root or the conventional prefixes (``src/``,
+    ``src/repro/``) — so ``core/sweep.py`` in a doc resolves to
+    ``src/repro/core/sweep.py``;
+  * backtick tokens that look like dotted python references
+    (``repro.*`` / ``benchmarks.*`` / ``tests.*`` / ``tools.*``) must
+    resolve to a module file, and any trailing attribute must appear in
+    that module's source;
+  * a ``path: symbol`` suffix (and ``module.symbol``) is checked by
+    substring against the target file.
+
+Run: ``python tools/check_docs.py`` from the repo root (exit 1 on any
+unresolved reference, listing them). tests/test_docs.py runs it too.
+"""
+from __future__ import annotations
+
+import glob
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+DOC_GLOBS = ("README.md", "docs/*.md")
+PATH_ROOTS = ("", "src/", "src/repro/", "src/repro/core/", "docs/",
+              "benchmarks/", "bench_results/", "tests/", "tools/")
+EXTS = r"(?:py|md|json|toml|yaml|yml|txt|sh)"
+PATH_RE = re.compile(rf"[\w.*/-]+\.{EXTS}\b")
+DOTTED_RE = re.compile(r"\b(?:repro|benchmarks|tests|tools)(?:\.\w+)+")
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+TICK_RE = re.compile(r"`([^`\n]+)`")
+
+
+def _resolve_path(tok: str) -> Path | None:
+    for root in PATH_ROOTS:
+        cand = str(ROOT / (root + tok))
+        hits = glob.glob(cand)
+        if hits:
+            return Path(sorted(hits)[0])
+    return None
+
+
+def _resolve_dotted(tok: str) -> tuple[Path | None, str | None]:
+    """Longest module prefix -> file; returns (file, leftover attr)."""
+    parts = tok.split(".")
+    base = {"repro": ROOT / "src" / "repro", "benchmarks": ROOT / "benchmarks",
+            "tests": ROOT / "tests", "tools": ROOT / "tools"}[parts[0]]
+    for cut in range(len(parts), 0, -1):
+        p = base.joinpath(*parts[1:cut])
+        for cand in (p.with_suffix(".py"), p / "__init__.py"):
+            if cand.is_file():
+                attr = parts[cut] if cut < len(parts) else None
+                return cand, attr
+    return None, None
+
+
+def check_file(doc: Path) -> list[str]:
+    errs: list[str] = []
+    text = doc.read_text()
+    rel = doc.relative_to(ROOT)
+
+    for m in LINK_RE.finditer(text):
+        tgt = m.group(1).split("#")[0]
+        if not tgt or "://" in tgt or tgt.startswith("mailto:"):
+            continue
+        if not ((doc.parent / tgt).exists() or (ROOT / tgt).exists()):
+            errs.append(f"{rel}: broken link target '{m.group(1)}'")
+
+    for m in TICK_RE.finditer(text):
+        tok = m.group(1)
+        for pm in PATH_RE.finditer(tok):
+            target = _resolve_path(pm.group(0))
+            if target is None:
+                errs.append(f"{rel}: path '{pm.group(0)}' (in `{tok}`) "
+                            "does not exist")
+                continue
+            # `path: symbol` — the named symbol must appear in the file
+            rest = tok[pm.end():]
+            sym = re.match(r":\s*(\w+)", rest)
+            if sym and target.suffix == ".py" \
+                    and sym.group(1) not in target.read_text():
+                errs.append(f"{rel}: symbol '{sym.group(1)}' not found "
+                            f"in {pm.group(0)}")
+        if PATH_RE.search(tok):
+            continue  # path tokens already checked; skip dotted scan
+        for dm in DOTTED_RE.finditer(tok):
+            mod, attr = _resolve_dotted(dm.group(0))
+            if mod is None:
+                errs.append(f"{rel}: module '{dm.group(0)}' (in `{tok}`) "
+                            "does not resolve to a file")
+            elif attr and attr not in mod.read_text():
+                errs.append(f"{rel}: attribute '{attr}' of "
+                            f"'{dm.group(0)}' not found in "
+                            f"{mod.relative_to(ROOT)}")
+    return errs
+
+
+def main() -> int:
+    docs = [p for pat in DOC_GLOBS for p in sorted(ROOT.glob(pat))]
+    errs = [e for d in docs for e in check_file(d)]
+    for e in errs:
+        print(f"check_docs: {e}", file=sys.stderr)
+    print(f"check_docs: {len(docs)} docs, "
+          f"{'FAIL (%d stale refs)' % len(errs) if errs else 'all refs ok'}")
+    return 1 if errs else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
