@@ -1,4 +1,7 @@
-"""Shared benchmark infrastructure: result persistence + ASCII rendering."""
+"""Shared benchmark infrastructure: result persistence, ASCII rendering,
+and the `repro.core.api` unwrap helpers every searching figure uses (the
+figures consume the search exclusively through the facade — `solve_grid`
+returns `Solution`s, the figures index bare operating-point grids)."""
 from __future__ import annotations
 
 import json
@@ -6,9 +9,38 @@ import os
 import time
 from typing import Any, Dict, List, Optional, Sequence
 
+from repro.core import api
+
 OUT_DIR = os.environ.get("BENCH_OUT", os.path.join(
     os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
     "bench_results"))
+
+
+def solve_points(cfg, clusters, scenarios, spec: Optional[api.SearchSpec]
+                 = None, *, prefill: bool = False, **kw) -> List[List[Any]]:
+    """`api.solve_grid` unwrapped to the [cluster][scenario] operating-
+    point grid the figures index (None where the SLO is unreachable).
+    Pass a `SearchSpec` or its fields as kwargs. `prefill=True` (implied
+    by prefill-mode specs) unwraps via `Solution.prefill_point`, so a
+    mode='decode' comparison arm keeps the `PrefillOperatingPoint`
+    wrapper shape the prefill figures expect."""
+    spec = api.SearchSpec(**kw) if spec is None else spec
+    grid = api.solve_grid(cfg, clusters, scenarios, spec)
+    if prefill or spec.mode != "decode":
+        return [[s.prefill_point for s in row] for row in grid]
+    return [[s.point for s in row] for row in grid]
+
+
+def solve_level_points(cfg, clusters, scenarios,
+                       levels: Sequence[str] = api.OPTS_LEVELS,
+                       spec: Optional[api.SearchSpec] = None,
+                       **kw) -> Dict[str, List[List[Any]]]:
+    """`api.solve_levels` unwrapped to {level: point grid} — several
+    software-optimization levels sharing one engine pass."""
+    spec = api.SearchSpec(**kw) if spec is None else spec
+    multi = api.solve_levels(cfg, clusters, scenarios, levels, spec)
+    return {lvl: [[s.point for s in row] for row in multi[lvl]]
+            for lvl in levels}
 
 
 def save(name: str, payload: Dict[str, Any]) -> str:

@@ -6,10 +6,9 @@ TPOT (beta-term negligible at small batch); long context narrows the gap
 (memory-capacity-capped batch)."""
 from __future__ import annotations
 
-from benchmarks.common import save, table
+from benchmarks.common import save, solve_points, table
 from repro.configs import get_arch
 from repro.core import H100, Scenario, make_cluster
-from repro.core.sweep import sweep_max_throughput
 
 
 def run(verbose: bool = True):
@@ -20,7 +19,7 @@ def run(verbose: bool = True):
     clusters = [make_cluster("scale-up", 64, H100, link_bw=bw) for bw in bws]
     scenarios = [Scenario(t, c) for c in ctxs for t in tpots]
     # one batched grid evaluation for the whole 2-cluster x 18-scenario sweep
-    ops = sweep_max_throughput(clusters, cfg, scenarios)
+    ops = solve_points(cfg, clusters, scenarios)
 
     results = {}
     rows = []

@@ -7,10 +7,9 @@ frontier (scale-up 64, ctx 512, 450 vs 150 vs 50 GB/s).
     TPOT SLOs."""
 from __future__ import annotations
 
-from benchmarks.common import save, table
+from benchmarks.common import save, solve_level_points, table
 from repro.configs import get_arch
 from repro.core import H100, Scenario, make_cluster
-from repro.core.sweep import best_of_opts_multi
 
 
 def run(verbose: bool = True):
@@ -21,7 +20,7 @@ def run(verbose: bool = True):
     scenarios = [Scenario(t, 512) for t in tpots]
     results = {}
     # one shared engine pass covers all three opts curves
-    grids = best_of_opts_multi(clusters, cfg, scenarios,
+    grids = solve_level_points(cfg, clusters, scenarios,
                                ("noopt", "dbo", "dbo+sd"))
     for opts in ("noopt", "dbo", "dbo+sd"):
         grid = grids[opts]

@@ -5,10 +5,9 @@ the sweet spot improves throughput/cost by 6-27% across scenarios (§4.2).
 Fig 13: the sweet spot is robust to the cost adjustment factor c."""
 from __future__ import annotations
 
-from benchmarks.common import save, table
+from benchmarks.common import save, solve_level_points, table
 from repro.configs import get_arch
 from repro.core import H100, Scenario, make_cluster
-from repro.core.sweep import best_of_opts_multi
 from repro.core.tco import cluster_tco
 
 BWS = (50e9, 150e9, 300e9, 450e9, 900e9)
@@ -24,7 +23,7 @@ def run(verbose: bool = True):
     # one shared engine pass covers all bandwidths x scenarios x opts; the
     # fig13 c-sweep reuses the dbo+sd operating points (throughput does not
     # depend on the cost adjustment factor).
-    grids = best_of_opts_multi(clusters, cfg, SCENARIOS,
+    grids = solve_level_points(cfg, clusters, SCENARIOS,
                                ("noopt", "dbo", "dbo+sd"))
 
     def tpc_at(opts, bi, si, c=1.0):

@@ -6,10 +6,9 @@ ALL scenario combinations (paper band: +20.6-56.2%); scale-up keeps the
 raw-throughput lead; scale-out misses everywhere."""
 from __future__ import annotations
 
-from benchmarks.common import save, table
+from benchmarks.common import save, solve_level_points, table
 from repro.configs import get_arch
 from repro.core import H100, Scenario, make_cluster
-from repro.core.sweep import best_of_opts_multi
 from repro.core.tco import cluster_tco
 
 TOPOS = ("scale-up", "scale-out", "torus", "fullmesh")
@@ -20,7 +19,7 @@ def run(verbose: bool = True, n: int = 64):
     cfg = get_arch("deepseek-v3")
     clusters = [make_cluster(topo, n, H100) for topo in TOPOS]
     # batched: one shared engine pass spans topologies x scenarios x opts
-    grids = best_of_opts_multi(clusters, cfg, SCENARIOS,
+    grids = solve_level_points(cfg, clusters, SCENARIOS,
                                ("noopt", "dbo+sd"))
     results = {}
     rows = []

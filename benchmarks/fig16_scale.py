@@ -6,10 +6,9 @@ for scale-up (two-level fat-tree); some low-TPOT scenarios improve (1
 expert/GPU cuts weight-load time at small batch)."""
 from __future__ import annotations
 
-from benchmarks.common import save, table
+from benchmarks.common import save, solve_points, table
 from repro.configs import get_arch
 from repro.core import H100, Scenario, make_cluster
-from repro.core.sweep import best_of_opts_grid
 from repro.core.tco import cluster_tco
 
 TOPOS = ("scale-up", "torus", "fullmesh")
@@ -21,7 +20,7 @@ def run(verbose: bool = True):
     # one batched grid call per cluster size (grids must share n_xpus)
     clusters = {n: [make_cluster(topo, n, H100) for topo in TOPOS]
                 for n in (64, 256)}
-    grids = {n: best_of_opts_grid(cls, cfg, scenarios, "dbo+sd")
+    grids = {n: solve_points(cfg, cls, scenarios, opts="dbo+sd")
              for n, cls in clusters.items()}
     results = {}
     rows = []

@@ -14,10 +14,9 @@ improves throughput (and therefore throughput/cost).
 """
 from __future__ import annotations
 
-from benchmarks.common import save, table
+from benchmarks.common import save, solve_points, table
 from repro.configs import get_arch
 from repro.core import H100, Scenario, make_cluster
-from repro.core.sweep import sweep_max_throughput
 from repro.core.tco import cluster_tco
 
 TOPOS = ("scale-up", "scale-out", "torus", "fullmesh")
@@ -27,8 +26,8 @@ SCENARIOS = [Scenario(t, c) for c in (512, 4096) for t in (15.0, 40.0, 100.0)]
 def run(verbose: bool = True, n: int = 64):
     cfg = get_arch("deepseek-v3")
     clusters = [make_cluster(topo, n, H100) for topo in TOPOS]
-    fixed = sweep_max_throughput(clusters, cfg, SCENARIOS)
-    auto = sweep_max_throughput(clusters, cfg, SCENARIOS, tp="auto")
+    fixed = solve_points(cfg, clusters, SCENARIOS)
+    auto = solve_points(cfg, clusters, SCENARIOS, tp="auto")
 
     costs = {topo: cluster_tco(clusters[ti]).per_xpu(n)
              for ti, topo in enumerate(TOPOS)}

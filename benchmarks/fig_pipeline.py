@@ -22,10 +22,9 @@ cost-effectiveness winner.
 """
 from __future__ import annotations
 
-from benchmarks.common import save, table
+from benchmarks.common import save, solve_points, table
 from repro.configs import get_arch
 from repro.core import H100, TPU_V5E, Scenario, make_cluster
-from repro.core.sweep import sweep_max_throughput
 from repro.core.tco import cluster_tco
 
 TOPOS = ("scale-up", "scale-out", "torus", "fullmesh")
@@ -57,7 +56,7 @@ def _sweep_platform(cfg, xpu, scenarios, n):
 
     def _search(**kw):
         try:
-            return sweep_max_throughput(clusters, cfg, scenarios, **kw)
+            return solve_points(cfg, clusters, scenarios, **kw)
         except ValueError:      # no feasible mapping at all
             return [[None] * len(scenarios) for _ in clusters]
 

@@ -19,10 +19,9 @@ chunked keeps all devices decoding and wins when the TTFT budget is loose.
 """
 from __future__ import annotations
 
-from benchmarks.common import save, table
+from benchmarks.common import save, solve_points, table
 from repro.configs import get_arch
 from repro.core import H100, Scenario, make_cluster
-from repro.core.sweep import sweep_prefill
 
 TOPOS = ("scale-up", "scale-out", "torus", "fullmesh")
 PROMPTS = (512, 2048, 8192)
@@ -38,7 +37,8 @@ def run(verbose: bool = True):
     scenarios = [Scenario(TPOT_MS, L + GEN_LEN // 2, prompt_len=L,
                           ttft_ms=T)
                  for L in PROMPTS for T in TTFTS_MS]
-    grids = {mode: sweep_prefill(clusters, cfg, scenarios, mode=mode)
+    grids = {mode: solve_points(cfg, clusters, scenarios, mode=mode,
+                                prefill=True)
              for mode in MODES}
 
     results = {}

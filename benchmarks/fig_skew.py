@@ -20,10 +20,9 @@ finding, not an error: at ep=64 and s=1.0 the hottest rank carries ~11-16x
 the uniform expert load, which placement buys back almost entirely."""
 from __future__ import annotations
 
-from benchmarks.common import save, table
+from benchmarks.common import save, solve_points, table
 from repro.configs import get_arch
 from repro.core import H100, Scenario, make_cluster
-from repro.core.sweep import best_of_opts_grid
 from repro.core.tco import cluster_tco
 
 TOPOS = ("scale-up", "scale-out", "torus", "fullmesh")
@@ -46,9 +45,9 @@ def run(verbose: bool = True, n: int = 64):
     rows = []
     for s in ZIPF_S:
         scenarios = [_scenario(t, c, s) for (t, c) in BASE]
-        plain = best_of_opts_grid(clusters, cfg, scenarios, "dbo+sd")
-        placed = best_of_opts_grid(clusters, cfg, scenarios, "dbo+sd",
-                                   placement="auto")
+        plain = solve_points(cfg, clusters, scenarios, opts="dbo+sd")
+        placed = solve_points(cfg, clusters, scenarios, opts="dbo+sd",
+                              placement="auto")
         per_s = {}
         for si, (tpot, ctx) in enumerate(BASE):
             per_topo = {}

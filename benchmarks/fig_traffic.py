@@ -1,0 +1,231 @@
+"""fig_traffic: goodput-under-SLO attainment per topology per $ from the
+cluster-scale traffic simulator (`repro.core.traffic`).
+
+The capacity figures answer "best steady-state operating point"; this one
+replays seeded arrival traces — Gamma-burst and diurnal Poisson — against
+the four Table-3 topologies running operating points obtained through
+`repro.core.api.solve`, and prices what production actually sells:
+goodput (decode tokens of requests meeting BOTH the TTFT and TPOT SLO)
+per monthly fleet dollar.
+
+Three arms per topology (olmoe-1b-7b on 8 XPUs — small enough that a
+2-minute bursty trace is tens of thousands of requests):
+
+  1. Bursty load sweep: a CV^2=4 Gamma arrival stream scaled to 0.6-1.1x
+     the topology's OWN searched capacity. The TPOT SLO binds the
+     searched batch cap, so offered load beyond 1.0x queues instead of
+     batching up — SLO attainment holds a plateau and then falls off a
+     cliff, and the cliff is where the topologies separate.
+  2. Diurnal autoscaling: a day-shaped rate curve (compressed to a 40-min
+     trace) served either by the static full pool or by a threshold
+     autoscaler over {1/4, 1/2, 1} pools; `best_provisioning` keeps the
+     best goodput/$ of {static, autoscale}, so autoscaling can never
+     lose, and the recorded margin is its actual win.
+  3. Compressed-timescale fault injection at 0.8x load: seeded injector
+     firings become queueing events (drain + re-shard downtime + degraded
+     serving), so faults show up as TTFT spikes and goodput loss, never
+     as a goodput gain.
+
+All traces, fault plans, and policies are seeded and the simulator is
+deterministic, so the emitted JSON is byte-stable under regeneration
+(the CI bench gate diffs it with `-I'"_time"'`).
+"""
+from __future__ import annotations
+
+from benchmarks.common import save, table
+from repro.configs import get_arch
+from repro.core import H100, Scenario, SearchSpec, make_cluster, traffic
+
+TOPOS = ("scale-up", "scale-out", "torus", "fullmesh")
+N_XPUS = 8
+ARCH = "olmoe-1b-7b"
+# TPOT tight enough that the searched batch cap binds the SLO (the cliff
+# precondition — see docs/traffic_sim.md) and an explicit TTFT SLO so
+# queueing delay costs attainment.
+SCENARIO = Scenario(15.0, 512, ttft_ms=500.0)
+MIX = ((0.75, 0, 768), (0.25, 0, 1792))      # mean gen = 1024 tokens
+POOL_FRACS = (0.25, 0.5, 1.0)
+LOADS = (0.6, 0.8, 0.9, 1.0, 1.1)
+FAULT_LOAD = 0.8
+BURSTY = dict(horizon_s=120.0, cv2=4.0, seed=11)
+DIURNAL = dict(horizon_s=2400.0, period_s=1200.0, amplitude=0.6,
+               mean_load=0.45, seed=3)
+POLICY = traffic.AutoscalePolicy(check_interval_s=60.0, target_util=0.7,
+                                 min_dwell_s=300.0)
+# fault timescales compressed to the 2-minute bursty horizon
+FAULT_RATE_PER_ITER = 5e-5
+FAULT_REPAIR_S = 45.0
+FAULT_DOWNTIME_S = 10.0
+
+_KEEP = ("attainment", "goodput_tok_s", "goodput_per_cost", "ttft_p99",
+         "tpot_p99", "active_frac", "cost_month", "n_switches",
+         "n_fault_events", "n_requests")
+
+
+def _slim(res: traffic.TrafficResult) -> dict:
+    d = res.as_dict()
+    return {k: d[k] for k in _KEEP}
+
+
+def run(verbose: bool = True):
+    cfg = get_arch(ARCH)
+    mean_gen = 0.0
+    tot = sum(w for w, _, _ in MIX)
+    for w, _, g in MIX:
+        mean_gen += w / tot * g
+
+    results = {"scenario": SCENARIO.name, "loads": list(LOADS)}
+    rows_load, rows_diurnal, rows_fault = [], [], []
+    per_topo = {}
+    for topo in TOPOS:
+        cl = make_cluster(topo, N_XPUS, H100)
+        cat = traffic.build_catalog(cfg, cl, SCENARIO, SearchSpec(),
+                                    pool_fracs=POOL_FRACS, mix=MIX)
+        cap_rps = cat.capacity_rps(cat.full, mean_gen)
+        entry = {"capacity_rps": float(f"{cap_rps:.9g}"),
+                 "cap_batch": cat.full.cap,
+                 "tpot_at_cap_ms": float(f"{cat.full.tpot[-1] * 1e3:.9g}")}
+
+        # ---- arm 1: bursty load sweep (same unit stream per topology,
+        # time-compressed by load -> monotone by construction) ----
+        base = traffic.TraceSpec(
+            horizon_s=BURSTY["horizon_s"], rate_rps=cap_rps,
+            arrival="gamma", cv2=BURSTY["cv2"], length_mix=MIX,
+            seed=BURSTY["seed"], name=f"bursty-{topo}")
+        entry["bursty"] = {}
+        fault_trace = None
+        for load in LOADS:
+            tr = traffic.generate_trace(base.scaled(load))
+            res = traffic.simulate_trace(cat, tr)
+            entry["bursty"][f"{load:g}"] = _slim(res)
+            rows_load.append([topo, f"{load:g}", f"{res.attainment:.4f}",
+                              f"{res.goodput_per_cost:.2f}",
+                              f"{res.ttft_p99 * 1e3:.0f}ms"])
+            if load == FAULT_LOAD:
+                fault_trace = tr
+
+        # ---- arm 2: diurnal autoscaling vs static ----
+        dspec = traffic.TraceSpec(
+            horizon_s=DIURNAL["horizon_s"],
+            rate_rps=DIURNAL["mean_load"] * cap_rps, arrival="poisson",
+            diurnal_amplitude=DIURNAL["amplitude"],
+            diurnal_period_s=DIURNAL["period_s"], length_mix=MIX,
+            seed=DIURNAL["seed"], name=f"diurnal-{topo}")
+        dtr = traffic.generate_trace(dspec)
+        static = traffic.simulate_trace(cat, dtr)
+        best_name, best = traffic.best_provisioning(
+            cat, dtr, policies=[None, POLICY])
+        entry["diurnal"] = {"static": _slim(static),
+                            "best": _slim(best),
+                            "best_policy": best_name}
+        rows_diurnal.append(
+            [topo, f"{static.attainment:.4f}",
+             f"{static.goodput_per_cost:.2f}", best_name,
+             f"{best.attainment:.4f}", f"{best.goodput_per_cost:.2f}",
+             f"{best.active_frac:.2f}", best.n_switches])
+
+        # ---- arm 3: compressed-timescale fault injection ----
+        plan = traffic.seeded_fault_plan(
+            cl, n_iters=cat.est_iterations(fault_trace),
+            rate_per_iter=FAULT_RATE_PER_ITER, seed=BURSTY["seed"],
+            repair_s=FAULT_REPAIR_S, downtime_s=FAULT_DOWNTIME_S)
+        healthy = traffic.simulate_trace(cat, fault_trace)
+        faulted = traffic.simulate_trace(cat, fault_trace, faults=plan)
+        entry["faults"] = {"healthy": _slim(healthy),
+                           "faulted": _slim(faulted)}
+        rows_fault.append(
+            [topo, faulted.n_fault_events,
+             f"{healthy.ttft_p99 * 1e3:.0f}ms",
+             f"{faulted.ttft_p99 * 1e3:.0f}ms",
+             f"{healthy.goodput_tok_s:.0f}",
+             f"{faulted.goodput_tok_s:.0f}"])
+
+        per_topo[topo] = entry
+    results["topologies"] = per_topo
+
+    # ---- rankings (most cost-effective first) ----
+    def rank(metric):
+        return sorted(
+            TOPOS, key=lambda t: -metric(per_topo[t]))
+
+    rank_bursty = rank(lambda e: e["bursty"][f"{FAULT_LOAD:g}"]
+                       ["goodput_per_cost"])
+    rank_diurnal = rank(lambda e: e["diurnal"]["best"]["goodput_per_cost"])
+    ttft_bursty = sorted(TOPOS, key=lambda t: per_topo[t]["bursty"]
+                         [f"{FAULT_LOAD:g}"]["ttft_p99"])
+    results["rankings"] = {
+        "bursty_goodput_per_cost": rank_bursty,
+        "bursty_p99_ttft_best_first": ttft_bursty,
+        "diurnal_goodput_per_cost": rank_diurnal,
+    }
+
+    def attains(topo):
+        return [per_topo[topo]["bursty"][f"{ld:g}"]["attainment"]
+                for ld in LOADS]
+
+    results["claims"] = {
+        # queueing theory sanity: compressing the SAME request stream can
+        # only hurt — attainment is monotone non-increasing in load
+        "attainment_monotone_in_load": all(
+            a + 1e-6 >= b for topo in TOPOS
+            for a, b in zip(attains(topo), attains(topo)[1:])),
+        # the TPOT SLO binds the searched cap, so overload queues: every
+        # topology falls off the attainment plateau past 1.0x capacity
+        "attainment_cliff_past_capacity": all(
+            attains(topo)[-1] < attains(topo)[0] - 0.05 for topo in TOPOS),
+        # the paper's switchless headline survives bursty serving:
+        # torus/full-mesh beat scale-up on goodput/$ at 0.8x load
+        "switchless_wins_bursty_goodput_per_cost": max(
+            per_topo["torus"]["bursty"][f"{FAULT_LOAD:g}"]
+            ["goodput_per_cost"],
+            per_topo["fullmesh"]["bursty"][f"{FAULT_LOAD:g}"]
+            ["goodput_per_cost"]) > per_topo["scale-up"]["bursty"]
+            [f"{FAULT_LOAD:g}"]["goodput_per_cost"],
+        # best_provisioning includes the static arm, so autoscaling never
+        # loses on ANY trace...
+        "autoscale_never_loses": all(
+            per_topo[t]["diurnal"]["best"]["goodput_per_cost"]
+            >= per_topo[t]["diurnal"]["static"]["goodput_per_cost"]
+            for t in TOPOS),
+        # ...and the diurnal trough makes it strictly win on EVERY
+        # topology (parked capacity bills elsewhere; the fabric does not)
+        "autoscale_strictly_wins_diurnal": all(
+            per_topo[t]["diurnal"]["best"]["goodput_per_cost"]
+            > per_topo[t]["diurnal"]["static"]["goodput_per_cost"]
+            for t in TOPOS),
+        # faults are queueing events: the p99 TTFT spikes and goodput
+        # never improves, on every topology
+        "faults_spike_ttft_never_add_goodput": all(
+            per_topo[t]["faults"]["faulted"]["ttft_p99"]
+            >= per_topo[t]["faults"]["healthy"]["ttft_p99"]
+            and per_topo[t]["faults"]["faulted"]["goodput_tok_s"]
+            <= per_topo[t]["faults"]["healthy"]["goodput_tok_s"]
+            and per_topo[t]["faults"]["faulted"]["n_fault_events"] >= 1
+            for t in TOPOS),
+    }
+
+    if verbose:
+        print(table(["topology", "load", "attainment", "goodput/$",
+                     "p99 TTFT"], rows_load,
+                    title=f"fig_traffic — bursty load sweep "
+                          f"(CV^2={BURSTY['cv2']:g}, {ARCH}, "
+                          f"{N_XPUS} XPUs)"))
+        print()
+        print(table(["topology", "static att", "static g/$", "best",
+                     "best att", "best g/$", "active", "switches"],
+                    rows_diurnal, title="fig_traffic — diurnal trace: "
+                                        "static vs best provisioning"))
+        print()
+        print(table(["topology", "events", "p99 TTFT healthy",
+                     "p99 TTFT faulted", "goodput healthy",
+                     "goodput faulted"], rows_fault,
+                    title="fig_traffic — fault injection at "
+                          f"{FAULT_LOAD:g}x load"))
+        print("\nrankings:", results["rankings"])
+        print("claims:", results["claims"])
+    save("fig_traffic", results)
+    return results
+
+
+if __name__ == "__main__":
+    run()

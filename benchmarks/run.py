@@ -155,6 +155,7 @@ MODULES = [
     "benchmarks.fig_failures",
     "benchmarks.fig_product_grid",
     "benchmarks.fig_skew",
+    "benchmarks.fig_traffic",
     "benchmarks.roofline",
 ]
 
@@ -197,6 +198,10 @@ BUDGETS_S = {
     # 4 Zipf-s levels x 2 placement arms, each a full topology x scenario
     # grid; the placement arm re-sweeps per replica-count candidate
     "benchmarks.fig_skew": 240,
+    # 4 topologies x (5-load bursty sweep + 40-min diurnal static/auto
+    # pair + fault arm); the diurnal sims dominate (~10^5 iterations of
+    # the traffic clock each)
+    "benchmarks.fig_traffic": 360,
 }
 
 
@@ -286,8 +291,9 @@ def main(argv):
         selected = [n for n in MODULES
                     if n == args.only or n.split(".")[-1] == args.only]
         if not selected:
+            known = ", ".join(n.split(".")[-1] for n in MODULES)
             print(f"--only {args.only!r} matches no registered module; "
-                  "run with --list to see them", file=sys.stderr)
+                  f"known benchmarks: {known}", file=sys.stderr)
             return 2
     else:
         selected = [n for n in MODULES if args.pattern in n]

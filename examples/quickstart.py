@@ -14,7 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_arch, reduced_config
-from repro.core import H100, Scenario, best_of_opts, make_cluster
+from repro.core import H100, Scenario, SearchSpec, make_cluster, solve
 from repro.core.tco import cluster_tco
 from repro.models import model as M
 from repro.sharding.dist import NullDist
@@ -28,9 +28,9 @@ cfg_paper = get_arch("deepseek-v3")
 sc = Scenario(40.0, 512)
 for topo in ("scale-up", "scale-out", "torus", "fullmesh"):
     cl = make_cluster(topo, 64, H100)
-    op = best_of_opts(cl, cfg_paper, sc, opts="dbo+sd")
+    sol = solve(cfg_paper, cl, sc, SearchSpec(opts="dbo+sd"))
     cost = cluster_tco(cl).per_xpu(64)
-    thpt = op.throughput / 64 if op else 0.0
+    thpt = sol.throughput / 64
     print(f"  {topo:10s} {thpt:8.0f} tok/s/XPU  cost {cost:7.1f}/mo"
           f"  -> {thpt / cost:6.2f} tok/s per cost unit")
 

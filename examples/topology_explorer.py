@@ -12,7 +12,8 @@ or render the DBO two-lane schedule (paper Fig 4).
 import argparse
 
 from repro.configs import get_arch
-from repro.core import GENERATIONS, Scenario, best_of_opts, make_cluster
+from repro.core import (GENERATIONS, Scenario, SearchSpec, make_cluster,
+                        solve)
 from repro.core.tco import cluster_tco
 from repro.core.workload import ServingPoint
 
@@ -72,7 +73,7 @@ def main():
     best = None
     for topo in ("scale-up", "scale-out", "torus", "fullmesh"):
         cl = make_cluster(topo, args.xpus, xpu)
-        op = best_of_opts(cl, cfg, sc, opts=args.opts)
+        op = solve(cfg, cl, sc, SearchSpec(opts=args.opts)).point
         cost = cluster_tco(cl).per_xpu(args.xpus, args.c)
         if op is None:
             print(f"{topo:>10} {'SLO MISS':>9} {'-':>7} {'-':>8} {'-':>7} "
@@ -94,7 +95,7 @@ def main():
         for f in (1 / 9, 1 / 3, 2 / 3, 1.0, 2.0):
             cl = make_cluster("scale-up", args.xpus, xpu,
                               link_bw=xpu.scale_up_bw * f)
-            op = best_of_opts(cl, cfg, sc, opts=args.opts)
+            op = solve(cfg, cl, sc, SearchSpec(opts=args.opts)).point
             cost = cluster_tco(cl).per_xpu(args.xpus, args.c)
             tpc = op.throughput / args.xpus / cost if op else 0.0
             print(f"  {f:4.2f}x ({cl.link_bw / 1e9:5.0f} GB/s): "

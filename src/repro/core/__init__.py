@@ -18,12 +18,20 @@ methodology for MoE LLM serving networks.
                chunked / disaggregated prefill serving modes, hybrid
                (tp, pp, ep) parallelism-mapping search)
   optimizer    max-throughput-under-SLO sweep (+ remap-vs-degrade policy)
+  api          THE public search surface: SearchSpec + solve()/solve_grid()
+               routing decode / prefill / degraded searches (the legacy
+               optimizer wrappers are deprecated shims onto it)
+  traffic      cluster-scale continuous-batching traffic simulator (seeded
+               arrival traces, queueing, autoscaling, fault events) on top
+               of solved operating points
   pareto       performance-vs-cost sweep + Pareto frontier (Fig 17)
   future       Blackwell/Rubin saturating-bandwidth projection (Fig 18/19)
   availability component MTBF/MTTR -> stationary expected throughput
                under the per-topology fault derating (FaultSet)
 """
 from repro.core.alphabeta import AlphaBeta, INTRA_NODE, INTER_NODE, CLUSTER
+from repro.core.api import (ReproDeprecationWarning, SearchSpec, Solution,
+                            solve, solve_grid, solve_levels, tpot_curve)
 from repro.core.availability import (AvailabilityModel, ComponentClass,
                                      build_availability)
 from repro.core.hardware import (H100, BLACKWELL, RUBIN, TPU_V5E, GENERATIONS,
@@ -37,6 +45,11 @@ from repro.core.specdec import SpecDecConfig
 from repro.core.sweep import degraded_max_throughput, parallelism_candidates
 from repro.core.topology import (Cluster, FaultSet, make_cluster,
                                  TOPOLOGIES)
+from repro.core.traffic import (AutoscalePolicy, Catalog, FaultPlan,
+                                TraceSpec, TrafficResult,
+                                best_provisioning, build_catalog,
+                                fleet_cost, generate_trace,
+                                seeded_fault_plan, simulate_trace)
 from repro.core.tco import (availability_adjusted_throughput_per_cost,
                             cluster_tco, throughput_per_cost)
 from repro.core.workload import ServingPoint

@@ -338,14 +338,15 @@ def build_availability(cluster: Cluster, cfg: ModelConfig, scenario, *,
     and records the policy's effective throughput. States sharing a
     FaultSet share one search. The healthy (zero-fault) state prices
     through the ordinary search, byte-identical to the paper's model."""
-    from repro.core import optimizer
+    from repro.core import optimizer, sweep
 
     rd = optimizer.REMAP_DOWNTIME_S if remap_downtime_s is None \
         else remap_downtime_s
     hz = optimizer.DEGRADED_HORIZON_S if horizon_s is None else horizon_s
     classes = tuple(component_inventory(cluster, mtbf_mttr))
-    baseline = optimizer.max_throughput(cluster, cfg, scenario, tp=tp,
-                                        pp=pp, dtype=dtype, dbo=dbo, sd=sd)
+    baseline = sweep.sweep_max_throughput([cluster], cfg, [scenario], tp=tp,
+                                          pp=pp, dtype=dtype, dbo=dbo,
+                                          sd=sd)[0][0]
     healthy_thr = baseline.throughput if baseline else 0.0
     healthy_tpot = baseline.tpot if baseline else 0.0
 

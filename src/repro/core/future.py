@@ -47,7 +47,7 @@ def throughput_vs_bandwidth(cfg: ModelConfig, scenario: Scenario,
     The whole bandwidth grid evaluates as one batched sweep; the alpha-scaled
     cluster subclass composes transparently because the sweep engine reads
     alphas through `cluster._ab()`."""
-    from repro.core import sweep
+    from repro.core import api
 
     clusters = []
     for bw in bw_grid:
@@ -55,10 +55,11 @@ def throughput_vs_bandwidth(cfg: ModelConfig, scenario: Scenario,
         if alpha_scale != 1.0:
             cl = scaled_alpha_cluster(cl, alpha_scale)
         clusters.append(cl)
-    grid = sweep.best_of_opts_grid(clusters, cfg, [scenario], opts)
+    grid = api.solve_grid(cfg, clusters, [scenario],
+                          api.SearchSpec(opts=opts))
     pts = []
     for bw, row in zip(bw_grid, grid):
-        op = row[0]
+        op = row[0].point
         if op is None:
             continue
         pts.append(BWCurvePoint(topology=topology, link_bw=bw,

@@ -7,13 +7,17 @@ return the configuration with the highest throughput whose TPOT meets the
 SLO. "Cluster builders provision for peak load": max capacity per cost is
 the paper's cost-effectiveness metric.
 
-Two execution paths share this module's public API:
+The supported search entry point is `repro.core.api.solve` (the batched
+engine lives in `repro.core.sweep`: the whole batch grid evaluates as
+array programs, the argmax winner re-derived through the scalar path
+below). This module keeps:
 
-  max_throughput / best_of_opts          batched (repro.core.sweep): the
-      whole batch grid evaluates as array programs, the argmax winner is
-      re-derived through the scalar path below.
+  max_throughput / best_of_opts / max_throughput_prefill   DEPRECATED
+      shims onto `api.solve` (they emit `ReproDeprecationWarning`).
   max_throughput_scalar / best_of_opts_scalar   the seed one-point-at-a-time
       reference, kept as ground truth for tests and boundary fallbacks.
+  degrade_policy   the remap-vs-degrade decision `api.solve` routes to
+      when a `FaultSet` is on the spec.
 """
 from __future__ import annotations
 
@@ -393,34 +397,22 @@ def max_throughput(cluster: Cluster, cfg: ModelConfig, scenario: Scenario,
                    backend: Optional[str] = None,
                    placement: Optional[str] = None
                    ) -> Optional[OperatingPoint]:
-    """Best operating point under the TPOT SLO, or None if the SLO is
-    unreachable at every feasible batch size.
+    """DEPRECATED shim for `repro.core.api.solve` (emits
+    `ReproDeprecationWarning`; byte-identical result).
 
-    Evaluates the batch grid through the vectorized sweep engine
-    (`repro.core.sweep`); the winning point is re-derived through the exact
-    scalar path below, so the result is byte-identical to
-    `max_throughput_scalar`. Pass lists of clusters/scenarios to
-    `sweep.sweep_max_throughput` directly to amortize one grid evaluation
-    across a whole figure.
-
-    tp="auto" / pp="auto" search the joint (tp, pp, ep = n/(tp*pp))
-    hybrid-parallelism axes (`sweep.parallelism_candidates`) and return the
-    best mapping's point (ties prefer the smaller tp, then the smaller pp,
-    so the fixed mapping wins exact draws); the chosen mapping is recorded
-    on `OperatingPoint.tp` / `.pp` / `.ep`.
-
-    placement="auto" additionally searches expert replication for skewed
-    scenarios (`core.placement`): R extra expert slots per rank, spending
-    the HBM headroom left after the ep shard, merged with the R=0 arm
-    first so the search can never lose to no-placement (and uniform
-    scenarios keep the byte-identical R=0 result). The chosen R is
-    recorded on `OperatingPoint.extra_experts`.
+    Best operating point under the TPOT SLO, or None if the SLO is
+    unreachable at every feasible batch size. tp="auto" / pp="auto" search
+    the joint (tp, pp, ep = n/(tp*pp)) mapping axes; placement="auto"
+    additionally searches expert replication for skewed scenarios. See
+    `api.SearchSpec` for the field semantics and `api.solve_grid` for the
+    amortized clusters x scenarios form.
     """
-    from repro.core import sweep
-    return sweep.sweep_max_throughput([cluster], cfg, [scenario], dbo=dbo,
-                                      sd=sd, tp=tp, pp=pp, ep=ep,
-                                      dtype=dtype, backend=backend,
-                                      placement=placement)[0][0]
+    from repro.core import api
+    api.warn_deprecated("optimizer.max_throughput", "repro.core.api.solve")
+    return api.solve(cfg, cluster, scenario,
+                     api.SearchSpec(tp=tp, pp=pp, ep=ep, dbo=dbo, sd=sd,
+                                    dtype=dtype, backend=backend,
+                                    placement=placement)).point
 
 
 def max_throughput_scalar(cluster: Cluster, cfg: ModelConfig,
@@ -478,35 +470,35 @@ def max_throughput_scalar(cluster: Cluster, cfg: ModelConfig,
 
 def best_of_opts(cluster: Cluster, cfg: ModelConfig, scenario: Scenario,
                  opts: str = "dbo+sd", **kw) -> Optional[OperatingPoint]:
-    """opts: 'noopt' | 'dbo' | 'dbo+sd'. DBO/SD results fall back to the
-    unoptimized point when that is faster (paper's 'best of' curves).
+    """DEPRECATED shim for `repro.core.api.solve` with `opts` set (emits
+    `ReproDeprecationWarning`; byte-identical result).
 
-    Runs on the batched sweep engine; `sweep.best_of_opts_grid` is the
-    many-clusters/many-scenarios entry point the benchmarks use. Accepts
-    tp="auto" / pp="auto" to co-optimize the (tp, pp, ep) mapping per
-    cluster, and placement="auto" to search expert replication for skewed
-    scenarios (see `max_throughput`)."""
-    from repro.core import sweep
-    return sweep.best_of_opts_grid([cluster], cfg, [scenario], opts,
-                                   **kw)[0][0]
+    opts: 'noopt' | 'dbo' | 'dbo+sd'. DBO/SD results fall back to the
+    unoptimized point when that is faster (paper's 'best of' curves)."""
+    from repro.core import api
+    api.warn_deprecated("optimizer.best_of_opts", "repro.core.api.solve")
+    return api.solve(cfg, cluster, scenario,
+                     api.SearchSpec(opts=opts, **kw)).point
 
 
 def max_throughput_prefill(cluster: Cluster, cfg: ModelConfig,
                            scenario: Scenario, mode: str = "chunked",
                            **kw) -> Optional[PrefillOperatingPoint]:
-    """Prefill-aware best operating point under BOTH the TPOT and TTFT SLOs.
+    """DEPRECATED shim for `repro.core.api.solve` with `mode` set (emits
+    `ReproDeprecationWarning`; byte-identical result).
 
+    Prefill-aware best operating point under BOTH the TPOT and TTFT SLOs.
     mode: 'decode' (seed behavior, prefill unmodeled) | 'chunked' (prefill
     chunks interleaved into decode iterations) | 'disagg' (cluster split
-    into prefill/decode pools, split ratio swept — each pool resolves its
-    OWN (tp, pp, ep) mapping under "auto"). Runs on the batched prefill
-    sweep; see `sweep.sweep_prefill` for the grid entry point. All three
-    modes accept tp="auto" / pp="auto" to search the mapping axes, and
-    dbo=True to time iterations, chunks, and the disagg whole-prompt pass
-    with the three-lane (max,+) DBO schedule wherever it helps."""
-    from repro.core import sweep
-    return sweep.sweep_prefill([cluster], cfg, [scenario], mode=mode,
-                               **kw)[0][0]
+    into prefill/decode pools, split ratio swept)."""
+    from repro.core import api
+    api.warn_deprecated("optimizer.max_throughput_prefill",
+                        "repro.core.api.solve")
+    for seq in ("chunk_grid", "split_fracs"):
+        if seq in kw:
+            kw[seq] = tuple(kw[seq])
+    return api.solve(cfg, cluster, scenario,
+                     api.SearchSpec(mode=mode, **kw)).prefill_point
 
 
 # ---------------------------------------------------------------------------
@@ -566,8 +558,9 @@ def degrade_policy(cluster: Cluster, cfg: ModelConfig, scenario: Scenario,
     from repro.core import sweep
 
     if baseline is None:
-        baseline = max_throughput(cluster, cfg, scenario, dbo=dbo, sd=sd,
-                                  tp=tp, pp=pp, dtype=dtype)
+        baseline = sweep.sweep_max_throughput([cluster], cfg, [scenario],
+                                              dbo=dbo, sd=sd, tp=tp, pp=pp,
+                                              dtype=dtype)[0][0]
     keep_pt = None
     if baseline is not None:
         keep_pt = sweep.degraded_max_throughput(

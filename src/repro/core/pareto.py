@@ -50,7 +50,7 @@ def sweep_networks(cfg: ModelConfig, scenario: Scenario, xpu: XPUSpec,
     """All (topology, link bandwidth) points of one scenario, evaluated as
     one batched grid per cluster size (the sweep engine requires a uniform
     device count per grid). Point order matches the seed's nested loops."""
-    from repro.core import sweep
+    from repro.core import api
 
     ops_by_size = {}
     for n in sizes:
@@ -65,8 +65,9 @@ def sweep_networks(cfg: ModelConfig, scenario: Scenario, xpu: XPUSpec,
                 keys.append((topo, f))
                 clusters.append(make_cluster(topo, n, xpu,
                                              link_bw=base_bw * f))
-        grid = sweep.best_of_opts_grid(clusters, cfg, [scenario], opts)
-        ops_by_size[n] = {k: (cl, row[0])
+        grid = api.solve_grid(cfg, clusters, [scenario],
+                              api.SearchSpec(opts=opts))
+        ops_by_size[n] = {k: (cl, row[0].point)
                           for k, cl, row in zip(keys, clusters, grid)}
 
     points: List[ParetoPoint] = []

@@ -5,8 +5,8 @@ import dataclasses
 import pytest
 
 from repro.configs import get_arch
-from repro.core import (H100, BLACKWELL, Scenario, best_of_opts,
-                        make_cluster, max_throughput)
+from repro.core import (H100, BLACKWELL, Scenario, SearchSpec,
+                        make_cluster, solve)
 from repro.core import tco, workload
 from repro.core.specdec import SpecDecConfig, sd_tpot
 from repro.core.workload import ServingPoint
@@ -117,7 +117,7 @@ def test_throughput_increases_with_tpot_budget(dsv3_small):
     cl = make_cluster("scale-up", 64, H100)
     thr = []
     for t in (15.0, 40.0, 100.0):
-        op = max_throughput(cl, dsv3_small, Scenario(t, 512))
+        op = solve(dsv3_small, cl, Scenario(t, 512)).point
         assert op is not None
         thr.append(op.throughput)
     assert thr[0] < thr[1] <= thr[2]
@@ -125,8 +125,8 @@ def test_throughput_increases_with_tpot_budget(dsv3_small):
 
 def test_long_context_reduces_throughput(dsv3_small):
     cl = make_cluster("scale-up", 64, H100)
-    short = max_throughput(cl, dsv3_small, Scenario(40, 512))
-    long_ = max_throughput(cl, dsv3_small, Scenario(40, 4096))
+    short = solve(dsv3_small, cl, Scenario(40, 512)).point
+    long_ = solve(dsv3_small, cl, Scenario(40, 4096)).point
     assert long_.throughput < short.throughput
 
 
@@ -136,9 +136,9 @@ def test_dbo_helps_at_relaxed_slo(dsv3_small):
     sc = Scenario(100, 512)
     hi = make_cluster("scale-up", 64, H100, link_bw=450e9)
     lo = make_cluster("scale-up", 64, H100, link_bw=150e9)
-    no_lo = best_of_opts(lo, dsv3_small, sc, opts="noopt")
-    dbo_lo = best_of_opts(lo, dsv3_small, sc, opts="dbo")
-    dbo_hi = best_of_opts(hi, dsv3_small, sc, opts="dbo")
+    no_lo = solve(dsv3_small, lo, sc, SearchSpec(opts="noopt")).point
+    dbo_lo = solve(dsv3_small, lo, sc, SearchSpec(opts="dbo")).point
+    dbo_hi = solve(dsv3_small, hi, sc, SearchSpec(opts="dbo")).point
     assert dbo_lo.throughput >= no_lo.throughput
     # gap after DBO must be small relative to the hi-BW throughput
     assert dbo_lo.throughput > 0.8 * dbo_hi.throughput
@@ -149,8 +149,8 @@ def test_sd_required_for_tight_slo(dsv3):
     (paper: 'SD is necessary to meet the SLO of TPOT=15ms')."""
     cl = make_cluster("torus", 64, H100)
     sc = Scenario(15, 512)
-    no = best_of_opts(cl, dsv3, sc, opts="dbo")
-    sd = best_of_opts(cl, dsv3, sc, opts="dbo+sd")
+    no = solve(dsv3, cl, sc, SearchSpec(opts="dbo")).point
+    sd = solve(dsv3, cl, sc, SearchSpec(opts="dbo+sd")).point
     assert sd is not None
     if no is not None:
         assert sd.throughput >= no.throughput
@@ -163,13 +163,13 @@ def test_sd_tpot_formula():
 
 def test_blackwell_faster_than_hopper(dsv3_small):
     sc = Scenario(40, 512)
-    h = max_throughput(make_cluster("scale-up", 64, H100), dsv3_small, sc)
-    b = max_throughput(make_cluster("scale-up", 64, BLACKWELL), dsv3_small,
-                       sc)
+    h = solve(dsv3_small, make_cluster("scale-up", 64, H100), sc).point
+    b = solve(dsv3_small, make_cluster("scale-up", 64, BLACKWELL),
+              sc).point
     assert b.throughput > h.throughput
 
 
 def test_exposed_comm_nonnegative(dsv3_small):
     cl = make_cluster("torus", 64, H100)
-    op = max_throughput(cl, dsv3_small, Scenario(40, 512), dbo=True)
+    op = solve(dsv3_small, cl, Scenario(40, 512), SearchSpec(dbo=True)).point
     assert op.exposed_comm >= 0.0

@@ -1,0 +1,237 @@
+"""The `solve()` facade (repro.core.api): the repo's one public search
+entry point.
+
+Guarantee layers:
+
+  1. routing equivalence — every `solve()` path returns byte-identical
+     results to the legacy `optimizer` wrapper it replaces (decode,
+     best-of-opts, prefill modes, degraded, skewed + placement, jax
+     backend), because both sides call the same sweep-engine functions;
+  2. deprecation enforcement — the legacy wrappers emit
+     `ReproDeprecationWarning` (escalated to an error by pyproject's
+     filterwarnings, so repo code cannot regress onto them) while still
+     returning the same values;
+  3. SearchSpec validation — contradictory specs fail loudly at
+     construction, not deep inside an engine;
+  4. Solution ergonomics — feasible/throughput/tpot/batch/prefill_point
+     behave on both feasible and infeasible results, and `tpot_curve`
+     reproduces the solved point's TPOT at its own batch.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.core import (H100, Scenario, SearchSpec, make_cluster, solve,
+                        solve_grid)
+from repro.core import api, optimizer, sweep
+from repro.core.api import ReproDeprecationWarning
+from repro.core.specdec import SpecDecConfig
+from repro.core.topology import FaultSet
+
+TABLE3_TOPOS = ("scale-up", "scale-out", "torus", "fullmesh")
+CFG = get_arch("deepseek-v3")
+SC = Scenario(40.0, 512)
+
+
+@pytest.fixture(scope="module")
+def dsv3_small():
+    return get_arch("deepseek-v3").replace(num_layers=8)
+
+
+# ---------------------------------------------------------------------------
+# 1. routing equivalence (facade == legacy wrapper, byte-identical)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("topo", TABLE3_TOPOS)
+def test_decode_equals_legacy_max_throughput(topo):
+    cl = make_cluster(topo, 64, H100)
+    sol = solve(CFG, cl, SC)
+    with pytest.warns(ReproDeprecationWarning, match="solve"):
+        legacy = optimizer.max_throughput(cl, CFG, SC)
+    assert sol.kind == "decode"
+    assert sol.point == legacy
+
+
+def test_decode_variants_equal_legacy():
+    cl = make_cluster("torus", 64, H100)
+    for dbo, sd in ((True, None), (True, SpecDecConfig())):
+        sol = solve(CFG, cl, SC, SearchSpec(dbo=dbo, sd=sd))
+        with pytest.warns(ReproDeprecationWarning):
+            legacy = optimizer.max_throughput(cl, CFG, SC, dbo=dbo, sd=sd)
+        assert sol.point == legacy
+
+
+@pytest.mark.parametrize("opts", api.OPTS_LEVELS)
+def test_opts_equals_legacy_best_of_opts(opts):
+    cl = make_cluster("fullmesh", 64, H100)
+    sol = solve(CFG, cl, SC, SearchSpec(opts=opts))
+    with pytest.warns(ReproDeprecationWarning, match="solve"):
+        legacy = optimizer.best_of_opts(cl, CFG, SC, opts=opts)
+    assert sol.kind == "decode"
+    assert sol.point == legacy
+
+
+def test_solve_levels_equals_per_level_grids():
+    clusters = [make_cluster(t, 64, H100) for t in ("scale-up", "torus")]
+    scenarios = [SC, Scenario(100.0, 4096)]
+    multi = api.solve_levels(CFG, clusters, scenarios)
+    for lvl in api.OPTS_LEVELS:
+        grid = solve_grid(CFG, clusters, scenarios, SearchSpec(opts=lvl))
+        assert [[s.point for s in row] for row in multi[lvl]] \
+            == [[s.point for s in row] for row in grid]
+        assert all(s.spec.opts == lvl for row in multi[lvl] for s in row)
+
+
+@pytest.mark.parametrize("mode", ("chunked", "disagg"))
+def test_prefill_equals_legacy(dsv3_small, mode):
+    sc = Scenario(40.0, 4608, prompt_len=4096, ttft_ms=2000.0)
+    cl = make_cluster("torus", 64, H100)
+    sol = solve(dsv3_small, cl, sc, SearchSpec(mode=mode))
+    with pytest.warns(ReproDeprecationWarning, match="solve"):
+        legacy = optimizer.max_throughput_prefill(cl, dsv3_small, sc,
+                                                  mode=mode)
+    assert sol.kind == "prefill"
+    assert sol.point == legacy
+    assert sol.prefill_point is sol.point
+
+
+def test_prefill_decode_mode_wraps_decode_search(dsv3_small):
+    """mode='decode' through the facade is the decode search wrapped into
+    a PrefillOperatingPoint exactly like sweep_prefill(mode='decode')."""
+    sc = Scenario(40.0, 4608, prompt_len=4096, ttft_ms=2000.0)
+    cl = make_cluster("scale-up", 64, H100)
+    via_mode = solve(dsv3_small, cl, sc, SearchSpec(mode="decode"))
+    assert via_mode.kind == "decode"         # the default-route decode search
+    ref = sweep.sweep_prefill([cl], dsv3_small, [sc], mode="decode")[0][0]
+    assert via_mode.prefill_point == ref
+
+
+def test_degraded_equals_degrade_policy(dsv3_small):
+    fs = FaultSet(xpus=2)
+    cl = make_cluster("torus", 64, H100)
+    spec = SearchSpec(faults=fs, tp="auto")
+    sol = solve(dsv3_small, cl, SC, spec)
+    plan = optimizer.degrade_policy(cl, dsv3_small, SC, fs)
+    assert sol.kind == "degraded"
+    assert sol.plan == plan
+    assert sol.point == plan.point
+    assert sol.throughput == plan.effective_throughput
+
+
+def test_skewed_placement_equals_legacy_sweep():
+    sc = Scenario(40.0, 4096, routing="zipf", zipf_s=1.0)
+    cl = make_cluster("fullmesh", 64, H100)
+    sol = solve(CFG, cl, sc, SearchSpec(dbo=True, placement="auto"))
+    ref = sweep.sweep_max_throughput([cl], CFG, [sc], dbo=True,
+                                     placement="auto")[0][0]
+    assert sol.point == ref
+
+
+def test_jax_backend_exact_match(dsv3_small):
+    cl = make_cluster("torus", 64, H100)
+    spec_np = SearchSpec(tp=2, dbo=True, backend="numpy")
+    ref = solve(dsv3_small, cl, SC, spec_np)
+    got = solve(dsv3_small, cl, SC, spec_np.replace(backend="jax"))
+    assert got.point == ref.point
+
+
+def test_solve_grid_shape_matches_scalar_solve():
+    clusters = [make_cluster(t, 64, H100) for t in ("scale-up", "torus")]
+    scenarios = [SC, Scenario(15.0, 4096)]
+    grid = solve_grid(CFG, clusters, scenarios)
+    assert len(grid) == 2 and all(len(row) == 2 for row in grid)
+    for ci, cl in enumerate(clusters):
+        for si, sc in enumerate(scenarios):
+            assert grid[ci][si].point == solve(CFG, cl, sc).point
+
+
+# ---------------------------------------------------------------------------
+# 2. deprecation enforcement
+# ---------------------------------------------------------------------------
+
+def test_deprecation_category_is_scoped():
+    """The category is OUR subclass: pyproject escalates exactly it, so
+    third-party DeprecationWarnings cannot fail the suite."""
+    assert issubclass(ReproDeprecationWarning, DeprecationWarning)
+    cl = make_cluster("scale-up", 64, H100)
+    with pytest.warns(ReproDeprecationWarning):
+        optimizer.max_throughput(cl, CFG, SC)
+    with pytest.warns(ReproDeprecationWarning):
+        optimizer.best_of_opts(cl, CFG, SC, opts="noopt")
+
+
+def test_deprecated_prefill_wrapper_warns(dsv3_small):
+    sc = Scenario(40.0, 4608, prompt_len=4096, ttft_ms=2000.0)
+    cl = make_cluster("scale-up", 64, H100)
+    with pytest.warns(ReproDeprecationWarning):
+        optimizer.max_throughput_prefill(cl, dsv3_small, sc, mode="chunked")
+
+
+# ---------------------------------------------------------------------------
+# 3. SearchSpec validation
+# ---------------------------------------------------------------------------
+
+def test_spec_rejects_contradictions():
+    with pytest.raises(ValueError, match="unknown mode"):
+        SearchSpec(mode="hybrid")
+    with pytest.raises(ValueError, match="unknown opts"):
+        SearchSpec(opts="everything")
+    with pytest.raises(ValueError, match="not.*both|opts"):
+        SearchSpec(opts="dbo", dbo=True)
+    with pytest.raises(ValueError, match="decode-only"):
+        SearchSpec(mode="chunked", opts="dbo")
+    with pytest.raises(ValueError, match="decode-only"):
+        SearchSpec(mode="disagg", placement="auto")
+    with pytest.raises(ValueError, match="decode-only"):
+        SearchSpec(faults=FaultSet(xpus=1), mode="chunked")
+    with pytest.raises(ValueError, match="do not apply"):
+        SearchSpec(faults=FaultSet(xpus=1), ep=64)
+
+
+def test_spec_is_frozen_hashable_and_replace():
+    spec = SearchSpec(opts="dbo+sd")
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        spec.tp = 2
+    assert hash(spec) == hash(SearchSpec(opts="dbo+sd"))
+    repl = spec.replace(opts=None, dbo=True)
+    assert repl.dbo and repl.opts is None and spec.opts == "dbo+sd"
+
+
+def test_solve_levels_rejects_variant_specs():
+    cl = make_cluster("scale-up", 64, H100)
+    with pytest.raises(ValueError, match="variant axis"):
+        api.solve_levels(CFG, [cl], [SC], spec=SearchSpec(dbo=True))
+    with pytest.raises(ValueError, match="healthy decode"):
+        api.solve_levels(CFG, [cl], [SC],
+                         spec=SearchSpec(faults=FaultSet(xpus=1),
+                                         tp="auto"))
+
+
+# ---------------------------------------------------------------------------
+# 4. Solution ergonomics + tpot_curve
+# ---------------------------------------------------------------------------
+
+def test_solution_properties_feasible_and_not(dsv3_small):
+    cl = make_cluster("scale-up", 64, H100)
+    ok = solve(dsv3_small, cl, SC)
+    assert ok.feasible
+    assert ok.throughput == ok.point.throughput > 0
+    assert ok.tpot == ok.point.tpot and ok.batch == ok.point.batch
+    bad = solve(dsv3_small, cl, Scenario(10_000.0, 50_000_000))
+    assert not bad.feasible
+    assert bad.throughput == 0.0
+    assert bad.tpot is None and bad.batch is None
+    assert bad.prefill_point is None
+
+
+def test_tpot_curve_reproduces_solved_point(dsv3_small):
+    cl = make_cluster("torus", 64, H100)
+    sol = solve(dsv3_small, cl, SC, SearchSpec(opts="dbo+sd"))
+    pt = sol.point
+    batches = [max(pt.batch // 2, 1), pt.batch, pt.batch * 2]
+    curve = api.tpot_curve(dsv3_small, cl, SC, batches, point=pt)
+    assert curve.shape == (3,)
+    assert curve[1] == pytest.approx(pt.tpot, rel=1e-9)
+    assert np.all(np.diff(curve) > 0)          # TPOT grows with batch

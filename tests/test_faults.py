@@ -13,13 +13,12 @@ import numpy as np
 import pytest
 
 from repro.configs import get_arch
-from repro.core import H100, Scenario, make_cluster
+from repro.core import H100, Scenario, SearchSpec, make_cluster, solve
 from repro.core.availability import (COLLECTIVE_TIMEOUT_S, MTBF_MTTR_H,
                                      build_availability,
                                      component_inventory,
                                      faultset_for_counts, straddle_penalty)
-from repro.core.optimizer import (degrade_policy, max_throughput,
-                                  max_throughput_scalar)
+from repro.core.optimizer import degrade_policy, max_throughput_scalar
 from repro.core.sweep import degraded_max_throughput, degraded_subcluster
 from repro.core.tco import availability_adjusted_throughput_per_cost
 from repro.core.topology import FaultSet, NODE_XPUS, TOPOLOGIES
@@ -125,7 +124,7 @@ def test_batched_scalar_agree_under_faults():
     the scalar reference agree to 1e-9 on all four topologies."""
     for topo, cl in _clusters().items():
         cl_f = cl.with_faults(FAULTS[topo])
-        b = max_throughput(cl_f, CFG, SC, tp=1, pp=1)
+        b = solve(CFG, cl_f, SC, SearchSpec(tp=1, pp=1)).point
         s = max_throughput_scalar(cl_f, CFG, SC, tp=1, pp=1)
         assert (b is None) == (s is None), topo
         if b is None:
@@ -143,7 +142,7 @@ def test_degraded_subcluster_and_search():
         cl_d = degraded_subcluster(cl, fs)
         assert cl_d is not None and cl_d.n_xpus == 62
         pt = degraded_max_throughput(cl, CFG, SC, faults=fs)
-        healthy = max_throughput(cl, CFG, SC, tp="auto")
+        healthy = solve(CFG, cl, SC, SearchSpec(tp="auto")).point
         if pt is not None and healthy is not None:
             assert pt.throughput <= healthy.throughput * (1 + 1e-12), topo
 
@@ -155,7 +154,7 @@ def test_degrade_policy_plan():
         if plan.action == "down":
             assert plan.effective_throughput == 0.0
             continue
-        baseline = max_throughput(cl, CFG, SC, tp="auto")
+        baseline = solve(CFG, cl, SC, SearchSpec(tp="auto")).point
         assert plan.effective_throughput <= baseline.throughput, topo
         # the policy picks the better arm
         keep_thr = plan.keep_point.throughput if plan.keep_point else 0.0

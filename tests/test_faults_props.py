@@ -21,8 +21,8 @@ pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.configs import get_arch
-from repro.core import H100, Scenario, make_cluster
-from repro.core.optimizer import max_throughput, tpot_at
+from repro.core import H100, Scenario, SearchSpec, make_cluster, solve
+from repro.core.optimizer import tpot_at
 from repro.core.topology import (FaultSet, SCALE_UP_PORTS, TOPOLOGIES)
 from repro.core.workload import ServingPoint
 
@@ -88,8 +88,9 @@ def test_searched_point_never_improves_under_faults(topo, links, planes):
     healthy winner's batch) nor increase the searched throughput."""
     fs = FaultSet(mesh_links=(links, 0, 0), switch_planes=planes)
     cl = CLUSTERS[topo]
-    healthy = max_throughput(cl, CFG, SC, tp=1, pp=1)
-    faulted = max_throughput(cl.with_faults(fs), CFG, SC, tp=1, pp=1)
+    healthy = solve(CFG, cl, SC, SearchSpec(tp=1, pp=1)).point
+    faulted = solve(CFG, cl.with_faults(fs), SC,
+                    SearchSpec(tp=1, pp=1)).point
     assert healthy is not None
     if faulted is None:         # SLO now unreachable: degraded, fine
         return

@@ -21,7 +21,8 @@ import numpy as np
 import pytest
 
 from repro.configs import get_arch
-from repro.core import H100, Scenario, make_cluster
+from repro.core import (H100, Scenario, SearchSpec, make_cluster,
+                        solve)
 from repro.core import optable, optimizer, sweep, workload
 from repro.core.specdec import SpecDecConfig
 from repro.core.workload import ServingPoint
@@ -174,7 +175,7 @@ def test_fixed_pp_operating_point_byte_identical():
     sc = Scenario(40.0, 512)
     for topo in ("scale-up", "torus"):
         cl = make_cluster(topo, 64, H100)
-        fast = optimizer.max_throughput(cl, cfg, sc, tp=2, pp=2)
+        fast = solve(cfg, cl, sc, SearchSpec(tp=2, pp=2)).point
         ref = optimizer.max_throughput_scalar(cl, cfg, sc, tp=2, pp=2)
         assert fast == ref, topo
         assert fast is not None and fast.pp == 2 and fast.ep == 16

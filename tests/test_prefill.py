@@ -22,7 +22,8 @@ import numpy as np
 import pytest
 
 from repro.configs import get_arch
-from repro.core import H100, Scenario, make_cluster
+from repro.core import (H100, Scenario, SearchSpec, make_cluster,
+                        solve)
 from repro.core import optable, optimizer, sweep, workload
 from repro.core.workload import ServingPoint
 
@@ -261,8 +262,8 @@ def test_decode_dbo_pinned_to_committed_fig11():
     for want in committed["dbo/bw150"]:
         if want["thpt_per_xpu"] == 0.0:
             continue
-        op = optimizer.best_of_opts(cl, cfg,
-                                    Scenario(want["tpot_ms"], 512), "dbo")
+        op = solve(cfg, cl, Scenario(want["tpot_ms"], 512),
+                   SearchSpec(opts="dbo")).point
         assert op.throughput / 64 == want["thpt_per_xpu"]
         assert op.used_dbo == want["used_dbo"]
 
@@ -307,14 +308,14 @@ def test_sweep_prefill_modes(dsv3_small):
     sc = Scenario(40.0, 4608, prompt_len=4096, ttft_ms=2000.0)
     for topo in ("scale-up", "torus"):
         cl = make_cluster(topo, 64, H100)
-        dec = optimizer.max_throughput_prefill(cl, dsv3_small, sc,
-                                               mode="decode")
-        chk = optimizer.max_throughput_prefill(cl, dsv3_small, sc,
-                                               mode="chunked")
-        dis = optimizer.max_throughput_prefill(cl, dsv3_small, sc,
-                                               mode="disagg")
+        dec = solve(dsv3_small, cl, sc,
+                    SearchSpec(mode="decode")).prefill_point
+        chk = solve(dsv3_small, cl, sc,
+                    SearchSpec(mode="chunked")).prefill_point
+        dis = solve(dsv3_small, cl, sc,
+                    SearchSpec(mode="disagg")).prefill_point
         # decode mode wraps the seed search byte-identically
-        ref = optimizer.max_throughput(cl, dsv3_small, sc)
+        ref = solve(dsv3_small, cl, sc).point
         assert (dec.batch, dec.tpot, dec.throughput) \
             == (ref.batch, ref.tpot, ref.throughput)
         for op in (chk, dis):
@@ -354,7 +355,7 @@ def test_memory_guard_rejects_oversized_context(dsv3_small):
     p = ServingPoint(batch_global=1, context=huge.context, ep=64,
                      n_devices=64)
     assert not workload.single_request_fits(dsv3_small, p, cl.xpu.hbm_cap)
-    assert optimizer.max_throughput(cl, dsv3_small, huge) is None
+    assert solve(dsv3_small, cl, huge).point is None
     assert optimizer.max_throughput_scalar(cl, dsv3_small, huge) is None
     # a prompt that pushes context + prompt_len past HBM is rejected too,
     # in every serving mode
@@ -369,8 +370,7 @@ def test_memory_guard_keeps_feasible_scenarios(dsv3_small):
     cl = make_cluster("scale-up", 64, H100)
     p = ServingPoint(batch_global=1, context=4096, ep=64, n_devices=64)
     assert workload.single_request_fits(dsv3_small, p, cl.xpu.hbm_cap)
-    assert optimizer.max_throughput(cl, dsv3_small,
-                                    Scenario(40.0, 4096)) is not None
+    assert solve(dsv3_small, cl, Scenario(40.0, 4096)).point is not None
 
 
 # ---------------------------------------------------------------------------

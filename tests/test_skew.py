@@ -21,7 +21,8 @@ import numpy as np
 import pytest
 
 from repro.configs import get_arch
-from repro.core import H100, Scenario, make_cluster
+from repro.core import (H100, Scenario, SearchSpec, make_cluster,
+                        solve)
 from repro.core import optable, optimizer, placement, sweep, workload
 from repro.core.workload import ServingPoint
 
@@ -122,10 +123,10 @@ def test_uniform_scenario_name_and_fast_path():
 def test_uniform_sweep_and_auto_placement_byte_identical(topo):
     cl = make_cluster(topo, N, H100)
     sc = Scenario(40.0, 4096)
-    ref = optimizer.max_throughput(cl, CFG, sc, dbo=True)
+    ref = solve(CFG, cl, sc, SearchSpec(dbo=True)).point
     assert ref is not None
-    assert ref == optimizer.max_throughput(cl, CFG, sc, dbo=True,
-                                           placement="auto")
+    assert ref == solve(CFG, cl, sc, SearchSpec(dbo=True,
+                                                placement="auto")).point
     assert ref.extra_experts == 0
     got = sweep.sweep_max_throughput([cl], CFG, [sc], dbo=True,
                                      placement="auto")[0][0]

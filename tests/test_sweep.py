@@ -17,7 +17,8 @@ import numpy as np
 import pytest
 
 from repro.configs import get_arch
-from repro.core import H100, Scenario, make_cluster
+from repro.core import (H100, Scenario, SearchSpec, make_cluster,
+                        solve)
 from repro.core import optable, optimizer, sweep, workload
 from repro.core.specdec import SpecDecConfig
 from repro.core.workload import ServingPoint
@@ -127,7 +128,7 @@ def test_max_throughput_byte_identical_table3(topo, n):
     cl = make_cluster(topo, n, H100)
     for sc in (Scenario(40.0, 512), Scenario(15.0, 4096)):
         for dbo, sd in ((False, None), (True, SpecDecConfig())):
-            fast = optimizer.max_throughput(cl, cfg, sc, dbo=dbo, sd=sd)
+            fast = solve(cfg, cl, sc, SearchSpec(dbo=dbo, sd=sd)).point
             ref = optimizer.max_throughput_scalar(cl, cfg, sc, dbo=dbo,
                                                   sd=sd)
             assert fast == ref, (topo, n, sc.name, dbo, sd)
@@ -138,7 +139,7 @@ def test_best_of_opts_byte_identical(opts):
     cfg = get_arch("deepseek-v3")
     cl = make_cluster("fullmesh", 64, H100)
     sc = Scenario(40.0, 512)
-    assert (optimizer.best_of_opts(cl, cfg, sc, opts=opts)
+    assert (solve(cfg, cl, sc, SearchSpec(opts=opts)).point
             == optimizer.best_of_opts_scalar(cl, cfg, sc, opts=opts))
 
 
@@ -151,8 +152,8 @@ def test_best_of_opts_grid_shape_and_consistency():
     assert len(grid) == 2 and all(len(row) == 2 for row in grid)
     for ci, cl in enumerate(clusters):
         for si, sc in enumerate(scenarios):
-            assert grid[ci][si] == optimizer.best_of_opts(cl, cfg, sc,
-                                                          opts="dbo")
+            assert grid[ci][si] == solve(cfg, cl, sc,
+                                         SearchSpec(opts="dbo")).point
 
 
 def test_best_of_opts_multi_matches_per_level():
@@ -322,8 +323,8 @@ def test_auto_equals_best_fixed_candidate():
     cfg = get_arch("deepseek-v3")
     cl = make_cluster("scale-out", 64, H100)
     sc = Scenario(40.0, 512)
-    auto = optimizer.max_throughput(cl, cfg, sc, tp="auto")
-    per_cand = [optimizer.max_throughput(cl, cfg, sc, tp=t, pp=q, ep=e)
+    auto = solve(cfg, cl, sc, SearchSpec(tp="auto")).point
+    per_cand = [solve(cfg, cl, sc, SearchSpec(tp=t, pp=q, ep=e)).point
                 for t, q, e in sweep.parallelism_candidates(cfg, cl)]
     best = max((p for p in per_cand if p is not None),
                key=lambda p: p.throughput)

@@ -1,0 +1,271 @@
+"""Cluster-scale traffic simulator (`repro.core.traffic`).
+
+Guarantee layers:
+
+  1. trace generation — spec validation, seeded determinism, rate/shape
+     statistics, and the time-warp invariant (scaling the offered rate
+     compresses the SAME unit arrival stream, the property the load-sweep
+     monotonicity claims stand on);
+  2. catalog construction — every entry comes from `api.solve` with its
+     `api.tpot_curve` clock, pool sizes ascend, misuse fails loudly;
+  3. simulation invariants — zero-arrival and zero-fault edges,
+     bit-identical determinism, Little's law on the recorded occupancy
+     integral, attainment monotone non-increasing in offered load;
+  4. provisioning and faults — autoscaling parks capacity and never loses
+     through `best_provisioning`; fault events spike the TTFT tail and
+     never add goodput; `fleet_cost` bills the XPU share by active
+     fraction while the fabric stays a fixed cost.
+
+Everything runs olmoe-1b-7b on 8 XPUs (the fig_traffic configuration,
+shrunk horizons) — small enough that the whole file is seconds, large
+enough that traces are thousands of requests.
+"""
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.core import H100, Scenario, SearchSpec, make_cluster, traffic
+from repro.core import api
+from repro.core.tco import cluster_tco
+from repro.core.topology import FaultSet
+
+CFG = get_arch("olmoe-1b-7b")
+CL = make_cluster("torus", 8, H100)
+# TPOT tight enough that the searched cap binds the SLO + an explicit
+# TTFT SLO so queueing delay costs attainment (the cliff precondition)
+SC = Scenario(15.0, 512, ttft_ms=500.0)
+MIX = ((0.75, 0, 256), (0.25, 384, 512))
+
+
+@pytest.fixture(scope="module")
+def catalog():
+    return traffic.build_catalog(CFG, CL, SC, SearchSpec(),
+                                 pool_fracs=(0.25, 0.5, 1.0), mix=MIX)
+
+
+@pytest.fixture(scope="module")
+def cap_rps(catalog):
+    return catalog.capacity_rps(catalog.full,
+                                traffic.TraceSpec(1.0, 1.0,
+                                                  length_mix=MIX).mean_gen)
+
+
+def _trace(cap, load, horizon=60.0, seed=7, **kw):
+    return traffic.generate_trace(traffic.TraceSpec(
+        horizon_s=horizon, rate_rps=cap * load, length_mix=MIX,
+        seed=seed, **kw))
+
+
+# ---------------------------------------------------------------------------
+# 1. trace generation
+# ---------------------------------------------------------------------------
+
+def test_trace_spec_validation():
+    with pytest.raises(ValueError, match="horizon"):
+        traffic.TraceSpec(horizon_s=0.0, rate_rps=1.0)
+    with pytest.raises(ValueError, match="rate"):
+        traffic.TraceSpec(horizon_s=1.0, rate_rps=-1.0)
+    with pytest.raises(ValueError, match="arrival"):
+        traffic.TraceSpec(horizon_s=1.0, rate_rps=1.0, arrival="weibull")
+    with pytest.raises(ValueError, match="cv2"):
+        traffic.TraceSpec(horizon_s=1.0, rate_rps=1.0, cv2=0.0)
+    with pytest.raises(ValueError, match="amplitude"):
+        traffic.TraceSpec(horizon_s=1.0, rate_rps=1.0,
+                          diurnal_amplitude=1.0)
+    with pytest.raises(ValueError, match="length_mix"):
+        traffic.TraceSpec(horizon_s=1.0, rate_rps=1.0,
+                          length_mix=((1.0, 0, 0),))
+
+
+def test_trace_seeded_and_statistical():
+    spec = traffic.TraceSpec(horizon_s=200.0, rate_rps=50.0, length_mix=MIX,
+                             seed=3)
+    a, b = traffic.generate_trace(spec), traffic.generate_trace(spec)
+    np.testing.assert_array_equal(a.t, b.t)
+    np.testing.assert_array_equal(a.prompt, b.prompt)
+    np.testing.assert_array_equal(a.gen, b.gen)
+    other = traffic.generate_trace(traffic.TraceSpec(
+        horizon_s=200.0, rate_rps=50.0, length_mix=MIX, seed=4))
+    assert not np.array_equal(a.t, other.t)
+    # rate and mixture statistics (10k arrivals)
+    assert a.n == pytest.approx(200.0 * 50.0, rel=0.05)
+    assert np.all(np.diff(a.t) >= 0) and a.t[-1] < spec.horizon_s
+    assert float((a.prompt > 0).mean()) == pytest.approx(0.25, abs=0.03)
+    assert spec.mean_gen == pytest.approx(0.75 * 256 + 0.25 * 512)
+
+
+def test_gamma_burstiness():
+    mk = lambda arr, cv2: traffic.generate_trace(traffic.TraceSpec(
+        horizon_s=400.0, rate_rps=50.0, arrival=arr, cv2=cv2, seed=5))
+    ia_p = np.diff(mk("poisson", 1.0).t)
+    ia_g = np.diff(mk("gamma", 4.0).t)
+    cv2 = lambda x: float(np.var(x) / np.mean(x) ** 2)
+    assert cv2(ia_p) == pytest.approx(1.0, rel=0.15)
+    assert cv2(ia_g) == pytest.approx(4.0, rel=0.25)
+
+
+def test_scaled_load_compresses_same_stream():
+    """`spec.scaled(L)` time-compresses the SAME unit arrival sequence —
+    the shared-prefix times divide exactly by L (the load-sweep
+    monotonicity construction)."""
+    spec = traffic.TraceSpec(horizon_s=100.0, rate_rps=20.0, arrival="gamma",
+                             cv2=4.0, seed=9)
+    t1 = traffic.generate_trace(spec)
+    t2 = traffic.generate_trace(spec.scaled(2.0))
+    assert t2.n >= t1.n
+    np.testing.assert_allclose(t2.t[:t1.n], t1.t / 2.0, rtol=1e-12)
+
+
+def test_diurnal_time_warp():
+    spec = traffic.TraceSpec(horizon_s=600.0, rate_rps=30.0,
+                             diurnal_amplitude=0.8, diurnal_period_s=300.0,
+                             seed=1)
+    tr = traffic.generate_trace(spec)
+    assert np.all(np.diff(tr.t) >= 0) and tr.t[-1] <= spec.horizon_s
+    # peak half-period (sin > 0) holds more arrivals than the trough
+    phase = np.mod(tr.t, 300.0)
+    peak = int((phase < 150.0).sum())
+    assert peak > 1.5 * (tr.n - peak)
+
+
+# ---------------------------------------------------------------------------
+# 2. catalog construction
+# ---------------------------------------------------------------------------
+
+def test_catalog_entries_from_solve(catalog):
+    sizes = [e.n_xpus for e in catalog.entries]
+    assert sizes == sorted(sizes) and sizes[-1] == CL.n_xpus
+    assert len(sizes) == 3
+    full = catalog.full
+    ref = api.solve(CFG, CL, SC).point
+    assert full.point == ref
+    assert full.cap == ref.batch and full.tpot.shape == (ref.batch,)
+    assert full.tpot[-1] == pytest.approx(ref.tpot, rel=1e-9)
+    assert np.all(np.diff(full.tpot) > 0)
+    assert full.chunk_time > 0.0          # MIX has a prompt class
+
+
+def test_catalog_misuse_rejected():
+    with pytest.raises(ValueError, match="full pool"):
+        traffic.build_catalog(CFG, CL, SC, pool_fracs=(0.5,))
+    with pytest.raises(ValueError, match="healthy decode"):
+        traffic.build_catalog(CFG, CL, SC,
+                              SearchSpec(faults=FaultSet(xpus=1),
+                                         tp="auto"))
+    with pytest.raises(ValueError, match="healthy decode"):
+        traffic.build_catalog(
+            CFG, CL, Scenario(15.0, 512, prompt_len=384, ttft_ms=500.0),
+            SearchSpec(mode="chunked"))
+
+
+# ---------------------------------------------------------------------------
+# 3. simulation invariants
+# ---------------------------------------------------------------------------
+
+def test_zero_arrival_edge(catalog):
+    tr = traffic.generate_trace(traffic.TraceSpec(horizon_s=30.0,
+                                                  rate_rps=0.0))
+    res = traffic.simulate_trace(catalog, tr)
+    assert res.n_requests == 0 and res.n_iters == 0
+    assert res.attainment == 1.0 and res.goodput_tok_s == 0.0
+    assert res.elapsed_s == 30.0 and res.active_frac == 1.0
+
+
+def test_simulation_deterministic(catalog, cap_rps):
+    tr = _trace(cap_rps, 0.8, arrival="gamma", cv2=4.0)
+    plan = traffic.seeded_fault_plan(CL, n_iters=catalog.est_iterations(tr),
+                                     rate_per_iter=1e-3, seed=2,
+                                     repair_s=10.0, downtime_s=2.0)
+    pol = traffic.AutoscalePolicy(check_interval_s=10.0, min_dwell_s=30.0,
+                                  switch_downtime_s=5.0)
+    a = traffic.simulate_trace(catalog, tr, autoscale=pol, faults=plan)
+    b = traffic.simulate_trace(catalog, tr, autoscale=pol, faults=plan)
+    assert a.as_dict() == b.as_dict()
+
+
+def test_littles_law(catalog, cap_rps):
+    tr = _trace(cap_rps, 0.8)
+    res = traffic.simulate_trace(catalog, tr)
+    assert res.attainment > 0.9
+    # L = lambda * W on the recorded occupancy integral (the integral is
+    # piecewise-constant over iterations, so a few percent of slack)
+    assert res.mean_in_system == pytest.approx(
+        res.arrival_rps * res.mean_sojourn_s, rel=0.05)
+    # every request was served and all decode tokens accounted for
+    assert res.throughput_tok_s * res.elapsed_s \
+        == pytest.approx(float(tr.gen.sum()))
+
+
+def test_attainment_monotone_and_cliff(catalog, cap_rps):
+    loads = (0.6, 0.9, 1.1, 1.3)
+    res = [traffic.simulate_trace(
+        catalog, _trace(cap_rps, ld, arrival="gamma", cv2=4.0))
+        for ld in loads]
+    att = [r.attainment for r in res]
+    assert all(a + 1e-9 >= b for a, b in zip(att, att[1:]))
+    assert att[0] > 0.95                      # plateau below capacity
+    assert att[-1] < att[0] - 0.05            # cliff past capacity
+    # queueing, not serving, is what collapses: p99 TTFT explodes
+    assert res[-1].ttft_p99 > 10 * res[0].ttft_p99
+
+
+# ---------------------------------------------------------------------------
+# 4. provisioning, faults, cost
+# ---------------------------------------------------------------------------
+
+def test_autoscale_parks_capacity_and_never_loses(catalog, cap_rps):
+    dtr = traffic.generate_trace(traffic.TraceSpec(
+        horizon_s=600.0, rate_rps=0.4 * cap_rps, diurnal_amplitude=0.6,
+        diurnal_period_s=300.0, length_mix=MIX, seed=13))
+    pol = traffic.AutoscalePolicy(check_interval_s=30.0, target_util=0.7,
+                                  min_dwell_s=120.0, switch_downtime_s=30.0)
+    static = traffic.simulate_trace(catalog, dtr)
+    auto = traffic.simulate_trace(catalog, dtr, autoscale=pol)
+    assert static.active_frac == 1.0 and static.n_switches == 0
+    assert auto.n_switches >= 1 and auto.active_frac < 1.0
+    assert auto.cost_month < static.cost_month
+    name, best = traffic.best_provisioning(catalog, dtr,
+                                           policies=[None, pol])
+    assert best.goodput_per_cost >= static.goodput_per_cost
+    assert name in ("static", "autoscale@0.7")
+
+
+def test_faults_spike_ttft_never_add_goodput(catalog, cap_rps):
+    tr = _trace(cap_rps, 0.8)
+    plan = traffic.seeded_fault_plan(CL, n_iters=catalog.est_iterations(tr),
+                                     rate_per_iter=1e-3, seed=2,
+                                     repair_s=10.0, downtime_s=2.0)
+    assert len(plan.faultsets) >= 1
+    # every sampled faultset is non-empty (the injector fired for it)
+    for fs in plan.faultsets:
+        assert any(fs.mesh_links) or fs.switch_planes or fs.nics or fs.xpus
+    healthy = traffic.simulate_trace(catalog, tr)
+    faulted = traffic.simulate_trace(catalog, tr, faults=plan)
+    assert faulted.n_fault_events >= 1
+    assert faulted.ttft_p99 >= healthy.ttft_p99
+    assert faulted.goodput_tok_s <= healthy.goodput_tok_s
+
+
+def test_zero_rate_fault_plan_is_identity(catalog, cap_rps):
+    tr = _trace(cap_rps, 0.7)
+    plan = traffic.seeded_fault_plan(CL, n_iters=catalog.est_iterations(tr),
+                                     rate_per_iter=0.0, seed=0)
+    assert len(plan.faultsets) == 0
+    base = traffic.simulate_trace(catalog, tr)
+    with_plan = traffic.simulate_trace(catalog, tr, faults=plan)
+    assert with_plan.n_fault_events == 0
+    assert with_plan.as_dict() == base.as_dict()
+
+
+def test_fleet_cost_bills_xpus_by_active_fraction():
+    bd = cluster_tco(CL)
+    full = traffic.fleet_cost(CL, 1.0)
+    assert full == pytest.approx(bd.monthly_xpu + bd.monthly_energy_xpu
+                                 + bd.monthly_switch + bd.monthly_link
+                                 + bd.monthly_energy_net)
+    parked = traffic.fleet_cost(CL, 0.0)
+    assert parked == pytest.approx(bd.monthly_switch + bd.monthly_link)
+    assert parked < traffic.fleet_cost(CL, 0.5) < full
+    # the network-cost factor scales only the fabric share
+    assert traffic.fleet_cost(CL, 1.0, c=0.0) \
+        == pytest.approx(bd.monthly_xpu + bd.monthly_energy_xpu)
