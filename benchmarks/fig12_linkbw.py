@@ -10,13 +10,17 @@ from repro.configs import get_arch
 from repro.core import H100, Scenario, make_cluster
 from repro.core.tco import cluster_tco
 
-BWS = (50e9, 150e9, 300e9, 450e9, 900e9)
+# the sweep is "x of the scale-up provision" (450 GB/s on H100): the
+# multipliers land on 50/150/300/450/900 GB/s exactly
+BW_MULTS = (1 / 9, 1 / 3, 2 / 3, 1.0, 2.0)
+BWS = tuple(H100.scale_up_bw * m for m in BW_MULTS)
 SCENARIOS = [Scenario(t, c) for c in (512, 4096) for t in (15.0, 40.0, 100.0)]
 
 
 def run(verbose: bool = True):
     cfg = get_arch("deepseek-v3")
-    clusters = [make_cluster("scale-up", 64, H100, link_bw=bw) for bw in BWS]
+    clusters = [make_cluster("scale-up", 64, H100, link_bw_mult=m)
+                for m in BW_MULTS]
     costs = {c: {bw: cluster_tco(cl).per_xpu(cl.n_xpus, c)
                  for bw, cl in zip(BWS, clusters)}
              for c in (0.25, 0.5, 1.0, 2.0)}

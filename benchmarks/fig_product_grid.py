@@ -35,11 +35,10 @@ from repro.configs.deepseek_v3 import CONFIG as CFG
 from repro.core import optable, sweep
 from repro.core.hardware import BLACKWELL, H100, RUBIN
 from repro.core.optimizer import Scenario
-from repro.core.topology import Cluster, make_cluster
+from repro.core.topology import TOPOLOGIES, make_cluster
 
 SIZES = (64, 256)
 GENERATIONS = (("h100", H100), ("blackwell", BLACKWELL), ("rubin", RUBIN))
-TOPOLOGIES = ("scale-up", "scale-out", "torus", "fullmesh")
 BW_MULTS = tuple(float(2.0 ** e) for e in range(-2, 6))   # 0.25x .. 32x
 TPOTS_MS = (5.0, 10.0, 15.0, 25.0, 40.0, 60.0, 100.0, 150.0)
 CONTEXTS = (256, 512, 1024, 2048, 4096, 8192, 16384, 32768)
@@ -52,15 +51,10 @@ DBO_CLUSTERS = 8          # dbo subgrid: one block of the size-64 grid
 
 
 def _clusters(n: int):
-    out = []
-    for _, xpu in GENERATIONS:
-        for topo in TOPOLOGIES:
-            base = make_cluster(topo, n, xpu)
-            for mult in BW_MULTS:
-                out.append(Cluster(topology=topo, n_xpus=n, xpu=xpu,
-                                   link_bw=base.link_bw * mult,
-                                   dims=base.dims))
-    return out
+    return [make_cluster(topo, n, xpu, link_bw_mult=mult)
+            for _, xpu in GENERATIONS
+            for topo in TOPOLOGIES
+            for mult in BW_MULTS]
 
 
 def _batches():

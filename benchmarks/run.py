@@ -153,6 +153,7 @@ MODULES = [
     "benchmarks.fig_parallelism",
     "benchmarks.fig_pipeline",
     "benchmarks.fig_failures",
+    "benchmarks.fig_ocs",
     "benchmarks.fig_product_grid",
     "benchmarks.fig_skew",
     "benchmarks.fig_traffic",
@@ -192,6 +193,9 @@ BUDGETS_S = {
     "benchmarks.fig_pipeline": 120,
     "benchmarks.fig_prefill_overlap": 120,
     "benchmarks.fig_failures": 180,
+    # five-fabric fig14 grid (one batched pass) + a single-size
+    # fig17-style Pareto arm over 5 topologies x 5 bandwidth fractions
+    "benchmarks.fig_ocs": 120,
     # 10^6-cell numpy-vs-jax product grid: ~35s local (numpy reference
     # pass dominates), plus jit compile and a cold CI runner's margin
     "benchmarks.fig_product_grid": 240,

@@ -2,8 +2,12 @@
 methodology for MoE LLM serving networks.
 
   alphabeta    extended Hockney communication model (paper Table 1)
-  collectives  AR/A2A algorithm cost formulas per topology (Tables 2-3)
-  topology     scale-up / scale-out / 3D torus / 3D full-mesh clusters
+  collectives  AR/A2A algorithm cost formulas (Tables 2-3)
+  fabric       pluggable Fabric registry: per-topology collective menus,
+               fault derating, survivor accounting, TCO inventory hooks
+               (scale-up / scale-out / torus / full-mesh + the
+               reconfigurable optical circuit-switched fabric)
+  topology     the Cluster facade delegating to the registered fabrics
   hardware     XPU generations (H100, Blackwell, Rubin, TPU v5e; Table 5)
   compute_model roofline-with-efficiency per-layer compute times
   workload     MoE decode/prefill iterations -> ordered op lists (per-device)
@@ -34,6 +38,7 @@ from repro.core.api import (ReproDeprecationWarning, SearchSpec, Solution,
                             solve, solve_grid, solve_levels, tpot_curve)
 from repro.core.availability import (AvailabilityModel, ComponentClass,
                                      build_availability)
+from repro.core.fabric import FABRICS, Fabric, get_fabric, register_fabric
 from repro.core.hardware import (H100, BLACKWELL, RUBIN, TPU_V5E, GENERATIONS,
                                  XPUSpec)
 from repro.core.optimizer import (Scenario, SCENARIOS, best_of_opts,

@@ -43,8 +43,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.topology import (Cluster, FaultSet, SCALE_UP_PORTS,
-                                 SCALE_OUT_PORTS, SWITCH_RADIX)
+from repro.core.topology import Cluster, FaultSet
 
 HOURS_TO_S = 3600.0
 
@@ -106,42 +105,18 @@ MTBF_MTTR_H: Dict[str, Tuple[float, float]] = {
 }
 
 
-def _switch_count(cluster: Cluster) -> int:
-    """Switch ASIC count behind `switch_capacity_total`'s sizing (0 for the
-    switchless meshes; the scale-out NVLink island switches fold into the
-    NIC/node blast radius rather than a separate class)."""
-    if cluster.topology not in ("scale-up", "scale-out"):
-        return 0
-    ports = SCALE_UP_PORTS if cluster.topology == "scale-up" \
-        else SCALE_OUT_PORTS
-    endpoints = cluster.n_xpus * ports
-    if endpoints <= SWITCH_RADIX * ports and cluster.n_xpus <= SWITCH_RADIX:
-        return ports
-    down = SWITCH_RADIX // 2
-    n_leaf = math.ceil(endpoints / down)
-    n_spine = math.ceil(n_leaf * down / SWITCH_RADIX)
-    return n_leaf + n_spine
-
-
-def _switch_blast_xpus(cluster: Cluster) -> int:
-    """XPUs a single scale-out switch failure disconnects: at one level the
-    lone fabric switch serves every endpoint (the whole cluster goes dark
-    — the blast-radius concentration the mesh topologies do not have);
-    at two levels a leaf takes its SWITCH_RADIX/2 down-ports' XPUs."""
-    if cluster.n_xpus <= SWITCH_RADIX:
-        return cluster.n_xpus
-    return min(SWITCH_RADIX // 2, cluster.n_xpus)
-
-
 def component_inventory(cluster: Cluster,
                         mtbf_mttr: Optional[Dict[str, Tuple[float, float]]]
                         = None) -> List[ComponentClass]:
     """Failable components of one cluster, counts derived from the same
-    inventory the TCO model prices. Mesh links split copper/AOC by the
-    `link_inventory` bandwidth fractions over the exact physical link
-    count; switched fabrics carry XPU-to-leaf cables (copper), leaf-spine
-    cables (AOC, two-level only), and switch ASICs; scale-out carries one
-    NIC per XPU whose loss orphans the whole NODE_XPUS node."""
+    inventory the TCO model prices. The XPU row is fabric-agnostic; the
+    network rows come from the fabric's `net_component_classes` hook
+    (core/fabric.py): mesh links split copper/AOC by the `link_inventory`
+    bandwidth fractions over the exact physical link count; switched
+    fabrics carry XPU-to-leaf cables (copper), leaf-spine cables (AOC,
+    two-level only), and switch ASICs; scale-out carries one NIC per XPU
+    whose loss orphans the whole NODE_XPUS node; the OCS fabric carries
+    transceiver-terminated fibers and MEMS switches."""
     mm = dict(MTBF_MTTR_H)
     if mtbf_mttr:
         mm.update(mtbf_mttr)
@@ -152,24 +127,7 @@ def component_inventory(cluster: Cluster,
                               mttr_h=mttr)
 
     out = [cls("xpu", cluster.n_xpus)]
-    inv = cluster.link_inventory()
-    if cluster.topology in ("torus", "fullmesh"):
-        total_links = sum(cluster.mesh_link_counts())
-        total_bw = inv.copper_gbps_total + inv.aoc_gbps_total
-        aoc_frac = inv.aoc_gbps_total / total_bw if total_bw else 0.0
-        n_aoc = int(round(total_links * aoc_frac))
-        out.append(cls("link_copper", total_links - n_aoc))
-        out.append(cls("link_aoc", n_aoc))
-        return [c for c in out if c.count > 0]
-    ports = SCALE_UP_PORTS if cluster.topology == "scale-up" \
-        else SCALE_OUT_PORTS
-    out.append(cls("link_copper", cluster.n_xpus * ports))
-    if cluster.n_xpus > SWITCH_RADIX:
-        # two-level clos: leaf->spine AOC runs, one per endpoint port
-        out.append(cls("link_aoc", cluster.n_xpus * ports))
-    out.append(cls("switch", _switch_count(cluster)))
-    if cluster.topology == "scale-out":
-        out.append(cls("nic", cluster.n_xpus))
+    out.extend(cluster.fabric.net_component_classes(cluster, cls))
     return [c for c in out if c.count > 0]
 
 
@@ -177,53 +135,26 @@ def component_inventory(cluster: Cluster,
 # fault-state -> FaultSet mapping
 # ---------------------------------------------------------------------------
 
-def _spread_mesh_links(cluster: Cluster, k: int) -> Tuple[int, ...]:
-    """Distribute k failed links over the mesh's active dims, longest dims
-    first, round-robin — the adversarial placement (breaking a NEW
-    dimension costs a fresh detour/relay penalty, and longer dims pay more
-    detour rounds), so the stationary model prices the worst case."""
-    dims = cluster.dims or ()
-    counts = [0] * len(dims)
-    order = sorted((i for i, d in enumerate(dims) if d > 1),
-                   key=lambda i: -dims[i])
-    if not order:
-        return tuple(counts)
-    caps = cluster.mesh_link_counts()
-    for j in range(k):
-        i = order[j % len(order)]
-        if counts[i] < caps[i]:
-            counts[i] += 1
-    return tuple(counts)
-
-
 def faultset_for_counts(cluster: Cluster,
                         counts: Dict[str, int]) -> FaultSet:
     """Map per-class failure counts onto the `FaultSet` the serving model
-    consumes, encoding each topology's blast radius:
+    consumes, encoding each topology's blast radius — the fabric's
+    `faultset_for_counts` hook (core/fabric.py):
 
-    meshes      link failures spread over dims (`_spread_mesh_links`);
+    meshes      link failures spread over dims (`_spread_mesh_links`,
+                longest dims first — the adversarial placement);
     scale-up    a severed XPU-to-leaf cable idles one of that XPU's rails,
                 and collectives synchronize on the slowest rank, so it
                 derates like a plane; switch/AOC failures likewise;
     scale-out   a severed XPU cable is NIC-equivalent (the node's only
                 path); a fabric-switch failure disconnects its whole
-                down-port span of XPUs (`_switch_blast_xpus`); leaf-spine
+                down-port span of XPUs (`switch_blast_xpus`); leaf-spine
                 AOC loss is absorbed by the non-blocking tree (a known
-                under-estimate, noted in docs/failure_model.md).
+                under-estimate, noted in docs/failure_model.md);
+    ocs         fiber / MEMS failures idle port planes, the scale-up rail
+                model over OCS_PORTS.
     """
-    k_link = counts.get("link_copper", 0) + counts.get("link_aoc", 0)
-    xpus = counts.get("xpu", 0)
-    planes = nics = 0
-    mesh: Tuple[int, ...] = ()
-    if cluster.topology in ("torus", "fullmesh"):
-        mesh = _spread_mesh_links(cluster, k_link)
-    elif cluster.topology == "scale-up":
-        planes = min(counts.get("switch", 0) + k_link, SCALE_UP_PORTS)
-    else:  # scale-out
-        nics = counts.get("nic", 0) + counts.get("link_copper", 0)
-        xpus += counts.get("switch", 0) * _switch_blast_xpus(cluster)
-    return FaultSet(mesh_links=mesh, switch_planes=planes, nics=nics,
-                    xpus=min(xpus, cluster.n_xpus))
+    return cluster.fabric.faultset_for_counts(cluster, counts)
 
 
 # ---------------------------------------------------------------------------

@@ -3,7 +3,10 @@
 Each algorithm maps (cluster size / topology dims, message size m) to the
 (rounds, dests, m_coeff) triple consumed by the alpha-beta model. `m` is the
 TOTAL payload each XPU contributes (paper convention: ScaleUp-P2P carries
-(N-1)/N * m past the NIC).
+(N-1)/N * m past the NIC). Which algorithms a topology gets to choose from
+(the paper-Table-2 menus) is owned by the fabric registry
+(`core/fabric.py`); this module holds only the per-algorithm cost
+primitives.
 
 Table 3 ground truth (asserted in tests/test_collectives.py):
   ScaleUp-P2P     N=64: 1ar +  63ad + (63/64) m·b     N=256: 1ar + 255ad + (255/256) m·b
@@ -23,7 +26,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Dict, Tuple
+from typing import Tuple
 
 
 @dataclass(frozen=True)
@@ -128,29 +131,6 @@ def ar_swing_torus(dims: Tuple[int, ...]) -> CollCost:
                     name="swing")
 
 
-# ---------------------------------------------------------------------------
-# per-topology algorithm menus (paper Table 2)
-# ---------------------------------------------------------------------------
-
-def a2a_menu(topology: str, n: int, dims: Tuple[int, ...]) -> Dict[str, CollCost]:
-    if topology in ("scale-up", "scale-out"):
-        return {"p2p": a2a_p2p(n), "bruck": a2a_bruck(n)}
-    if topology == "fullmesh":
-        return {"dor": a2a_fullmesh_dor(dims),
-                "oneshot": a2a_fullmesh_oneshot(dims)}
-    if topology == "torus":
-        return {"halfring": a2a_torus_halfring(dims),
-                "p2p": a2a_torus_p2p(dims)}
-    raise ValueError(topology)
-
-
-def ar_menu(topology: str, n: int, dims: Tuple[int, ...]) -> Dict[str, CollCost]:
-    if topology in ("scale-up", "scale-out"):
-        return {"ring": ar_ring(n), "recdouble": ar_recursive_doubling(n),
-                "rabenseifner": ar_rabenseifner(n)}
-    if topology == "torus":
-        return {"ring": ar_ring(n), "swing": ar_swing_torus(dims)}
-    if topology == "fullmesh":
-        # rings embed across mesh links; near-optimal aggregate bandwidth
-        return {"ring": ar_ring(n), "p2p": ar_rabenseifner(n)}
-    raise ValueError(topology)
+# The per-topology algorithm MENUS (paper Table 2) live with the fabric
+# classes in core/fabric.py (`Fabric.a2a_menu` / `Fabric.ar_menu`) — this
+# module stays a registry-free layer of pure cost primitives.

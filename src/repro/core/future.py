@@ -26,7 +26,8 @@ from repro.configs.base import ModelConfig
 from repro.core import optimizer
 from repro.core.hardware import XPUSpec, BLACKWELL, RUBIN
 from repro.core.optimizer import Scenario
-from repro.core.topology import Cluster, make_cluster
+from repro.core.topology import (Cluster, TOPOLOGIES, get_fabric,
+                                 make_cluster)
 
 
 @dataclass(frozen=True)
@@ -108,7 +109,10 @@ def generation_report(cfg: ModelConfig, scenario: Scenario, gen_name: str,
     grid = [provision * f for f in (1 / 8, 1 / 4, 1 / 2, 1.0, 2.0)]
     out = {"generation": gen_name, "provision": provision,
            "scenario": scenario.name, "topologies": {}}
-    for topo in ("scale-up", "torus", "fullmesh"):
+    # the grid sweeps fractions of the generation's SCALE-UP provision, so
+    # only the scale-up-provisioned static fabrics are comparable here
+    # (scale-out's own axis is the NIC; registry-derived, not hardcoded)
+    for topo in (t for t in TOPOLOGIES if not get_fabric(t).nic_provisioned):
         curve = throughput_vs_bandwidth(cfg, scenario, xpu, topo, n, grid,
                                         alpha_scale=alpha_scale)
         out["topologies"][topo] = {

@@ -11,13 +11,13 @@ no timing math of its own, so parity is inherited from the sweep.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Optional, Sequence
+from typing import List, Sequence
 
 from repro.configs.base import ModelConfig
 from repro.core import optimizer, tco
 from repro.core.hardware import XPUSpec
 from repro.core.optimizer import Scenario
-from repro.core.topology import make_cluster
+from repro.core.topology import TOPOLOGIES, make_cluster
 
 # the paper's bandwidth sweep grid, as fractions of the 1x provision
 BW_FRACTIONS = (1 / 9, 1 / 3, 2 / 3, 1.0, 2.0)
@@ -43,13 +43,14 @@ class ParetoPoint:
 
 def sweep_networks(cfg: ModelConfig, scenario: Scenario, xpu: XPUSpec,
                    *, sizes: Sequence[int] = (64, 256),
-                   topologies: Sequence[str] = ("scale-up", "scale-out",
-                                                "torus", "fullmesh"),
+                   topologies: Sequence[str] = TOPOLOGIES,
                    bw_fracs: Sequence[float] = BW_FRACTIONS,
                    opts: str = "dbo+sd", c: float = 1.0) -> List[ParetoPoint]:
     """All (topology, link bandwidth) points of one scenario, evaluated as
     one batched grid per cluster size (the sweep engine requires a uniform
-    device count per grid). Point order matches the seed's nested loops."""
+    device count per grid). Point order matches the seed's nested loops.
+    `topologies` defaults to the registry's static four; pass
+    `tuple(repro.core.fabric.FABRICS)` to rank the OCS fabric too."""
     from repro.core import api
 
     ops_by_size = {}
@@ -58,13 +59,12 @@ def sweep_networks(cfg: ModelConfig, scenario: Scenario, xpu: XPUSpec,
         for topo in topologies:
             for f in bw_fracs:
                 # each topology sweeps fractions of its own provision
-                # (scale-out: NIC-class fabric on top of the intra-node
-                # scale-up domain it always carries — see core.topology)
-                base_bw = (xpu.scale_out_bw if topo == "scale-out"
-                           else xpu.scale_up_bw)
+                # (`Fabric.default_link_bw`; scale-out: NIC-class fabric
+                # on top of the intra-node scale-up domain it always
+                # carries — see core.fabric)
                 keys.append((topo, f))
                 clusters.append(make_cluster(topo, n, xpu,
-                                             link_bw=base_bw * f))
+                                             link_bw_mult=f))
         grid = api.solve_grid(cfg, clusters, [scenario],
                               api.SearchSpec(opts=opts))
         ops_by_size[n] = {k: (cl, row[0].point)

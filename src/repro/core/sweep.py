@@ -1139,31 +1139,13 @@ def _sweep_chunked(clusters, cfg, scenarios, tp, pp, ep_r, dtype,
     return out
 
 
-def _pool_dims(n: int) -> Tuple[int, ...]:
-    """Most-cubic 3D factorization of a pool size (sub-pools of torus /
-    full-mesh clusters need explicit dims; DIMS_BY_SIZE only covers the
-    paper's whole-cluster sizes)."""
-    best = (n, 1, 1)
-    for a in range(1, n + 1):
-        if n % a:
-            continue
-        for b in range(a, n // a + 1):
-            if (n // a) % b:
-                continue
-            c = n // (a * b)
-            if c < b:
-                break
-            if max((c, b, a)) < max(best):
-                best = (c, b, a)
-    return best
-
-
 def _subcluster(cl: Cluster, n_sub: int) -> Cluster:
     """A pool carved out of `cl`: same XPU, per-XPU link bandwidth and
-    topology family, `n_sub` devices."""
-    dims = _pool_dims(n_sub) if cl.topology in ("torus", "fullmesh") else None
+    topology family, `n_sub` devices. Mesh fabrics re-factorize to the
+    most-cubic dims via the fabric's `pool_dims` hook (dims-free fabrics
+    return None)."""
     return Cluster(topology=cl.topology, n_xpus=n_sub, xpu=cl.xpu,
-                   link_bw=cl.link_bw, dims=dims)
+                   link_bw=cl.link_bw, dims=cl.fabric.pool_dims(n_sub))
 
 
 def _split_candidates(n: int, tp: int, fracs: Sequence[float]) -> List[int]:
@@ -1285,7 +1267,10 @@ def _sweep_disagg(clusters, cfg, scenarios, tp, pp, dtype, split_fracs,
                             backend="numpy",
                             load=_prefill_load(ptable, cfg, sc))[0])
                     t_p = pass_cache[ck]
-                    t_xfer = (ab.alpha0
+                    # latency term via the fabric hook: base alpha0
+                    # everywhere, plus the circuit re-match on the OCS
+                    # fabric (the KV handoff is its one phase switch)
+                    t_xfer = (cl_p.fabric.kv_handoff_alpha(cl_p)
                               + workload.kv_cache_bytes_per_request(cfg, L)
                               / (ab.link_utilization * cl.link_bw))
                     ttft = t_p + t_xfer
@@ -1318,19 +1303,18 @@ def degraded_subcluster(cl: Cluster, faults) -> Optional[Cluster]:
     XPU-count faults carve a survivor sub-cluster exactly like the
     disaggregated-prefill pools (`_subcluster` conventions: same XPU,
     per-XPU link bandwidth and topology family; meshes re-factorize to
-    the most-cubic dims via `_pool_dims`). Link / switch-plane faults stay
-    attached to the survivor fabric — the broken cables are still broken
-    after the pool shrinks."""
+    the most-cubic dims via the fabric's `pool_dims` hook). Link /
+    switch-plane faults stay attached to the survivor fabric — the broken
+    cables are still broken after the pool shrinks."""
     cl_f = cl.with_faults(faults)
     n_surv = cl_f.survivor_xpus()
     if n_surv < 1:
         return None
     if n_surv == cl.n_xpus:
         return cl_f
-    dims = (_pool_dims(n_surv) if cl.topology in ("torus", "fullmesh")
-            else None)
     return Cluster(topology=cl.topology, n_xpus=n_surv, xpu=cl.xpu,
-                   link_bw=cl.link_bw, dims=dims, faults=faults)
+                   link_bw=cl.link_bw, dims=cl.fabric.pool_dims(n_surv),
+                   faults=faults)
 
 
 def degraded_candidates(cfg: ModelConfig, cluster: Cluster, *,

@@ -5,8 +5,10 @@ Monthly TCO = amortized CapEx (3-year lifetime) + monthly OpEx.
 CapEx:
   - XPU: catalog price each.
   - Switch: linear in capacity = radix x per-port bandwidth (R^2=0.93 fit in
-    the paper); switchless topologies carry zero switch cost.
-  - Link: fixed cost per unit bandwidth per cable type; AOC = 6.7x copper.
+    the paper); switchless topologies carry zero switch cost. The OCS
+    fabric instead pays per MEMS port (bandwidth-independent).
+  - Link: fixed cost per unit bandwidth per cable type; AOC = 6.7x copper;
+    OCS transceiver-terminated fiber priced between the two.
 
 OpEx: TDP x electricity price x PUE (plus switch/link port power).
 
@@ -43,6 +45,18 @@ PUE = 1.3                          # paper cites LBNL AI-cluster PUE
 SWITCH_W_PER_GBPS = 0.025          # switch power scales with capacity
 NIC_W_PER_XPU = 25.0
 
+# OCS fabric pricing (docs/fabrics.md): a MEMS circuit-switch port costs
+# the same whatever bandwidth the light carries — the OCS thesis — so it
+# is priced PER PORT, not per GB/s; the per-GB/s cost sits in the
+# transceivers that terminate each fiber, between copper DACs and the
+# full AOC premium (the MEMS path replaces the electrical switch tiers,
+# so `switch_capacity_total` is 0 and these two lines are the whole
+# network bill). Port power is the MEMS mirror drive + monitoring, a few
+# W per port — far below a packet switch ASIC's per-port burn.
+OCS_PORT_USD = 300.0               # per MEMS port (bandwidth-independent)
+OCS_TRX_USD_PER_GBPS = 10.0        # optical transceiver, per GB/s
+OCS_W_PER_PORT = 1.5
+
 
 @dataclass(frozen=True)
 class TCOBreakdown:
@@ -69,15 +83,17 @@ def cluster_tco(cluster: Cluster) -> TCOBreakdown:
     xpu = cluster.xpu
 
     capex_xpu = n * xpu.cost_usd
-    capex_switch = (cluster.switch_capacity_total() / 1e9) * SWITCH_USD_PER_GBPS
+    capex_switch = (cluster.switch_capacity_total() / 1e9) * SWITCH_USD_PER_GBPS \
+        + cluster.ocs_port_count() * OCS_PORT_USD
     links = cluster.link_inventory()
     capex_link = (links.copper_gbps_total * COPPER_USD_PER_GBPS
-                  + links.aoc_gbps_total * COPPER_USD_PER_GBPS * AOC_MULT)
+                  + links.aoc_gbps_total * COPPER_USD_PER_GBPS * AOC_MULT
+                  + links.ocs_trx_gbps_total * OCS_TRX_USD_PER_GBPS)
 
     kwh_price = ELECTRICITY_USD_PER_KWH * PUE * HOURS_PER_MONTH / 1000.0
     energy_xpu = n * xpu.tdp_w * kwh_price
     net_w = (cluster.switch_capacity_total() / 1e9) * SWITCH_W_PER_GBPS \
-        + n * NIC_W_PER_XPU
+        + n * NIC_W_PER_XPU + cluster.ocs_port_count() * OCS_W_PER_PORT
     energy_net = net_w * kwh_price
 
     return TCOBreakdown(

@@ -1,122 +1,60 @@
-"""Cluster topologies: bandwidth provisioning, switch/link inventory (for
-TCO), and best-algorithm collective times (paper sections 2.2, 3.2.2, 3.4).
+"""Cluster facade over the pluggable fabric registry (`core/fabric.py`):
+bandwidth provisioning, switch/link inventory (for TCO), and
+best-algorithm collective times (paper sections 2.2, 3.2.2, 3.4).
 
-Four families (paper Fig. 2): scale-up / scale-out (non-blocking fat-tree),
-3D torus, 3D full-mesh. Torus/full-mesh dims: 4x4x4 (64) and 8x8x4 (256).
+Five registered fabrics: the paper's four static families (Fig. 2) —
+scale-up / scale-out (non-blocking fat-tree), 3D torus, 3D full-mesh
+(torus/full-mesh dims: 4x4x4 at 64 and 8x8x4 at 256) — plus the
+reconfigurable optical circuit-switched fabric (docs/fabrics.md).
+`TOPOLOGIES` enumerates the static four (what the paper's figures
+sweep); `repro.core.fabric.FABRICS` is the full registry and the single
+source of truth for names, menus, derates, and inventories. `Cluster`
+owns only the fabric-AGNOSTIC machinery: the alpha-beta regime choice
+(`_ab`), the FaultSet derate wrapper around `comm_spec`, the
+best-of-menu timers, and `describe`.
 
 Degraded fabrics: a `FaultSet` attached to a `Cluster` derates every
 collective placed through `comm_spec` — the topologies fail very
 differently (a mesh degrades gracefully via detours; a switched fabric
-concentrates failures into few high-blast-radius planes), and the derating
-formulas per topology live in `Cluster._fault_derate` (documented in
-docs/failure_model.md). A cluster with `faults=None` is byte-identical to
-the pre-fault model on every path.
+concentrates failures into few high-blast-radius planes), and the
+derating formulas live in each fabric's `fault_derate` (documented in
+docs/failure_model.md). A cluster with `faults=None` is byte-identical
+to the pre-fault model on every path.
 
 Expert-load skew never enters this layer: a skewed A2A is priced by
 scaling the per-op PAYLOAD handed to the alpha-beta menus (`m_bytes` x
 hot-rank load factor, `sweep.op_load_factors`) — the beta term grows with
 the hottest rank's ingress while the alpha terms (rounds, destinations)
 are topology properties and stay fixed, matching a symmetric collective
-that synchronizes on its slowest member. `comm_spec` and the menus below
+that synchronizes on its slowest member. `comm_spec` and the menus
 are skew-agnostic.
 """
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, Optional, Tuple
 
 from repro.core.alphabeta import AlphaBeta, CLUSTER, INTRA_NODE
 from repro.core import collectives as coll
+from repro.core.fabric import (DIMS_BY_SIZE, FABRICS, FaultSet, Fabric,
+                               LinkInventory, NODE_XPUS, SCALE_OUT_PORTS,
+                               SCALE_UP_PORTS, SWITCH_RADIX, XPUS_PER_RACK,
+                               _DEAD_FABRIC_FRAC, _strip_ones, _tp_subdims,
+                               get_fabric)
 from repro.core.hardware import XPUSpec
 
-TOPOLOGIES = ("scale-up", "scale-out", "torus", "fullmesh")
+__all__ = [
+    "TOPOLOGIES", "DIMS_BY_SIZE", "NODE_XPUS", "SWITCH_RADIX",
+    "SCALE_UP_PORTS", "SCALE_OUT_PORTS", "XPUS_PER_RACK",
+    "Cluster", "Fabric", "FaultSet", "LinkInventory", "get_fabric",
+    "make_cluster",
+]
 
-DIMS_BY_SIZE = {8: (2, 2, 2), 64: (4, 4, 4), 256: (8, 8, 4), 512: (8, 8, 8)}
-
-# XPUs per NVLink-class island inside a scale-out cluster (DGX-style node);
-# a TP domain that fits the island rides its scale-up switch, not the NIC
-NODE_XPUS = 8
-
-
-def _tp_subdims(dims: Tuple[int, ...],
-                tp: int) -> Optional[Tuple[int, ...]]:
-    """Greedy contiguous sub-mesh of `tp` devices inside `dims`: fill the
-    first dimension first (matching how DIMS_BY_SIZE orders the long axes).
-    Returns per-dim extents of the TP neighborhood, or None when `tp` has
-    no contiguous factorization (then placement falls back to the
-    whole-cluster menus)."""
-    sub = []
-    rem = tp
-    for d in dims:
-        t = math.gcd(rem, d)
-        sub.append(t)
-        rem //= t
-    if rem != 1:
-        return None
-    return tuple(sub)
-
-
-def _strip_ones(dims: Tuple[int, ...]) -> Tuple[int, ...]:
-    return tuple(d for d in dims if d > 1) or (1,)
-
-SWITCH_RADIX = 64
-SCALE_UP_PORTS = 16          # per XPU
-SCALE_OUT_PORTS = 1
-XPUS_PER_RACK = 64
-
-
-@dataclass(frozen=True)
-class LinkInventory:
-    copper_gbps_total: float = 0.0     # aggregate copper bandwidth (GB/s)
-    aoc_gbps_total: float = 0.0        # aggregate AOC bandwidth (GB/s)
-
-
-# bandwidth floor of a fully-failed fabric: keeps collective times finite
-# (astronomical, so any feasibility check rejects them) instead of inf/NaN
-_DEAD_FABRIC_FRAC = 1e-9
-
-
-@dataclass(frozen=True)
-class FaultSet:
-    """Failed components of one cluster — counts per class, not identities
-    (the model is symmetric across same-class components, and collectives
-    synchronize on the slowest rank, so the worst-case placement prices
-    every placement).
-
-    mesh_links     failed torus / full-mesh links per dimension (entries
-                   beyond the cluster's dims, or on switched fabrics, are
-                   ignored); a broken torus ring forces detour rounds, a
-                   lost full-mesh direct link forces a 2-hop relay over the
-                   (d-1) surviving links of its line
-    switch_planes  failed scale-up switch-plane rails (of the
-                   SCALE_UP_PORTS parallel planes each XPU stripes across)
-    nics           failed scale-out NICs — each takes its whole NODE_XPUS
-                   island node out of the serving pool
-    xpus           failed XPUs (any topology)
-
-    The zero FaultSet derates nothing; `Cluster(faults=None)` skips the
-    derating code path entirely (byte-identity of the healthy model).
-    """
-    mesh_links: Tuple[int, ...] = ()
-    switch_planes: int = 0
-    nics: int = 0
-    xpus: int = 0
-
-    def __post_init__(self):
-        if (any(f < 0 for f in self.mesh_links) or self.switch_planes < 0
-                or self.nics < 0 or self.xpus < 0):
-            raise ValueError(f"fault counts must be >= 0: {self}")
-        object.__setattr__(self, "mesh_links", tuple(self.mesh_links))
-
-    @property
-    def any(self) -> bool:
-        return bool(sum(self.mesh_links) or self.switch_planes
-                    or self.nics or self.xpus)
-
-    def link_at(self, i: int) -> int:
-        """Failed links in mesh dim `i` (0 beyond the recorded dims)."""
-        return self.mesh_links[i] if i < len(self.mesh_links) else 0
+# the paper's four STATIC fabrics, in registry order — what fig10/14/17
+# sweep; the reconfigurable OCS fabric is registered beside them and
+# enumerated via `fabric.FABRICS` where a figure wants all five
+TOPOLOGIES = tuple(name for name, f in FABRICS.items()
+                   if not f.reconfigurable)
 
 
 @dataclass(frozen=True)
@@ -129,7 +67,11 @@ class Cluster:
     faults: Optional[FaultSet] = None   # None = healthy (byte-identical)
 
     def __post_init__(self):
-        if self.topology in ("torus", "fullmesh") and self.dims is None:
+        # registry lookup IS the validation: a typo ("full-mesh") raises
+        # here naming the registered fabrics instead of silently pricing
+        # as a phantom fabric through the generic menus
+        fab = get_fabric(self.topology)
+        if fab.needs_dims and self.dims is None:
             if self.n_xpus not in DIMS_BY_SIZE:
                 raise ValueError(
                     f"no predefined {self.topology} dims for "
@@ -137,6 +79,12 @@ class Cluster:
                     f"{sorted(DIMS_BY_SIZE)} — pass dims=(a, b, c) "
                     "explicitly for other sizes")
             object.__setattr__(self, "dims", DIMS_BY_SIZE[self.n_xpus])
+
+    @property
+    def fabric(self) -> Fabric:
+        """The registered `Fabric` every topology-dependent hook
+        delegates to."""
+        return get_fabric(self.topology)
 
     # ------------- degraded fabric -------------
     def with_faults(self, faults: Optional[FaultSet]) -> "Cluster":
@@ -146,93 +94,21 @@ class Cluster:
                        faults=faults)
 
     def survivor_xpus(self) -> int:
-        """Devices still serving under `self.faults`: failed XPUs are out
-        everywhere; on scale-out each failed NIC additionally takes its
-        whole NODE_XPUS island node out (the node's only path into the
-        fabric)."""
-        if self.faults is None:
-            return self.n_xpus
-        lost = self.faults.xpus
-        if self.topology == "scale-out":
-            lost += self.faults.nics * NODE_XPUS
-        return max(self.n_xpus - lost, 0)
+        """Devices still serving under `self.faults` (fabric-specific:
+        e.g. on scale-out each failed NIC takes its whole island node
+        out)."""
+        return self.fabric.survivor_xpus(self)
 
     def mesh_link_counts(self) -> Tuple[int, ...]:
         """Physical link count per dimension of a torus / full-mesh
-        (0 for inactive dims and switched fabrics). Torus dim of extent d:
-        n/d rings x d links (degenerate d=2 'ring': one link per pair);
-        full-mesh dim: n/d lines x d(d-1)/2 direct links."""
-        if self.topology not in ("torus", "fullmesh") or not self.dims:
-            return ()
-        out = []
-        for d in self.dims:
-            if d <= 1:
-                out.append(0)
-            elif self.topology == "torus":
-                out.append(self.n_xpus if d > 2 else self.n_xpus // 2)
-            else:
-                out.append((self.n_xpus // d) * d * (d - 1) // 2)
-        return tuple(out)
+        (empty for non-mesh fabrics)."""
+        return self.fabric.mesh_link_counts(self)
 
     def _fault_derate(self) -> Tuple[float, float, float]:
         """(bandwidth factor, extra rounds, extra dests) the attached
-        FaultSet imposes on every collective placed through `comm_spec`
-        (docs/failure_model.md derives the formulas):
-
-        scale-up   a failed switch plane removes one of the SCALE_UP_PORTS
-                   parallel rails every XPU stripes across: bandwidth
-                   scales by surviving planes / planes, no extra latency
-                   (the rails are independent).
-        scale-out  NIC failures are node-count events (survivor_xpus), not
-                   fabric derates — the surviving nodes' non-blocking tree
-                   is unaffected.
-        torus      the first failed link of a dimension breaks a ring into
-                   a line: wrapped traffic detours the long way, folding
-                   over the surviving links (x1/2 efficiency), and ring
-                   phases pay ~d/2 detour rounds; further failures remove
-                   capacity linearly.
-        full-mesh  a lost direct link forces its pair onto a 2-hop relay
-                   across the (d-1) surviving links of the line — the
-                   rerouted traffic consumes 2x capacity (factor
-                   (L - 2f)/L per dim) and adds one store-and-forward
-                   relay round per affected dimension.
-
-        The factor applies to the whole fabric (collectives synchronize on
-        the slowest rank, so one degraded ring/plane gates every phase);
-        it is monotonically non-increasing — and rounds non-decreasing —
-        in every fault count, the invariant the degradation-monotonicity
-        property tests pin.
-        """
-        f = self.faults
-        if f is None or not f.any:
-            return 1.0, 0.0, 0.0
-        if self.topology == "scale-up":
-            frac = max(SCALE_UP_PORTS - f.switch_planes, 0) / SCALE_UP_PORTS
-            return max(frac, _DEAD_FABRIC_FRAC), 0.0, 0.0
-        if self.topology == "scale-out":
-            return 1.0, 0.0, 0.0
-        links = self.mesh_link_counts()
-        active = [i for i, d in enumerate(self.dims) if d > 1]
-        if not active:
-            return 1.0, 0.0, 0.0
-        fracs = []
-        extra_r = extra_d = 0.0
-        for i in active:
-            li = links[i]
-            fi = min(f.link_at(i), li)
-            if fi == 0:
-                fracs.append(1.0)
-                continue
-            if self.topology == "torus":
-                fracs.append(0.5 * (li - fi) / li)
-                extra_r += math.ceil(self.dims[i] / 2)
-                extra_d += math.ceil(self.dims[i] / 2)
-            else:
-                fracs.append(max(li - 2 * fi, 0) / li)
-                extra_r += 1.0
-                extra_d += 2.0
-        frac = sum(fracs) / len(fracs)
-        return max(frac, _DEAD_FABRIC_FRAC), extra_r, extra_d
+        FaultSet imposes — the fabric's formula
+        (docs/failure_model.md)."""
+        return self.fabric.fault_derate(self)
 
     # ------------- collectives -------------
     def _ab(self) -> AlphaBeta:
@@ -243,7 +119,7 @@ class Cluster:
         """(algorithm menu, bandwidth, AlphaBeta) of one collective PLACED
         under the hybrid (tp, pp, ep) mapping, derated by the attached
         `FaultSet` (identity when `faults` is None — the healthy placement
-        below is untouched). Both the scalar timers and the batched
+        is untouched). Both the scalar timers and the batched
         engine's (A, B) lowering consume this one spec, so degraded
         batched and scalar times agree exactly as healthy ones do."""
         menu, bw, ab = self._comm_spec_healthy(kind, group, tp, pp)
@@ -261,14 +137,16 @@ class Cluster:
     def _comm_spec_healthy(self, kind: str, group: int = 0, tp: int = 1,
                            pp: int = 1):
         """The healthy-fabric collective placement — the topology-aware
-        half of the parallelism search.
+        half of the parallelism search, owned by the fabric
+        (`Fabric.comm_spec_healthy`).
 
         kind 'ar' with group == tp is the TP all-reduce: it runs over the
         scale-up / mesh NEIGHBORHOOD (a tp-sized sub-mesh of torus /
-        full-mesh dims, the intra-node island of a scale-out cluster), so
-        it sees only the link bandwidth that points into that neighborhood
-        — the placement is the same contiguous block on every pipeline
-        stage, so it is pp-independent.
+        full-mesh dims, the intra-node island of a scale-out cluster, a
+        dedicated circuit ring on the OCS fabric), so it sees only the
+        link bandwidth that points into that neighborhood — the placement
+        is the same contiguous block on every pipeline stage, so it is
+        pp-independent.
         kind 'a2a' with group == ep < n is the expert dispatch/gather over
         the REMAINDER of the STAGE: the quotient of the stage's n/pp-device
         block by the TP neighborhood (stride-tp peers on meshes, with torus
@@ -282,78 +160,7 @@ class Cluster:
         tp <= 1, pp <= 1, group in (0, n): the seed whole-cluster
         placement, byte-identical to the pre-hybrid model.
         """
-        n_grp = group or self.n_xpus
-        ab = self._ab()
-        if kind == "pp_sendrecv":
-            hop = {"sendrecv": coll.pp_sendrecv()}
-            if self.topology == "scale-up":
-                return hop, self.link_bw, ab
-            if self.topology == "scale-out":
-                if self.n_xpus <= NODE_XPUS:
-                    # whole cluster inside one NVLink island: every
-                    # boundary rides the scale-up switch
-                    return hop, self.xpu.scale_up_bw, INTRA_NODE
-                # multi-island cluster: island-crossing stage boundaries
-                # exist at every pp (stages >= island: all of them; stages
-                # < island: the island-edge ones), and one menu prices all
-                # pp-1 hops — charge the NIC, the conservative bound
-                return hop, self.link_bw, CLUSTER
-            # mesh: the hop crosses the single link that leaves the stage
-            # block, one of the 2*ndim (torus) / sum(d-1) (full-mesh)
-            # links the per-XPU aggregate provision is spread across
-            active = [d for d in (self.dims or (self.n_xpus,)) if d > 1]
-            n_links = (2 * len(active) if self.topology == "torus"
-                       else sum(d - 1 for d in active))
-            return hop, self.link_bw / max(n_links, 1), ab
-        if kind == "a2a":
-            if tp * max(pp, 1) <= 1 or n_grp >= self.n_xpus:
-                return (coll.a2a_menu(self.topology, self.n_xpus, self.dims),
-                        self.link_bw, ab)
-            if self.topology in ("scale-up", "scale-out"):
-                # any ep subset of the switched fabric at full provision
-                return coll.a2a_menu(self.topology, n_grp, None), \
-                    self.link_bw, ab
-            stage = (_tp_subdims(self.dims, self.n_xpus // pp)
-                     if pp > 1 else self.dims)
-            sub = _tp_subdims(stage, tp) if stage is not None else None
-            if sub is None:
-                return (coll.a2a_menu(self.topology, self.n_xpus, self.dims),
-                        self.link_bw, ab)
-            qdims = tuple(d // t for d, t in zip(stage, sub))
-            menu = coll.a2a_menu(self.topology, n_grp, _strip_ones(qdims))
-            active = [i for i, d in enumerate(self.dims) if d > 1]
-            if self.topology == "fullmesh":
-                # stride-t peers in a full-mesh line are directly linked:
-                # (q-1) of the (d-1) links per dim stay usable
-                frac = (sum(qdims[i] - 1 for i in active)
-                        / sum(self.dims[i] - 1 for i in active))
-            else:
-                # torus: a stride-t ring hop crosses t physical links
-                frac = (sum(1.0 / sub[i] for i in active if qdims[i] > 1)
-                        / len(active))
-            return menu, self.link_bw * max(frac, 1e-9), ab
-        # all-reduce
-        if tp > 1 and n_grp == tp and n_grp < self.n_xpus:
-            if self.topology == "scale-out" and tp <= NODE_XPUS:
-                # TP inside the NVLink-class island: scale-up switching at
-                # the XPU's scale-up provision, intra-node latencies
-                return (coll.ar_menu("scale-up", n_grp, None),
-                        self.xpu.scale_up_bw, INTRA_NODE)
-            if self.topology in ("torus", "fullmesh"):
-                sub = _tp_subdims(self.dims, tp)
-                if sub is not None:
-                    sdims = _strip_ones(sub)
-                    menu = coll.ar_menu(self.topology, n_grp, sdims)
-                    active = [i for i, d in enumerate(self.dims) if d > 1]
-                    if self.topology == "fullmesh":
-                        frac = (sum(s - 1 for s in sub)
-                                / sum(self.dims[i] - 1 for i in active))
-                    else:
-                        frac = (len([s for s in sub if s > 1])
-                                / len(active))
-                    return menu, self.link_bw * max(frac, 1e-9), ab
-        menu = coll.ar_menu(self.topology, n_grp, self.dims)
-        return menu, self.link_bw, ab
+        return self.fabric.comm_spec_healthy(self, kind, group, tp, pp)
 
     def _best_time(self, kind: str, m_bytes: float, group: int, tp: int,
                    pp: int) -> float:
@@ -383,63 +190,26 @@ class Cluster:
 
     # ------------- inventory (for TCO) -------------
     def switch_capacity_total(self) -> float:
-        """Total switch capacity in B/s (radix x port bandwidth x count),
-        non-blocking fat-tree sized for per-XPU `link_bw`.
+        """Total packet-switch capacity in B/s (radix x port bandwidth x
+        count), non-blocking fat-tree sized for per-XPU `link_bw`;
+        switchless and circuit-switched fabrics carry none.
 
         Scale-out additionally carries its INTRA-NODE scale-up domain
         (8-XPU NVLink-class switching at the XPU's scale-up provision) —
         that is what a DGX-style server actually ships with, and omitting
         it would make scale-out spuriously cheap (paper section 3.4)."""
-        if self.topology in ("torus", "fullmesh"):
-            return 0.0
-        intra = 0.0
-        if self.topology == "scale-out":
-            intra = self.n_xpus * self.xpu.scale_up_bw
-        ports_per_xpu = SCALE_UP_PORTS if self.topology == "scale-up" else SCALE_OUT_PORTS
-        port_bw = self.link_bw / ports_per_xpu
-        endpoints = self.n_xpus * ports_per_xpu
-        if endpoints <= SWITCH_RADIX * ports_per_xpu and self.n_xpus <= SWITCH_RADIX:
-            # one-level: each XPU port rail goes to its own switch plane
-            n_switches = ports_per_xpu
-            return intra + n_switches * SWITCH_RADIX * port_bw
-        # two-level folded clos: leaf (half down/half up) + spine
-        down = SWITCH_RADIX // 2
-        n_leaf = math.ceil(endpoints / down)
-        n_spine = math.ceil(n_leaf * down / SWITCH_RADIX)
-        return intra + (n_leaf + n_spine) * SWITCH_RADIX * port_bw
+        return self.fabric.switch_capacity_total(self)
 
     def link_inventory(self) -> LinkInventory:
         """Aggregate link bandwidth by cable type. Intra-rack copper,
-        inter-rack AOC (64 XPUs/rack, paper section 3.4)."""
-        gb = 1e9
-        n_racks = math.ceil(self.n_xpus / XPUS_PER_RACK)
-        if self.topology in ("scale-up", "scale-out"):
-            # XPU->leaf links: intra-rack copper. Leaf->spine (two-level): AOC.
-            xpu_links_bw = self.n_xpus * self.link_bw
-            intra = (self.n_xpus * self.xpu.scale_up_bw
-                     if self.topology == "scale-out" else 0.0)
-            if self.n_xpus <= SWITCH_RADIX:
-                return LinkInventory(
-                    copper_gbps_total=(xpu_links_bw + intra) / gb)
-            up_bw = xpu_links_bw                     # non-blocking
-            return LinkInventory(
-                copper_gbps_total=(xpu_links_bw + intra) / gb,
-                aoc_gbps_total=up_bw / gb)
-        # switchless: every XPU's aggregate BW spread across its links;
-        # links within a rack are copper, cross-rack AOC.
-        total_bw = self.n_xpus * self.link_bw      # counts each link twice/2
-        if n_racks == 1:
-            return LinkInventory(copper_gbps_total=total_bw / gb)
-        # fraction of links that leave the rack (rough: last dim crosses)
-        if self.topology == "torus":
-            cross_frac = 1.0 / 3.0
-        else:
-            d = self.dims
-            links = sum(x - 1 for x in d)
-            cross_frac = (d[-1] - 1) / links
-        return LinkInventory(
-            copper_gbps_total=total_bw * (1 - cross_frac) / gb,
-            aoc_gbps_total=total_bw * cross_frac / gb)
+        inter-rack AOC (64 XPUs/rack, paper section 3.4); OCS fiber is
+        tracked separately (transceiver-terminated)."""
+        return self.fabric.link_inventory(self)
+
+    def ocs_port_count(self) -> int:
+        """Circuit-switch ports the cluster terminates (0 off the OCS
+        fabric); priced per port by `core.tco`."""
+        return self.fabric.ocs_port_count(self)
 
     def describe(self) -> Dict:
         out = {"topology": self.topology, "n": self.n_xpus,
@@ -453,10 +223,17 @@ class Cluster:
 
 
 def make_cluster(topology: str, n_xpus: int, xpu: XPUSpec,
-                 link_bw: Optional[float] = None) -> Cluster:
-    """link_bw defaults to the XPU's provisioned bandwidth: scale-out uses
-    the NIC bandwidth, all others the scale-up provision (paper section 3.2:
-    'fix the total per-XPU network bandwidth')."""
+                 link_bw: Optional[float] = None, *,
+                 link_bw_mult: Optional[float] = None) -> Cluster:
+    """link_bw defaults to the fabric's provision
+    (`Fabric.default_link_bw`): the NIC bandwidth on NIC-provisioned
+    fabrics, the scale-up provision elsewhere (paper section 3.2: 'fix
+    the total per-XPU network bandwidth'). `link_bw_mult` scales whatever
+    the previous rules produced — the bandwidth-derating sweeps
+    (fig12/fig17-style) say 'x of provision' without restating the
+    provision."""
     if link_bw is None:
-        link_bw = xpu.scale_out_bw if topology == "scale-out" else xpu.scale_up_bw
+        link_bw = get_fabric(topology).default_link_bw(xpu)
+    if link_bw_mult is not None:
+        link_bw = link_bw * link_bw_mult
     return Cluster(topology=topology, n_xpus=n_xpus, xpu=xpu, link_bw=link_bw)

@@ -1,0 +1,168 @@
+"""Fabric-registry conformance battery (parameterized over `FABRICS`).
+
+Every registered fabric — the paper's static four AND the OCS fabric,
+plus any future registration — must hold the cross-layer contracts the
+`Cluster` facade assumes. The battery enumerates the registry instead of
+naming topologies, so registering a new fabric automatically enrolls it:
+
+  1. registry lookup is the validation seam: unknown names raise a
+     `ValueError` naming every registered fabric,
+  2. scalar == batched timing parity at 1e-9 relative (the engine's
+     (A, B) lowering and the scalar timers consume the same
+     `comm_spec`),
+  3. numpy == jax backend parity at 1e-6 relative (the jitted lowering
+     consumes the same menus),
+  4. fault derating is monotone in the failure count: bandwidth factor
+     non-increasing, extra rounds/dests non-decreasing, survivors
+     non-increasing,
+  5. every TCO inventory hook is non-negative and every availability
+     component class has a positive count,
+  6. `describe()` round-trips back into an equal `Cluster`.
+"""
+from __future__ import annotations
+
+from dataclasses import replace
+
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.core import H100, Scenario, make_cluster
+from repro.core import optable, optimizer, sweep
+from repro.core.availability import component_inventory, faultset_for_counts
+from repro.core.fabric import FABRICS, get_fabric
+from repro.core.tco import cluster_tco
+from repro.core.topology import Cluster, TOPOLOGIES
+from repro.core.workload import ServingPoint
+
+ALL_FABRICS = tuple(FABRICS)
+N = 64
+BATCHES = np.array([1, 4, 64, 512, 4096, 32768])
+
+
+@pytest.fixture(scope="module")
+def dsv3_small():
+    return get_arch("deepseek-v3").replace(num_layers=8)
+
+
+# ------------------------------------------------------------ 1. registry
+
+def test_registry_enumerates_five_fabrics():
+    assert ALL_FABRICS == ("scale-up", "scale-out", "torus", "fullmesh",
+                           "ocs")
+    # TOPOLOGIES = the static (non-reconfigurable) subset, same order
+    assert TOPOLOGIES == ALL_FABRICS[:4]
+    for name in ALL_FABRICS:
+        assert get_fabric(name).name == name
+
+
+def test_unknown_topology_raises_naming_registered_fabrics():
+    # the classic typo: the registered name is "fullmesh"
+    with pytest.raises(ValueError, match="fullmesh"):
+        make_cluster("full-mesh", N, H100)
+    with pytest.raises(ValueError) as ei:
+        Cluster(topology="nvl72", n_xpus=N, xpu=H100, link_bw=450e9)
+    for name in ALL_FABRICS:
+        assert repr(name) in str(ei.value)
+
+
+# ---------------------------------------------- 2. scalar == batched 1e-9
+
+@pytest.mark.parametrize("topo", ALL_FABRICS)
+def test_scalar_batched_parity(dsv3_small, topo):
+    cl = make_cluster(topo, N, H100)
+    sc = Scenario(40.0, 512)
+    for tp in (1, 2, 8):
+        ep = N // tp
+        table = optable.op_table(dsv3_small, tp, ep, N, "fp8")
+        got = sweep.batched_tpot(table, [cl], BATCHES, [sc])[0, 0]
+        p0 = ServingPoint(batch_global=1, context=sc.context, tp=tp,
+                          ep=ep, n_devices=N)
+        want = np.array([
+            optimizer.tpot_at(dsv3_small, replace(p0, batch_global=int(b)),
+                              cl, dbo=False, sd=None)[0]
+            for b in BATCHES])
+        np.testing.assert_allclose(got, want, rtol=1e-9)
+
+
+# ------------------------------------------------- 3. numpy == jax 1e-6
+
+@pytest.mark.parametrize("topo", ALL_FABRICS)
+@pytest.mark.parametrize("dbo", [False, True])
+def test_backend_parity(dsv3_small, topo, dbo):
+    pytest.importorskip("jax")
+    table = optable.op_table(dsv3_small, 2, N // 4, N, "fp8", pp=2)
+    cl = make_cluster(topo, N, H100)
+    scs = [Scenario(25.0, 512), Scenario(60.0, 8192)]
+    ref, got = (sweep.GridEval(table, [cl], scs, BATCHES,
+                               backend=backend).tpot(dbo=dbo)
+                for backend in ("numpy", "jax"))
+    np.testing.assert_allclose(got, ref, rtol=1e-6)
+
+
+# --------------------------------------- 4. fault-derate monotonicity
+
+@pytest.mark.parametrize("topo", ALL_FABRICS)
+def test_fault_derate_monotone_in_link_failures(topo):
+    cl = make_cluster(topo, N, H100)
+    prev_factor, prev_rounds, prev_dests = 1.0, 0.0, 0.0
+    prev_surv = N
+    for k in range(5):
+        fs = faultset_for_counts(cl, {"link_copper": k, "link_aoc": k})
+        clf = cl.with_faults(fs)
+        factor, rounds, dests = clf._fault_derate()
+        assert 0.0 < factor <= prev_factor
+        assert rounds >= prev_rounds and dests >= prev_dests
+        surv = clf.survivor_xpus()
+        assert 0 <= surv <= prev_surv
+        prev_factor, prev_rounds, prev_dests = factor, rounds, dests
+        prev_surv = surv
+
+
+@pytest.mark.parametrize("topo", ALL_FABRICS)
+def test_survivors_monotone_in_xpu_failures(topo):
+    cl = make_cluster(topo, N, H100)
+    prev = N
+    for k in range(0, N + 8, 8):
+        surv = cl.with_faults(
+            faultset_for_counts(cl, {"xpu": k})).survivor_xpus()
+        assert 0 <= surv <= prev
+        prev = surv
+    assert prev == 0           # losing every XPU leaves no survivors
+
+
+# --------------------------------------------- 5. inventories >= 0
+
+@pytest.mark.parametrize("topo", ALL_FABRICS)
+def test_inventories_non_negative(topo):
+    cl = make_cluster(topo, N, H100)
+    assert cl.switch_capacity_total() >= 0.0
+    assert cl.ocs_port_count() >= 0
+    links = cl.link_inventory()
+    assert links.copper_gbps_total >= 0.0
+    assert links.aoc_gbps_total >= 0.0
+    assert links.ocs_trx_gbps_total >= 0.0
+    # something must carry the traffic: switch capacity or link bandwidth
+    assert (cl.switch_capacity_total() + links.copper_gbps_total
+            + links.aoc_gbps_total + links.ocs_trx_gbps_total) > 0.0
+    tco = cluster_tco(cl)
+    for part in (tco.monthly_xpu, tco.monthly_switch, tco.monthly_link,
+                 tco.monthly_energy_xpu, tco.monthly_energy_net):
+        assert part >= 0.0
+    assert tco.total() > 0.0
+    inv = component_inventory(cl)
+    assert any(c.name == "xpu" for c in inv)
+    for comp in inv:
+        assert comp.count > 0, comp
+
+
+# --------------------------------------------- 6. describe round-trip
+
+@pytest.mark.parametrize("topo", ALL_FABRICS)
+def test_describe_round_trip(topo):
+    cl = make_cluster(topo, N, H100)
+    d = cl.describe()
+    rebuilt = Cluster(topology=d["topology"], n_xpus=d["n"], xpu=H100,
+                      link_bw=d["link_bw_GBs"] * 1e9,
+                      dims=tuple(d["dims"]) if d["dims"] else None)
+    assert rebuilt == cl

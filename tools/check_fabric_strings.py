@@ -1,0 +1,80 @@
+"""Fabric-name literal checker (CI lint step).
+
+The fabric registry (`src/repro/core/fabric.py`) is the single source of
+truth for topology names: core code must enumerate `FABRICS` /
+`TOPOLOGIES` or take the name as data, never hard-code `"torus"` and
+friends — a hard-coded literal is exactly the per-topology dispatch the
+registry refactor removed, and it silently skips any fabric registered
+later.
+
+This checker walks every module under ``src/repro`` except the fabric
+module itself and fails on any string constant exactly equal to a
+registered fabric name (docstrings are exempt — prose may name
+topologies). Tests and benchmarks are out of scope: naming a topology is
+the point of a figure.
+
+Run: ``python tools/check_fabric_strings.py`` from the repo root
+(exit 1 listing ``file:line`` offenders).
+"""
+from __future__ import annotations
+
+import ast
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+SRC = ROOT / "src" / "repro"
+# the one module allowed to spell the names: it defines them
+ALLOWED = {SRC / "core" / "fabric.py"}
+
+
+def _fabric_names() -> set[str]:
+    sys.path.insert(0, str(ROOT / "src"))
+    from repro.core.fabric import FABRICS
+    return set(FABRICS)
+
+
+def _docstring_spans(tree: ast.AST) -> set[int]:
+    """Line numbers owned by docstrings (exempt from the check)."""
+    lines: set[int] = set()
+    for node in ast.walk(tree):
+        if not isinstance(node, (ast.Module, ast.ClassDef,
+                                 ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        body = getattr(node, "body", [])
+        if body and isinstance(body[0], ast.Expr) \
+                and isinstance(body[0].value, ast.Constant) \
+                and isinstance(body[0].value.value, str):
+            doc = body[0].value
+            lines.update(range(doc.lineno, doc.end_lineno + 1))
+    return lines
+
+
+def check_file(path: Path, names: set[str]) -> list[str]:
+    tree = ast.parse(path.read_text(), filename=str(path))
+    doc_lines = _docstring_spans(tree)
+    rel = path.relative_to(ROOT)
+    errs = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Constant) and node.value in names \
+                and node.lineno not in doc_lines:
+            errs.append(f"{rel}:{node.lineno}: fabric name "
+                        f"{node.value!r} hard-coded outside the registry "
+                        "(enumerate repro.core.fabric.FABRICS instead)")
+    return errs
+
+
+def main() -> int:
+    names = _fabric_names()
+    files = [p for p in sorted(SRC.rglob("*.py")) if p not in ALLOWED]
+    errs = [e for p in files for e in check_file(p, names)]
+    for e in errs:
+        print(f"check_fabric_strings: {e}", file=sys.stderr)
+    print(f"check_fabric_strings: {len(files)} modules, "
+          f"{len(names)} registered names, "
+          f"{'FAIL (%d literals)' % len(errs) if errs else 'clean'}")
+    return 1 if errs else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
